@@ -1,0 +1,34 @@
+"""Paper Fig. 2: BitBound pruned search fraction & speedup vs similarity
+cutoff — measured on the index AND predicted by the Gaussian model (Eq. 3)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import BitBoundFoldingEngine
+from repro.core import bitbound as bb
+from .common import K, emit, get_db, get_queries
+
+
+def run(n_db=60_000, n_queries=64):
+    db = get_db(n_db)
+    queries = get_queries(db, n_queries)
+    idx = bb.build_index(np.asarray(db))
+    rows = []
+    for cutoff in (0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9):
+        eng = BitBoundFoldingEngine(db, cutoff=cutoff, m=1)
+        eng.search(queries, K)
+        frac = eng.scanned(n_queries) / (n_queries * n_db)
+        model_frac = bb.expected_search_fraction(idx.mu, idx.sigma, cutoff)
+        rows.append({
+            "name": f"bitbound_Sc{cutoff}", "cutoff": cutoff,
+            "measured_fraction": round(frac, 4),
+            "measured_speedup": round(1.0 / max(frac, 1e-9), 2),
+            "gaussian_model_fraction": round(model_frac, 4),
+            "gaussian_model_speedup": round(1.0 / model_frac, 2),
+        })
+    emit("fig2_bitbound_speedup", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Shared benchmark helpers: data, oracle, timing, CSV output."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+# Bench scale: large enough for real trends, small enough for this container.
+N_DB = 60_000
+N_QUERIES = 64
+K = 20
+
+
+def get_db(n=N_DB, seed=0):
+    from repro.data.molecules import SyntheticConfig, synthetic_fingerprints
+    return synthetic_fingerprints(SyntheticConfig(n=n, seed=seed))
+
+
+def get_queries(db, n=N_QUERIES, seed=1):
+    from repro.data.molecules import queries_from_db
+    return queries_from_db(db, n, seed=seed)
+
+
+def brute_truth(db, queries, k=K):
+    """Exact top-k via the fused kernel engine (itself validated vs ref)."""
+    from repro.kernels import ref
+    q = jnp.asarray(queries)
+    d = jnp.asarray(db)
+    # chunk queries to bound memory
+    ids_all, vals_all = [], []
+    for i in range(0, q.shape[0], 16):
+        ids, vals = ref.tanimoto_topk_ref(q[i:i + 16], d, k)
+        ids_all.append(np.asarray(ids))
+        vals_all.append(np.asarray(vals))
+    return np.concatenate(ids_all), np.concatenate(vals_all)
+
+
+def timeit(fn, *args, repeats=3, warmup=1):
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or \
+            isinstance(out, (jax.Array, tuple, list)) else None
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def emit(name: str, rows: list[dict]):
+    """Print rows as `name,us_per_call,derived` CSV lines + save JSON."""
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(rows, indent=1))
+    for r in rows:
+        us = r.get("us_per_call", "")
+        derived = {k: v for k, v in r.items() if k not in ("name", "us_per_call")}
+        print(f"{r.get('name', name)},{us},{json.dumps(derived, sort_keys=True)}")

@@ -1,0 +1,57 @@
+"""Paper §IV-A/§V-B headline: single-engine compounds/s throughput of the
+fused scan+top-k kernel, plus the distributed (sharded) engine scaling story
+via the collective-cost model (wire bytes per query independent of DB size).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BruteForceEngine
+from repro.kernels import ops
+from .common import emit, get_db, get_queries, timeit
+
+HBM_BW = 819e9
+PAPER_ENGINE_CPS = 450e6      # 450 M compounds/s per FPGA engine
+PAPER_ENGINE_BW = 57.6e9
+
+
+def run(n_db=60_000, n_queries=8):
+    db = get_db(n_db)
+    queries = get_queries(db, n_queries)
+    rows = []
+
+    # host wall-clock of the fused kernel (interpret mode — correctness path)
+    qj, dj = jnp.asarray(queries), jnp.asarray(db)
+    dt = timeit(lambda: ops.tanimoto_topk(qj, dj, k=20), repeats=2)
+    cps_host = n_queries * n_db / dt
+    # TPU projection: kernel streams 128 B/compound (32 u32 words) once
+    cps_tpu = HBM_BW / 128
+    rows.append({
+        "name": "fused_engine_throughput",
+        "us_per_call": round(dt / n_queries * 1e6, 1),
+        "host_compounds_per_s": round(cps_host / 1e6, 2),
+        "tpu_v5e_projected_compounds_per_s_1chip": round(cps_tpu / 1e6, 1),
+        "paper_fpga_engine_compounds_per_s": round(PAPER_ENGINE_CPS / 1e6, 1),
+        "projected_vs_paper_engine": round(cps_tpu / PAPER_ENGINE_CPS, 2),
+        "bw_ratio_vs_paper_engine": round(HBM_BW / PAPER_ENGINE_BW, 2),
+    })
+
+    # distributed merge cost model: bytes on the wire per query for the
+    # hierarchical top-k merge (k=20 entries x 8 B x gather width)
+    for chips, axes in ((16, "data"), (256, "data"), (512, "pod x data")):
+        wire = 20 * 8 * chips  # all_gather of per-shard top-k
+        rows.append({
+            "name": f"sharded_merge_{chips}chips",
+            "axes": axes,
+            "wire_bytes_per_query": wire,
+            "merge_time_us_at_50GBps": round(wire / 50e9 * 1e6, 3),
+            "scan_time_us_per_chip_1p9M_db": round(
+                1_941_405 / chips * 128 / HBM_BW * 1e6, 1),
+        })
+    emit("engine_throughput", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Paper Figs. 6/7 + §V-B: exhaustive engine throughput.
+
+* wall-clock QPS of the fused engine on this host (CPU, interpret-mode
+  Pallas → jnp streaming path) vs folding level and cutoff;
+* *projected* TPU-v5e throughput from the roofline: the fused kernel is
+  memory-bound (DESIGN.md §2), so QPS ≈ HBM_bw / bytes_per_query — the
+  analogue of the paper's 57.6 GB/s → 450 Mcpd/s engine accounting.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import BitBoundFoldingEngine, BruteForceEngine
+from repro.core import bitbound as bb
+from .common import K, emit, get_db, get_queries, timeit
+
+HBM_BW = 819e9           # TPU v5e per chip
+FPGA_ENGINE_BW = 57.6e9  # paper, per engine
+
+
+def projected_qps(n_db: int, words: int, scan_fraction: float = 1.0,
+                  bw: float = HBM_BW) -> float:
+    bytes_per_query = n_db * scan_fraction * words * 4
+    return bw / bytes_per_query
+
+
+def run(n_db=60_000, n_queries=32):
+    db = get_db(n_db)
+    queries = get_queries(db, n_queries)
+    rows = []
+
+    eng = BruteForceEngine(db)
+    dt = timeit(lambda: eng.search(queries, K))
+    qps = n_queries / dt
+    rows.append({
+        "name": "bruteforce", "us_per_call": round(dt / n_queries * 1e6, 1),
+        "host_qps": round(qps, 1),
+        "host_compounds_per_s": round(qps * n_db / 1e6, 1),
+        "tpu_projected_qps_1chip": round(projected_qps(1_941_405, 32), 1),
+        "fpga_paper_qps": 1638 / 7,   # per engine
+    })
+
+    for m in (1, 2, 4, 8):
+        for cutoff in (0.6, 0.8):
+            eng = BitBoundFoldingEngine(db, cutoff=cutoff, m=m)
+            dt = timeit(lambda: eng.search(queries, K), repeats=2)
+            frac = eng.scanned(n_queries) / (n_queries * n_db)
+            qps = n_queries / dt
+            rows.append({
+                "name": f"bitbound_fold_m{m}_Sc{cutoff}",
+                "us_per_call": round(dt / n_queries * 1e6, 1),
+                "host_qps": round(qps, 1),
+                "scan_fraction": round(frac, 4),
+                # folded scan reads W/m words over the pruned range + rescore
+                "tpu_projected_qps_1chip": round(projected_qps(
+                    1_941_405, 32 / m, frac), 1),
+            })
+    emit("fig7_exhaustive_qps", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

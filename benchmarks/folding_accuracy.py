@@ -1,0 +1,30 @@
+"""Paper Table I: Top-20 accuracy vs folding level m, schemes 1 and 2."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import BitBoundFoldingEngine, recall_at_k
+from .common import K, brute_truth, emit, get_db, get_queries
+
+
+def run(n_db=20_000, n_queries=48):
+    db = get_db(n_db)
+    queries = get_queries(db, n_queries)
+    _, true_vals = brute_truth(db, queries, K)
+    true_ids, _ = brute_truth(db, queries, K)
+    rows = []
+    for m in (1, 2, 4, 8, 16, 32):
+        row = {"name": f"folding_m{m}", "m": m}
+        for scheme in (1, 2):
+            eng = BitBoundFoldingEngine(db, cutoff=0.0, m=m, scheme=scheme)
+            ids, _ = eng.search(queries, K)
+            row[f"accuracy_scheme{scheme}"] = round(recall_at_k(ids, true_ids), 4)
+        from repro.core.folding import kr1_for
+        row["kr1_over_k"] = kr1_for(K, m) // K
+        rows.append(row)
+    emit("table1_folding_accuracy", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

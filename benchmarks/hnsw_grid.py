@@ -1,0 +1,34 @@
+"""Paper Figs. 8/9: HNSW QPS vs recall over the (M, ef) grid."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import HNSWEngine, recall_at_k
+from repro.core import hnsw as hn
+from .common import K, brute_truth, emit, get_db, get_queries, timeit
+
+
+def run(n_db=8_000, n_queries=32, ms=(5, 10, 20), efs=(20, 60, 120, 200)):
+    db = get_db(n_db, seed=7)
+    queries = get_queries(db, n_queries, seed=8)
+    true_ids, _ = brute_truth(db, queries, K)
+    rows = []
+    for m in ms:
+        index = hn.build_hnsw(np.asarray(db), m=m, ef_construction=100, seed=0)
+        eng = HNSWEngine(db, index=index)
+        for ef in efs:
+            dt = timeit(lambda: eng.search(queries, K, ef=ef), repeats=2)
+            ids, _ = eng.search(queries, K, ef=ef)
+            rows.append({
+                "name": f"hnsw_m{m}_ef{ef}", "m": m, "ef": ef,
+                "us_per_call": round(dt / n_queries * 1e6, 1),
+                "host_qps": round(n_queries / dt, 1),
+                "recall": round(recall_at_k(ids, true_ids), 4),
+                "avg_neighbour_evals": eng.scanned(n_queries) // n_queries,
+            })
+    emit("fig8_hnsw_grid", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

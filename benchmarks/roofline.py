@@ -1,0 +1,129 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh)
+from the dry-run artifacts in experiments/dryrun/.
+
+Terms (seconds per step, per the harness formulas, v5e constants):
+  compute    = HLO_FLOPs_per_device / 197e12            (bf16 MXU peak)
+  memory     = HBM_bytes_per_device / 819e9
+  collective = collective_bytes_per_device / 50e9       (per-link ICI)
+
+Methodology notes (details in EXPERIMENTS.md §Roofline):
+* HLO_FLOPs is the *loop-aware* dot-FLOP count (launch/hlo_analysis.py):
+  XLA's cost_analysis counts while bodies once, so layer scans / microbatch
+  scans / chunk scans are re-weighted by their trip counts. Elementwise
+  FLOPs are excluded (≪1% for these shapes).
+* HBM bytes uses max(cost_analysis bytes, analytic floor). The analytic
+  floor is parameter + optimizer + KV-cache traffic: train ≈ 28 B/param
+  (bf16 param read ×3 passes + f32 grad w + m/v rw + param rw), decode ≈
+  2 B/param + cache r/w, prefill ≈ 2 B/param + cache write.
+* MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (fwd-only),
+  N from the abstract param tree (exact), MoE active-expert adjusted.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+OUT = Path(__file__).resolve().parent.parent / "experiments" / "roofline.json"
+
+
+def param_counts(arch: str):
+    """(N_total, N_active) from the abstract param tree (no allocation)."""
+    import jax
+    from repro import models
+    from repro.configs import get_arch
+    cfg = get_arch(arch)
+    vals, _ = models.abstract_params(cfg)
+    flat = jax.tree.flatten_with_path(vals)[0]
+    total = active = 0
+    for path, leaf in flat:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if cfg.moe and "ffn" in keys and any(k in ("gate", "up", "down") for k in keys):
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(arch: str, shape: dict) -> float:
+    from repro.configs import SHAPES_BY_NAME
+    sh = SHAPES_BY_NAME[shape["shape"]]
+    n_total, n_active = param_counts(arch)
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n_active * tokens
+    if sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * sh.global_batch      # decode: one token per seq
+
+
+def analytic_hbm_floor(arch: str, rec: dict, chips: int) -> float:
+    from repro.configs import SHAPES_BY_NAME
+    n_total, _ = param_counts(arch)
+    sh = SHAPES_BY_NAME[rec["shape"]]
+    if sh.kind == "train":
+        return 28.0 * n_total / chips
+    cache = rec["memory"]["output_bytes"] + rec["memory"]["argument_bytes"]
+    return 2.0 * n_total / chips + cache
+
+
+def analyse_cell(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    flops_dev = rec["loop_aware"]["dot_flops"]
+    coll_dev = rec["loop_aware"]["collective_bytes_total"]
+    hbm_dev = max(rec.get("bytes_accessed", 0.0),
+                  analytic_hbm_floor(rec["arch"], rec, chips))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = hbm_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    bound = max((t_compute, "compute"), (t_memory, "memory"),
+                (t_coll, "collective"))[1]
+    mf = model_flops(rec["arch"], rec)
+    t_ideal = mf / chips / PEAK_FLOPS
+    t_bound = max(t_compute, t_memory, t_coll)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "pod2" if rec.get("multi_pod") else "pod1",
+        "chips": chips, "tag": rec.get("tag", ""),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "bound": bound,
+        "model_flops": mf,
+        "hlo_flops_total": flops_dev * chips,
+        "useful_flops_ratio": mf / max(flops_dev * chips, 1.0),
+        "roofline_fraction": t_ideal / max(t_bound, 1e-12),
+        "hbm_fits": rec["memory"]["temp_bytes"] + rec["memory"]["argument_bytes"] < 16e9,
+    }
+
+
+def run(pattern: str = "*.json", tag: str = ""):
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob(pattern)):
+        rec = json.loads(f.read_text())
+        if "skipped" in rec or "error" in rec:
+            continue
+        if (rec.get("tag") or "") != tag:
+            continue
+        rows.append(analyse_cell(rec))
+    rows.sort(key=lambda r: r["roofline_fraction"])
+    OUT.write_text(json.dumps(rows, indent=1))
+    print(f"{'arch':22s} {'shape':12s} {'mesh':5s} {'bound':10s} "
+          f"{'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} {'roofline%':>9s} {'useful%':>8s} fits")
+    for r in rows:
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:5s} {r['bound']:10s} "
+              f"{r['t_compute_s']:9.4f} {r['t_memory_s']:9.4f} "
+              f"{r['t_collective_s']:9.4f} {100*r['roofline_fraction']:8.1f}% "
+              f"{100*min(r['useful_flops_ratio'],9.99):7.1f}% {r['hbm_fits']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

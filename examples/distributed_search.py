@@ -1,0 +1,43 @@
+"""Distributed similarity-search serving (the paper's engine as a service):
+shard a fingerprint DB over a device mesh, fan queries out, merge top-k
+hierarchically — run with multiple host devices to see real sharding:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/distributed_search.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import make_sharded_search, shard_database
+from repro.data.molecules import (SyntheticConfig, queries_from_db,
+                                  synthetic_fingerprints)
+from repro.kernels import ref
+from repro.launch.mesh import make_local_mesh
+
+
+def main():
+    n_dev = len(jax.devices())
+    mesh = make_local_mesh()
+    print(f"devices: {n_dev}, mesh axes: {mesh.axis_names}, "
+          f"shape: {dict(mesh.shape)}")
+
+    db = synthetic_fingerprints(SyntheticConfig(n=40_000, seed=0))
+    queries = jnp.asarray(queries_from_db(db, 32))
+
+    with mesh:
+        db_s, cnt_s, n_valid = shard_database(mesh, db)
+        print(f"DB sharded: {db_s.shape[0]} rows over {n_dev} devices "
+              f"({db_s.sharding.spec})")
+        search, _, _ = make_sharded_search(mesh, db_s.shape[0], k=20)
+        vals, ids = search(queries, db_s, cnt_s)
+
+    _, expect = ref.tanimoto_topk_ref(queries, jnp.asarray(db), 20)
+    ok = np.allclose(np.asarray(vals), np.asarray(expect), rtol=1e-6)
+    print(f"hierarchical merge == single-device oracle: {ok}")
+    print(f"sample result (query 0): ids {np.asarray(ids)[0, :5]} "
+          f"sims {np.round(np.asarray(vals)[0, :5], 3)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Assigned architecture pool (``--arch <id>``) + the paper's own config."""
+from .base import (  # noqa: F401
+    ArchConfig, MoEConfig, ShapeSpec, SHAPES, SHAPES_BY_NAME,
+    SUBQUADRATIC, cell_is_runnable,
+)
+from .phi3_medium_14b import CONFIG as phi3_medium_14b
+from .mistral_nemo_12b import CONFIG as mistral_nemo_12b
+from .granite_3_2b import CONFIG as granite_3_2b
+from .qwen1_5_4b import CONFIG as qwen1_5_4b
+from .jamba_v0_1_52b import CONFIG as jamba_v0_1_52b
+from .whisper_medium import CONFIG as whisper_medium
+from .xlstm_350m import CONFIG as xlstm_350m
+from .olmoe_1b_7b import CONFIG as olmoe_1b_7b
+from .dbrx_132b import CONFIG as dbrx_132b
+from .internvl2_26b import CONFIG as internvl2_26b
+from .paper import PaperSearchConfig, CHEMBL_LIKE  # noqa: F401
+
+ARCHS = {
+    c.name: c for c in (
+        phi3_medium_14b, mistral_nemo_12b, granite_3_2b, qwen1_5_4b,
+        jamba_v0_1_52b, whisper_medium, xlstm_350m, olmoe_1b_7b,
+        dbrx_132b, internvl2_26b,
+    )
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,120 @@
+"""Architecture configuration schema for the assigned model pool."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25   # capacity dispatch (train); decode is exact
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    moe: MoEConfig | None = None
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+
+    # hybrid (jamba): repeating unit of `unit_len` layers, attention at
+    # `attn_position`, MoE on every `moe_every`-th layer of the unit
+    unit_len: int = 1
+    attn_position: int = 0
+    moe_every: int = 0             # 0 -> no per-unit MoE pattern (all or none)
+
+    # mamba
+    mamba_d_state: int = 16
+    mamba_expand: int = 2
+    mamba_conv: int = 4
+
+    # xlstm
+    xlstm_pattern: str = ""        # e.g. "sm" = alternate sLSTM / mLSTM
+
+    # enc-dec (whisper): n_layers counts each stack
+    enc_dec: bool = False
+    n_audio_frames: int = 1500     # encoder input length (stub frontend)
+
+    # vlm: number of prepended patch embeddings (stub frontend)
+    n_patches: int = 0
+
+    # attention window for long-context (0 = full causal)
+    attn_window: int = 0
+
+    # serving
+    max_seq: int = 32_768
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded to a multiple of 128 (TPU lane alignment + TP
+        divisibility — Megatron-style padded vocab). Loss masks the pad."""
+        return ((self.vocab + 127) // 128) * 128
+
+    def with_(self, **kw) -> "ArchConfig":
+        return replace(self, **kw)
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw = dict(
+            n_layers=max(2, self.unit_len),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+            head_dim=16,
+            n_audio_frames=8 if self.enc_dec else self.n_audio_frames,
+            n_patches=4 if self.n_patches else 0,
+            max_seq=64,
+            attn_window=min(self.attn_window, 32) if self.attn_window else 0,
+        )
+        if self.moe:
+            # ample capacity: reduced-config smoke/consistency tests are exact
+            kw["moe"] = MoEConfig(n_experts=4, top_k=min(2, self.moe.top_k),
+                                  capacity_factor=8.0)
+        if self.family == "hybrid":
+            kw["n_layers"] = self.unit_len  # one full pattern unit
+        if self.family == "ssm":
+            kw["n_layers"] = 2
+        return self.with_(**kw)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str                      # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES = (
+    ShapeSpec("train_4k", 4_096, 256, "train"),
+    ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    ShapeSpec("long_500k", 524_288, 1, "decode"),
+)
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+# archs allowed to run long_500k (sub-quadratic sequence mixing)
+SUBQUADRATIC = {"jamba-v0.1-52b", "xlstm-350m"}
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return False, "full quadratic attention at 524k context — skipped per harness rules"
+    return True, ""

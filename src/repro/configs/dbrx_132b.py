@@ -1,0 +1,18 @@
+"""dbrx-132b [moe] — hf:databricks/dbrx-base (unverified tier).
+
+40L, d_model 6144, 48 q heads / 8 kv heads, d_ff 10752 (per expert),
+vocab 100352. MoE: 16 experts, top-4 (fine-grained).
+"""
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab=100352,
+    moe=MoEConfig(n_experts=16, top_k=4),
+)

@@ -1,0 +1,19 @@
+"""internvl2-26b [vlm] — arXiv:2404.16821 (hf tier).
+
+Backbone only (InternLM2-20B-class): 48L, d_model 6144, 48 q heads / 8 kv
+heads, d_ff 16384, vocab 92553. InternViT frontend is a STUB — input_specs
+provides precomputed patch embeddings (B, n_patches, d_model).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=92553,
+    n_patches=256,
+)

@@ -1,0 +1,29 @@
+"""jamba-v0.1-52b [hybrid] — arXiv:2403.19887 (hf tier).
+
+32L, d_model 4096, 32 q heads / 8 kv heads, d_ff 14336, vocab 65536.
+Mamba+attention 1:7 interleave (attention at position 4 of each 8-layer
+unit, as in the released model), MoE 16 experts top-2 on every other layer.
+At 524k context the attention layers run windowed (sliding 8192) — the
+documented sub-quadratic path for the long_500k shape (DESIGN.md).
+"""
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=65536,
+    moe=MoEConfig(n_experts=16, top_k=2),
+    unit_len=8,
+    attn_position=4,
+    moe_every=2,
+    mamba_d_state=16,
+    mamba_expand=2,
+    mamba_conv=4,
+    attn_window=8192,
+    max_seq=524_288,
+)

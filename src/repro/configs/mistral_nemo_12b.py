@@ -1,0 +1,20 @@
+"""mistral-nemo-12b [dense] — hf:mistralai/Mistral-Nemo-Base-2407 (hf tier).
+
+40L, d_model 5120, 32 q heads / 8 kv heads, d_ff 14336, vocab 131072.
+128k context; head_dim is 128 (not d_model/n_heads=160).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mistral-nemo-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=131072,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    max_seq=131_072,
+)

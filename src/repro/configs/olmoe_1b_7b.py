@@ -1,0 +1,18 @@
+"""olmoe-1b-7b [moe] — arXiv:2409.02060 (hf tier).
+
+16L, d_model 2048, 16 heads (MHA), d_ff 1024 (per expert), vocab 50304.
+MoE: 64 experts, top-8.
+"""
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,
+    vocab=50304,
+    moe=MoEConfig(n_experts=64, top_k=8),
+)

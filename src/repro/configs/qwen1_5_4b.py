@@ -1,0 +1,17 @@
+"""qwen1.5-4b [dense] — hf:Qwen/Qwen1.5 family (hf tier).
+
+40L, d_model 2560, 20 heads (MHA: kv=20), d_ff 6912, vocab 151936. QKV bias.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=6912,
+    vocab=151936,
+    qkv_bias=True,
+)

@@ -1,0 +1,22 @@
+"""whisper-medium [audio] — arXiv:2212.04356 (unverified tier).
+
+24L encoder + 24L decoder, d_model 1024, 16 heads (MHA), d_ff 4096,
+vocab 51865. Enc-dec with cross attention; learned positions (no RoPE);
+conv frontend is a STUB — input_specs provides precomputed frame embeddings
+(B, 1500, d_model), per the harness rules.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=51865,
+    enc_dec=True,
+    n_audio_frames=1500,
+    max_seq=32_768,   # sized for the decode_32k cell's learned-position table
+)

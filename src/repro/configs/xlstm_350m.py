@@ -1,0 +1,20 @@
+"""xlstm-350m [ssm] — arXiv:2405.04517 (unverified tier).
+
+24L, d_model 1024, 4 heads, d_ff=0 (xLSTM blocks carry their own up/down
+projections), vocab 50304. Alternating sLSTM / mLSTM blocks. Recurrent —
+runs the long_500k shape.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    xlstm_pattern="sm",
+    max_seq=524_288,
+)

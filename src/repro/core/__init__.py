@@ -1,0 +1,9 @@
+"""Core library: the paper's contribution (Tanimoto KNN engines) in JAX."""
+from .fingerprints import (  # noqa: F401
+    pack_bits, unpack_bits, popcount, tanimoto, tanimoto_scores,
+    batched_tanimoto_scores, n_words, DEFAULT_LEN,
+)
+from .engine import (  # noqa: F401
+    BruteForceEngine, BitBoundFoldingEngine, HNSWEngine, recall_at_k,
+)
+from . import bitbound, folding, hnsw, topk  # noqa: F401

@@ -1,0 +1,94 @@
+"""BitBound pruning (Swamidass & Baldi) — Eq. 2 of the paper.
+
+The database is sorted by popcount once at index-build time. For a query with
+popcount ``a`` and similarity cutoff ``Sc``, only candidates whose popcount
+``b`` satisfies
+
+    a * Sc  <=  b  <=  a / Sc                                   (Eq. 2)
+
+can have Tanimoto(query, cand) >= Sc (because S <= min(a,b)/max(a,b)).
+The contiguous popcount-sorted range is located with two searchsorted ops and
+the scan is restricted to it.  The paper models the pruned fraction with a
+Gaussian fit of the popcount distribution (Eq. 3) — reproduced in
+``gaussian_model`` / ``expected_speedup`` and benchmarked in
+``benchmarks/bitbound_speedup.py`` (Fig. 2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fingerprints import popcount
+
+
+@dataclass
+class BitBoundIndex:
+    """Popcount-sorted fingerprint database."""
+    db: jax.Array            # (N, W) uint32, sorted by popcount ascending
+    counts: jax.Array        # (N,) int32 popcounts, ascending
+    order: jax.Array         # (N,) int32 — original index of each sorted row
+    # Gaussian fit of the popcount distribution (paper Eq. 3)
+    mu: float
+    sigma: float
+
+    @property
+    def n(self) -> int:
+        return self.db.shape[0]
+
+
+def build_index(db: jax.Array) -> BitBoundIndex:
+    counts = np.asarray(popcount(db))
+    order = np.argsort(counts, kind="stable").astype(np.int32)
+    db_sorted = jnp.asarray(np.asarray(db)[order])
+    counts_sorted = jnp.asarray(counts[order].astype(np.int32))
+    return BitBoundIndex(db=db_sorted, counts=counts_sorted,
+                         order=jnp.asarray(order),
+                         mu=float(counts.mean()), sigma=float(counts.std()))
+
+
+def bound_range(index: BitBoundIndex, query_count: jax.Array, cutoff: float):
+    """Eq. 2 candidate range [lo, hi) in the popcount-sorted database."""
+    a = query_count.astype(jnp.float32)
+    lo_cnt = jnp.ceil(a * cutoff)
+    hi_cnt = jnp.floor(a / jnp.maximum(cutoff, 1e-6))
+    lo = jnp.searchsorted(index.counts, lo_cnt.astype(jnp.int32), side="left")
+    hi = jnp.searchsorted(index.counts, hi_cnt.astype(jnp.int32), side="right")
+    return lo, hi
+
+
+def aligned_range(lo, hi, tile: int, n: int):
+    """Round the candidate range outward to tile boundaries (the engine scans
+    whole HBM tiles; partial tiles are masked inside the kernel)."""
+    lo_t = (lo // tile) * tile
+    hi_t = jnp.minimum(((hi + tile - 1) // tile) * tile, n)
+    return lo_t, hi_t
+
+
+# --- analytical model (paper Fig. 2) ---------------------------------------
+
+def gaussian_model(x: np.ndarray, mu: float, sigma: float) -> np.ndarray:
+    """Paper Eq. 3 — popcount density model."""
+    return np.exp(-((x - mu) ** 2) / (2 * sigma**2)) / np.sqrt(2 * np.pi * sigma**2)
+
+
+def expected_search_fraction(mu: float, sigma: float, cutoff: float,
+                             grid: int = 4096, max_bits: int = 1024) -> float:
+    """Expected fraction of the DB scanned per query under the Gaussian model:
+    E_a~N [ Phi(a/Sc) - Phi(a*Sc) ].  Speedup = 1 / fraction (Fig. 2d)."""
+    from math import erf, sqrt
+
+    def phi(x):
+        return 0.5 * (1.0 + erf((x - mu) / (sigma * sqrt(2.0))))
+
+    xs = np.linspace(max(0.0, mu - 5 * sigma), min(max_bits, mu + 5 * sigma), grid)
+    dens = gaussian_model(xs, mu, sigma)
+    dens /= dens.sum()
+    frac = sum(d * (phi(a / max(cutoff, 1e-6)) - phi(a * cutoff)) for a, d in zip(xs, dens))
+    return float(max(min(frac, 1.0), 1e-9))
+
+
+def expected_speedup(mu: float, sigma: float, cutoff: float) -> float:
+    return 1.0 / expected_search_fraction(mu, sigma, cutoff)

@@ -1,0 +1,85 @@
+"""Packed binary molecular fingerprints and Tanimoto similarity.
+
+Fingerprints are L-bit binary vectors (paper: L=1024, Morgan radius-2).
+We store them packed little-endian into ``uint32`` words, shape (..., L//32),
+so a database of N molecules is an ``(N, 32)`` uint32 array for L=1024.
+All similarity math runs on packed words via ``lax.population_count`` —
+the TPU-native analogue of the paper's BitCnt LUT tree (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+DEFAULT_LEN = 1024  # paper: 1024-bit Morgan fingerprint
+
+
+def n_words(length: int = DEFAULT_LEN) -> int:
+    if length % WORD_BITS != 0:
+        raise ValueError(f"fingerprint length {length} must be a multiple of {WORD_BITS}")
+    return length // WORD_BITS
+
+
+def pack_bits(bits: np.ndarray) -> np.ndarray:
+    """Pack a (..., L) 0/1 array into (..., L//32) uint32 words (little-endian)."""
+    bits = np.asarray(bits, dtype=np.uint8)
+    L = bits.shape[-1]
+    w = n_words(L)
+    shaped = bits.reshape(*bits.shape[:-1], w, WORD_BITS).astype(np.uint32)
+    weights = (np.uint32(1) << np.arange(WORD_BITS, dtype=np.uint32))
+    return (shaped * weights).sum(axis=-1, dtype=np.uint32)
+
+
+def unpack_bits(words: np.ndarray, length: int | None = None) -> np.ndarray:
+    """Inverse of :func:`pack_bits` -> (..., L) uint8."""
+    words = np.asarray(words, dtype=np.uint32)
+    L = length or words.shape[-1] * WORD_BITS
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    bits = (words[..., :, None] >> shifts) & np.uint32(1)
+    return bits.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS)[..., :L].astype(np.uint8)
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    """Number of set bits per fingerprint: (..., W) uint32 -> (...,) int32."""
+    per_word = jax.lax.population_count(words)
+    return jnp.sum(per_word.astype(jnp.int32), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def tanimoto(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Tanimoto similarity between packed fingerprints (broadcasting).
+
+    a: (..., W) uint32, b: (..., W) uint32 -> (...,) float32 in [0, 1].
+    S = |A&B| / |A|B| = c / (cnt_a + cnt_b - c).  Empty/empty pairs -> 0.
+    """
+    inter = popcount(a & b)
+    union = popcount(a) + popcount(b) - inter
+    return jnp.where(union > 0, inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
+
+
+def tanimoto_scores(query: jax.Array, db: jax.Array, db_popcount: jax.Array | None = None) -> jax.Array:
+    """Scores of one packed query (W,) against a packed DB (N, W) -> (N,) f32.
+
+    ``db_popcount`` may be precomputed (the paper stores DB bit counts once —
+    the BitCnt stage runs per query only on the query itself).
+    """
+    inter = popcount(query[None, :] & db)
+    q_cnt = popcount(query)
+    d_cnt = popcount(db) if db_popcount is None else db_popcount
+    union = q_cnt + d_cnt - inter
+    return jnp.where(union > 0, inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
+
+
+def batched_tanimoto_scores(queries: jax.Array, db: jax.Array,
+                            db_popcount: jax.Array | None = None) -> jax.Array:
+    """(Q, W) x (N, W) -> (Q, N) f32 score matrix (brute-force reference)."""
+    if db_popcount is None:
+        db_popcount = popcount(db)
+    q_cnt = popcount(queries)
+    inter = popcount(queries[:, None, :] & db[None, :, :])
+    union = q_cnt[:, None] + db_popcount[None, :] - inter
+    return jnp.where(union > 0, inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)

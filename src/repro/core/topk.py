@@ -1,0 +1,103 @@
+"""Top-k primitives: streaming tile merge and sorted-array priority queue.
+
+Two structures from the paper (DESIGN.md §2):
+
+* ``streaming_topk`` — the top-K *merge sort* unit of the exhaustive engine:
+  the score stream is consumed tile by tile; each tile's local top-k is merged
+  into a running top-k so the full score array never exists in memory. This is
+  the pure-JAX model of the fused Pallas kernel in ``kernels/tanimoto_topk``.
+
+* ``PriorityQueue`` — fixed-shape sorted-array priority queue, the TPU
+  analogue of the paper's register-array PQ (even/odd compare-and-swap,
+  initiation interval 1). Insert is a vectorised compare-and-shift across
+  lanes: O(1) sequential depth, constant shapes (no data-dependent sizes).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+def merge_topk(scores_a, idx_a, scores_b, idx_b, k: int):
+    """Merge two (descending) top-k candidate sets into one of size k."""
+    s = jnp.concatenate([scores_a, scores_b])
+    i = jnp.concatenate([idx_a, idx_b])
+    top_s, pos = jax.lax.top_k(s, k)
+    return top_s, i[pos]
+
+
+def streaming_topk(scores: jax.Array, k: int, tile: int = 2048):
+    """Running top-k over a score stream of shape (N,), tiled like the engine.
+
+    Returns (values desc, indices). Pads N up to a tile multiple with -inf.
+    """
+    n = scores.shape[0]
+    n_pad = (-n) % tile
+    scores_p = jnp.pad(scores, (0, n_pad), constant_values=-jnp.inf)
+    n_tiles = scores_p.shape[0] // tile
+    init = (jnp.full((k,), NEG_INF), jnp.full((k,), -1, dtype=jnp.int32))
+
+    def body(carry, t):
+        run_s, run_i = carry
+        tile_s = jax.lax.dynamic_slice(scores_p, (t * tile,), (tile,))
+        tile_i = t * tile + jnp.arange(tile, dtype=jnp.int32)
+        run_s, run_i = merge_topk(run_s, run_i, tile_s, tile_i, k)
+        return (run_s, run_i), None
+
+    (vals, idxs), _ = jax.lax.scan(body, init, jnp.arange(n_tiles))
+    return vals, idxs
+
+
+class PQ(NamedTuple):
+    """Fixed-capacity priority queue state. ``scores`` sorted; invalid = sentinel."""
+    scores: jax.Array   # (cap,) f32
+    payload: jax.Array  # (cap,) int32
+    size: jax.Array     # () int32
+
+
+def pq_make(cap: int, max_heap: bool) -> PQ:
+    """max_heap=True keeps the *largest* entries sorted descending (results set M);
+    max_heap=False keeps the *smallest* sorted ascending (not used for similarity,
+    provided for distance metrics)."""
+    fill = NEG_INF if max_heap else jnp.float32(jnp.inf)
+    return PQ(jnp.full((cap,), fill), jnp.full((cap,), -1, dtype=jnp.int32),
+              jnp.int32(0))
+
+
+def pq_insert_max(pq: PQ, score: jax.Array, payload: jax.Array) -> PQ:
+    """Insert into a descending-sorted max queue (register-array style).
+
+    Vectorised compare-and-shift: find insertion position, shift the tail by
+    one lane, write. When full, the smallest entry falls off the end — which
+    is exactly the paper's bounded result set M behaviour.
+    """
+    cap = pq.scores.shape[0]
+    pos = jnp.sum((pq.scores >= score).astype(jnp.int32))  # first index with smaller score
+    lane = jnp.arange(cap)
+    shifted_s = jnp.where(lane > pos, jnp.roll(pq.scores, 1), pq.scores)
+    shifted_p = jnp.where(lane > pos, jnp.roll(pq.payload, 1), pq.payload)
+    new_s = jnp.where(lane == pos, score, shifted_s)
+    new_p = jnp.where(lane == pos, payload, shifted_p)
+    dropped = pos >= cap  # score worse than everything in a full queue
+    new_s = jnp.where(dropped, pq.scores, new_s)
+    new_p = jnp.where(dropped, pq.payload, new_p)
+    size = jnp.where(dropped, pq.size, jnp.minimum(pq.size + 1, cap))
+    return PQ(new_s, new_p, size)
+
+
+def pq_pop_max(pq: PQ):
+    """Pop the best (largest score) entry; returns (score, payload, new_pq)."""
+    s0, p0 = pq.scores[0], pq.payload[0]
+    new_s = jnp.concatenate([pq.scores[1:], jnp.array([NEG_INF])])
+    new_p = jnp.concatenate([pq.payload[1:], jnp.array([-1], dtype=jnp.int32)])
+    return s0, p0, PQ(new_s, new_p, jnp.maximum(pq.size - 1, 0))
+
+
+def pq_worst_max(pq: PQ) -> jax.Array:
+    """Score of the worst *valid* entry (or -inf when not full)."""
+    cap = pq.scores.shape[0]
+    return jnp.where(pq.size >= cap, pq.scores[cap - 1], NEG_INF)

@@ -1,0 +1,1 @@
+from .molecules import synthetic_fingerprints, SyntheticConfig  # noqa: F401

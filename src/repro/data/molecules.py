@@ -1,0 +1,84 @@
+"""Synthetic ChEMBL-like fingerprint generator (DESIGN.md §4).
+
+ChEMBL 27.1 + RDKit are unavailable offline; the paper itself models the
+database popcount distribution as Gaussian (Eq. 3). We generate 1024-bit
+prints whose popcount ~ N(mu=62, sigma=22) (clipped), with *scaffold
+structure*: molecules are drawn from clusters, each cluster sharing a base
+bit pattern with per-molecule mutations. This keeps nearest-neighbour
+structure realistic (without clusters, i.i.d. prints make every search
+algorithm look artificially good/bad).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.fingerprints import pack_bits
+
+
+@dataclass(frozen=True)
+class SyntheticConfig:
+    n: int = 100_000
+    length: int = 1024
+    mu: float = 62.0          # ChEMBL Morgan-1024 mean popcount (paper Eq. 3 fit)
+    sigma: float = 22.0
+    n_scaffolds: int = 0      # 0 -> n // 50
+    scaffold_keep: float = 0.7  # fraction of bits inherited from the scaffold
+    bit_skew: float = 0.0     # optional zipf-ish exponent of the per-bit
+    #   frequency distribution (0 = uniform, like hash-based Morgan bits).
+    #   NOTE on paper Table I: the paper measures strided folding (scheme 1)
+    #   beating adjacent folding (scheme 2) on real ChEMBL prints. That gap
+    #   depends on RDKit's actual bit-layout correlations, which no synthetic
+    #   layout reproduces faithfully: under uniform bits the two schemes are
+    #   statistically identical (verified), and under popularity-sorted
+    #   layouts scheme 2 can even win. We reproduce the scheme-independent
+    #   claims (accuracy vs m trend, two-stage rescore recovery) and document
+    #   this as a data-fidelity gap — see EXPERIMENTS.md §Table I.
+    seed: int = 0
+
+
+def _bit_probs(cfg) -> np.ndarray:
+    L = cfg.length
+    if cfg.bit_skew <= 0:
+        return np.full(L, 1.0 / L)
+    p = 1.0 / np.power(np.arange(L) + 8.0, cfg.bit_skew)
+    return p / p.sum()
+
+
+def synthetic_fingerprints(cfg: SyntheticConfig) -> np.ndarray:
+    """Returns packed (n, length//32) uint32 fingerprints."""
+    rng = np.random.default_rng(cfg.seed)
+    n_scaf = cfg.n_scaffolds or max(cfg.n // 50, 1)
+    L = cfg.length
+    probs = _bit_probs(cfg)
+
+    # scaffold base patterns: popcount drawn from the Gaussian model,
+    # bit positions drawn from the skewed frequency law
+    scaf_counts = np.clip(rng.normal(cfg.mu, cfg.sigma, n_scaf), 8, L // 4).astype(np.int64)
+    scaffolds = np.zeros((n_scaf, L), dtype=np.uint8)
+    for i, c in enumerate(scaf_counts):
+        scaffolds[i, rng.choice(L, size=c, replace=False, p=probs)] = 1
+
+    assign = rng.integers(0, n_scaf, size=cfg.n)
+    base = scaffolds[assign]
+
+    # per-molecule: keep `scaffold_keep` of scaffold bits, add fresh feature bits
+    keep_mask = rng.random((cfg.n, L)) < cfg.scaffold_keep
+    bits = (base & keep_mask).astype(np.uint8)
+    target = np.clip(rng.normal(cfg.mu, cfg.sigma, cfg.n), 8, L // 4).astype(np.int64)
+    deficit = np.maximum(target - bits.sum(axis=1, dtype=np.int64), 0).astype(np.int64)
+    # add extra bits, frequency-weighted (vectorised: weighted random scores,
+    # take the top-deficit new bits per row)
+    noise = (rng.random((cfg.n, L)) ** (1.0 / np.maximum(probs * L, 1e-9))) * (1 - bits)
+    thresh = -np.sort(-noise, axis=1)[np.arange(cfg.n), np.minimum(deficit, L - 1)]
+    bits |= (noise > thresh[:, None]).astype(np.uint8)
+    return pack_bits(bits)
+
+
+def queries_from_db(db: np.ndarray, n_queries: int, seed: int = 1) -> np.ndarray:
+    """Paper-style query set: random database members (self-hit included in
+    ground truth, as in the ChEMBL benchmarks)."""
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(db.shape[0], size=n_queries, replace=False)
+    return np.asarray(db)[idx]

@@ -1,0 +1,4 @@
+from .compression import (  # noqa: F401
+    quantize_int8, dequantize_int8, ef_compress_grads, EFState, ef_init,
+    quantized_psum,
+)

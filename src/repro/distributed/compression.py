@@ -1,0 +1,77 @@
+"""Gradient compression for the DP all-reduce path.
+
+Two pieces:
+
+* ``quantized_psum`` — a shard_map collective: per-tensor int8 blockwise
+  quantise -> all_gather of (q, scale) -> dequantise + sum. This is the
+  transport-level primitive (4x fewer bytes on the wire than f32 psum; 2x
+  vs bf16) and is what the sharded search merge and the explicit-DP training
+  path use.
+* ``ef_compress_grads`` — error-feedback quantisation of the gradient tree
+  inside the pjit train step: g_hat = Q(g + e); e' = (g + e) - g_hat. The
+  numerics of compressed communication (what affects convergence) are exact;
+  the wire-byte saving is accounted analytically in the roofline because
+  XLA owns the collective schedule under pjit (DESIGN.md §6, noted honestly
+  in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(x: jax.Array, block: int = 256):
+    """Blockwise symmetric int8 quantisation. Returns (q int8, scales f32)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0], n
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, n: int, shape, dtype):
+    deq = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    return deq.reshape(shape).astype(dtype)
+
+
+class EFState(NamedTuple):
+    error: dict   # residual tree, f32, sharded like params
+
+
+def ef_init(params) -> EFState:
+    return EFState(error=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def ef_compress_grads(grads, ef: EFState, block: int = 256):
+    """Error-feedback int8 quantise/dequantise of a gradient tree."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s, n = quantize_int8(target, block)
+        g_hat = dequantize_int8(q, s, n, g.shape, jnp.float32)
+        return g_hat, target - g_hat
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef.error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_g, EFState(error=new_e)
+
+
+def quantized_psum(x: jax.Array, axis_name: str, block: int = 256):
+    """int8-compressed psum inside shard_map: quantise locally, all_gather
+    the compact representation, dequantise + reduce. Wire bytes ≈ 1/4 of a
+    f32 psum (+ scale overhead)."""
+    q, s, n = quantize_int8(x, block)
+    qs = jax.lax.all_gather(q, axis_name)          # (D, blocks, block) int8
+    ss = jax.lax.all_gather(s, axis_name)          # (D, blocks)
+    deq = qs.astype(jnp.float32) * ss[..., None]
+    total = jnp.sum(deq, axis=0).reshape(-1)[:n]
+    return total.reshape(x.shape).astype(x.dtype)

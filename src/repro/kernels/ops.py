@@ -1,0 +1,128 @@
+"""Jit'd public wrappers around the Pallas kernels (padding, tiling policy)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.fingerprints import popcount
+from . import tanimoto_topk as ktk
+
+# Interpret mode on CPU (this container); on TPU backends the kernels compile
+# through Mosaic.
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_tile(n: int, tile_n: int | None) -> int:
+    if tile_n is not None:
+        return tile_n
+    # keep (tile, 32) u32 tile ~<= 256 KiB of VMEM and lane-aligned
+    return min(ktk.DEFAULT_TILE_N, max(128, 1 << (max(n - 1, 1)).bit_length() - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_n"))
+def _tanimoto_topk_impl(queries, db, db_cnt, k: int, tile_n: int):
+    n = db.shape[0]
+    pad = (-n) % tile_n
+    db_p = jnp.pad(db, ((0, pad), (0, 0)))
+    cnt_p = jnp.pad(db_cnt, (0, pad))
+    return ktk.fused_tanimoto_topk(queries, db_p, cnt_p, k=k, n_valid=n,
+                                   tile_n=tile_n, interpret=_interpret())
+
+
+def tanimoto_topk(queries: jax.Array, db: jax.Array, k: int,
+                  db_popcount: jax.Array | None = None,
+                  tile_n: int | None = None):
+    """Fused on-the-fly exhaustive KNN: (Q, W) x (N, W) -> ids, vals (Q, k)."""
+    queries = jnp.asarray(queries)
+    db = jnp.asarray(db)
+    if db_popcount is None:
+        db_popcount = popcount(db)
+    tile = min(_pick_tile(db.shape[0], tile_n), db.shape[0] if db.shape[0] >= 128 else 128)
+    ids, vals = _tanimoto_topk_impl(queries, db, db_popcount, k, tile)
+    return ids, vals
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_tiles", "tile_n", "n_valid", "cutoff"))
+def _bitbound_topk_impl(queries, db_sorted, cnt_sorted, counts_i32,
+                        k: int, max_tiles: int, tile_n: int, n_valid: int,
+                        cutoff: float):
+    # Eq.2 window per query, in tile units
+    a = jnp.sum(jax.lax.population_count(queries).astype(jnp.int32), -1).astype(jnp.float32)
+    lo_cnt = jnp.ceil(a * cutoff).astype(jnp.int32)
+    hi_cnt = jnp.floor(a / max(cutoff, 1e-6)).astype(jnp.int32)
+    lo = jnp.searchsorted(counts_i32, lo_cnt, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(counts_i32, hi_cnt, side="right").astype(jnp.int32)
+    lo_tile = lo // tile_n
+    hi_tile = (hi + tile_n - 1) // tile_n
+    n_tiles_q = jnp.clip(hi_tile - lo_tile, 0, max_tiles)
+    ids_sorted, vals = ktk.bitbound_fused_topk(
+        queries, db_sorted, cnt_sorted, lo_tile, n_tiles_q, k=k,
+        max_tiles=max_tiles, n_valid=n_valid, cutoff=cutoff, tile_n=tile_n,
+        interpret=_interpret())
+    return ids_sorted, vals
+
+
+def bitbound_topk(queries: jax.Array, db_sorted: jax.Array,
+                  counts_sorted: jax.Array, k: int, cutoff: float,
+                  max_tiles: int | None = None, tile_n: int | None = None):
+    """BitBound-windowed fused KNN over a popcount-sorted DB.
+
+    Returns ids into the *sorted* database (caller maps through the
+    BitBoundIndex order), and similarity values. Entries that fall outside
+    every window come back as id -1 / val -inf."""
+    queries = jnp.asarray(queries)
+    db_sorted = jnp.asarray(db_sorted)
+    counts_sorted = jnp.asarray(counts_sorted, dtype=jnp.int32)
+    n = db_sorted.shape[0]
+    tile = _pick_tile(n, tile_n)
+    pad = (-n) % tile
+    db_p = jnp.pad(db_sorted, ((0, pad), (0, 0)))
+    cnt_p = jnp.pad(counts_sorted, (0, pad))
+    total_tiles = db_p.shape[0] // tile
+    if max_tiles is None:
+        max_tiles = total_tiles
+    max_tiles = min(max_tiles, total_tiles)
+    ids_sorted, vals = _bitbound_topk_impl(
+        queries, db_p, cnt_p, counts_sorted, k, max_tiles, tile, n, float(cutoff))
+    ids_sorted = jnp.where(jnp.isfinite(vals), ids_sorted, -1)
+    return ids_sorted, vals
+
+
+def bitcount(words: jax.Array) -> jax.Array:
+    return ktk.bitcount(jnp.asarray(words), interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("k", "qb", "tile_n"))
+def _blocked_topk_impl(queries, db, db_cnt, k: int, qb: int, tile_n: int):
+    n = db.shape[0]
+    pad = (-n) % tile_n
+    db_p = jnp.pad(db, ((0, pad), (0, 0)))
+    cnt_p = jnp.pad(db_cnt, (0, pad))
+    return ktk.blocked_tanimoto_topk(queries, db_p, cnt_p, k=k, n_valid=n,
+                                     qb=qb, tile_n=tile_n,
+                                     interpret=_interpret())
+
+
+def tanimoto_topk_blocked(queries: jax.Array, db: jax.Array, k: int,
+                          db_popcount: jax.Array | None = None, qb: int = 8,
+                          tile_n: int | None = None):
+    """Query-blocked fused engine: one DB sweep serves qb queries
+    (bytes/query divided by qb — see kernel docstring). Pads Q up to a qb
+    multiple."""
+    queries = jnp.asarray(queries)
+    db = jnp.asarray(db)
+    if db_popcount is None:
+        db_popcount = popcount(db)
+    qn = queries.shape[0]
+    qpad = (-qn) % qb
+    if qpad:
+        queries = jnp.concatenate(
+            [queries, jnp.zeros((qpad, queries.shape[1]), queries.dtype)])
+    tile = min(_pick_tile(db.shape[0], tile_n),
+               db.shape[0] if db.shape[0] >= 128 else 128)
+    ids, vals = _blocked_topk_impl(queries, db, db_popcount, k, qb, tile)
+    return ids[:qn], vals[:qn]

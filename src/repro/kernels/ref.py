@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.fingerprints import popcount
+
+
+def tanimoto_scores_ref(queries: jax.Array, db: jax.Array,
+                        db_popcount: jax.Array | None = None) -> jax.Array:
+    """(Q, W) x (N, W) -> (Q, N) float32 Tanimoto score matrix."""
+    if db_popcount is None:
+        db_popcount = popcount(db)
+    q_cnt = popcount(queries)
+    inter = jnp.sum(
+        jax.lax.population_count(queries[:, None, :] & db[None, :, :]).astype(jnp.int32),
+        axis=-1)
+    union = q_cnt[:, None] + db_popcount[None, :] - inter
+    return jnp.where(union > 0,
+                     inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
+
+
+def tanimoto_topk_ref(queries: jax.Array, db: jax.Array, k: int,
+                      db_popcount: jax.Array | None = None):
+    """Oracle for the fused on-the-fly engine: exact top-k ids + scores."""
+    scores = tanimoto_scores_ref(queries, db, db_popcount)
+    vals, ids = jax.lax.top_k(scores, k)
+    return ids.astype(jnp.int32), vals
+
+
+def bitbound_topk_ref(queries: jax.Array, db_sorted: jax.Array,
+                      counts_sorted: jax.Array, k: int, cutoff: float):
+    """Oracle for the BitBound-pruned kernel: scores outside the Eq.2 popcount
+    window are treated as -inf (never returned)."""
+    scores = tanimoto_scores_ref(queries, db_sorted, counts_sorted)
+    a = popcount(queries).astype(jnp.float32)
+    lo = jnp.ceil(a * cutoff)[:, None]
+    hi = jnp.floor(a / max(cutoff, 1e-6))[:, None]
+    c = counts_sorted[None, :].astype(jnp.float32)
+    in_range = jnp.logical_and(c >= lo, c <= hi)
+    scores = jnp.where(in_range, scores, -jnp.inf)
+    vals, ids = jax.lax.top_k(scores, k)
+    ids = jnp.where(jnp.isfinite(vals), ids, -1)
+    return ids.astype(jnp.int32), vals
+
+
+def bitcount_ref(words: jax.Array) -> jax.Array:
+    return popcount(words)

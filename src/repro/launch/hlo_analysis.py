@@ -1,0 +1,205 @@
+"""Loop-aware HLO analysis for the roofline.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of
+trip count (verified empirically — a scan of length 1 and length 10 report
+the same flops). Since every model here scans over layer units (and Mamba
+scans over sequence chunks inside that), raw cost_analysis under-counts both
+FLOPs and collective bytes by ~n_layers. This module parses the compiled
+HLO text, builds the computation call graph, extracts while-loop trip counts
+from their condition computations, and accumulates:
+
+* dot FLOPs   = 2 * prod(result dims) * prod(lhs contracting dims), weighted
+  by the product of enclosing loop trip counts;
+* collective bytes (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute), result-shape bytes weighted the same way;
+* per-kind collective op counts.
+
+Elementwise / reduce flops are ignored (≪ dot flops for these models); noted
+in EXPERIMENTS.md §Roofline methodology.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(
+    r"(pred|s4|u4|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128|f8e4m3fn|f8e5m2)"
+    r"\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def _first_shape(segment: str):
+    m = _SHAPE_RE.search(segment)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _all_shapes_bytes(segment: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(segment):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*(\w+\[[0-9,]*\])")
+
+
+@dataclass
+class Computation:
+    name: str
+    header: str = ""
+    lines: list = field(default_factory=list)
+    # populated by analyse
+    dot_flops: float = 0.0
+    coll_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = field(default_factory=lambda: defaultdict(int))
+    whiles: list = field(default_factory=list)     # (cond_name, body_name)
+    calls: list = field(default_factory=list)      # fusion/call targets
+    max_const: int = 0
+
+
+def parse_computations(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and ("->" in line) and line.strip().endswith("{"):
+            cur = Computation(name=hdr.group(1), header=line)
+            comps[cur.name] = cur
+            if line.strip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            cur.lines.append(line)
+    comps["__entry__"] = comps.get(entry) or next(iter(comps.values()))
+    return comps
+
+
+def _analyse_comp(comp: Computation):
+    """Single pass: symbol table + dots + collectives + calls."""
+    symtab: dict[str, tuple] = {}
+    # seed with (array-typed) computation parameters from the header
+    for pm in _PARAM_RE.finditer(comp.header.split("->")[0]):
+        shp = _first_shape(pm.group(2))
+        if shp:
+            symtab[pm.group(1)] = shp
+    for line in comp.lines:
+        s = line.strip()
+        m = _DEF_RE.match(s)
+        if m:
+            name, rhs = m.group(1), m.group(2)
+            shp = _first_shape(rhs.split("(")[0] if "(" in rhs else rhs)
+            if shp:
+                symtab[name] = shp
+        for cm in _CONST_RE.finditer(s):
+            comp.max_const = max(comp.max_const, int(cm.group(1)))
+        wm = _WHILE_RE.search(s)
+        if wm:
+            comp.whiles.append((wm.group(1), wm.group(2)))
+        cm2 = _CALLS_RE.search(s)
+        if cm2:
+            comp.calls.append(cm2.group(1))
+        # dot flops
+        if " dot(" in s and m:
+            rhs = m.group(2)
+            res = _first_shape(rhs)
+            contract = _CONTRACT_RE.search(s)
+            if res and contract:
+                # lhs operand name: first arg of dot(...)
+                args = s.split(" dot(", 1)[1]
+                lhs_name = args.split(",")[0].strip().lstrip("%")
+                lhs = symtab.get(lhs_name)
+                cdims = [int(d) for d in contract.group(1).split(",")] if contract.group(1) else []
+                k = 1
+                if lhs:
+                    for d in cdims:
+                        if d < len(lhs[1]):
+                            k *= lhs[1][d]
+                n_res = 1
+                for d in res[1]:
+                    n_res *= d
+                comp.dot_flops += 2.0 * n_res * k
+        # collectives (result bytes on the lhs of the op name)
+        for kind in COLLECTIVE_KINDS:
+            idx = s.find(f" {kind}(")
+            if idx < 0:
+                idx = s.find(f" {kind}-start(")
+            if idx < 0:
+                continue
+            eq = s.find("=")
+            if eq < 0 or eq > idx:
+                continue
+            comp.coll_bytes[kind] += _all_shapes_bytes(s[eq + 1: idx])
+            comp.coll_counts[kind] += 1
+            break
+
+
+def analyse_hlo(text: str) -> dict:
+    comps = parse_computations(text)
+    entry = comps.pop("__entry__")
+    for c in comps.values():
+        _analyse_comp(c)
+
+    # accumulate multipliers over the call graph
+    mult: dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float, depth=0):
+        if depth > 64 or name not in comps:
+            return
+        comp = comps[name]
+        mult[name] += m
+        for cond, body in comp.whiles:
+            trip = max(comps[cond].max_const if cond in comps else 1, 1)
+            visit(body, m * trip, depth + 1)
+            visit(cond, m * trip, depth + 1)
+        for callee in comp.calls:
+            visit(callee, m, depth + 1)
+
+    visit(entry.name, 1.0)
+
+    flops = 0.0
+    coll_bytes = defaultdict(float)
+    coll_counts = defaultdict(float)
+    for name, m in mult.items():
+        c = comps[name]
+        flops += c.dot_flops * m
+        for k, v in c.coll_bytes.items():
+            coll_bytes[k] += v * m
+        for k, v in c.coll_counts.items():
+            coll_counts[k] += v * m
+
+    return {
+        "dot_flops": flops,
+        "collective_bytes": dict(coll_bytes),
+        "collective_bytes_total": float(sum(coll_bytes.values())),
+        "collective_counts": {k: float(v) for k, v in coll_counts.items()},
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,84 @@
+"""Similarity-search serving: the paper's engine as a first-class service.
+
+Serves batched Tanimoto KNN queries over a mesh-sharded fingerprint DB —
+the paper's multi-engine FPGA deployment mapped onto a TPU pod
+(core/distributed.py). Request batching, engine selection and throughput
+accounting mirror launch/serve.py for tokens.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import CHEMBL_LIKE
+from ..core import BruteForceEngine, BitBoundFoldingEngine, HNSWEngine, recall_at_k
+from ..core.distributed import make_sharded_search, shard_database
+from ..data.molecules import SyntheticConfig, synthetic_fingerprints, queries_from_db
+from .mesh import make_local_mesh
+
+
+def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
+          n_queries: int = 256, batches: int = 4, use_kernel: bool = False,
+          log=print):
+    db = synthetic_fingerprints(SyntheticConfig(n=n_db))
+    queries = queries_from_db(db, n_queries * batches)
+    mesh = make_local_mesh()
+
+    if engine == "sharded-brute":
+        with mesh:
+            db_s, cnt_s, n_valid = shard_database(mesh, db)
+            search, _, _ = make_sharded_search(mesh, db_s.shape[0], k,
+                                               use_kernel=use_kernel)
+            # warmup/compile
+            q0 = jnp.asarray(queries[:n_queries])
+            search(q0, db_s, cnt_s)
+            t0 = time.time()
+            for b in range(batches):
+                q = jnp.asarray(queries[b * n_queries:(b + 1) * n_queries])
+                vals, ids = search(q, db_s, cnt_s)
+                jax.block_until_ready(vals)
+            dt = time.time() - t0
+    elif engine == "bitbound-folding":
+        eng = BitBoundFoldingEngine(db, cutoff=CHEMBL_LIKE.cutoff,
+                                    m=CHEMBL_LIKE.folding_m)
+        t0 = time.time()
+        for b in range(batches):
+            eng.search(queries[b * n_queries:(b + 1) * n_queries], k)
+        dt = time.time() - t0
+    elif engine == "hnsw":
+        eng = HNSWEngine(db[:min(n_db, 20_000)], m=CHEMBL_LIKE.hnsw_m,
+                         ef_construction=CHEMBL_LIKE.hnsw_ef_construction,
+                         ef_search=CHEMBL_LIKE.hnsw_ef_search)
+        eng.search(queries[:n_queries], k)  # compile
+        t0 = time.time()
+        for b in range(batches):
+            eng.search(queries[b * n_queries:(b + 1) * n_queries], k)
+        dt = time.time() - t0
+    else:
+        raise ValueError(engine)
+
+    qps = n_queries * batches / dt
+    log(f"[search-serve] engine={engine} db={n_db} k={k}: "
+        f"{qps:.0f} QPS ({dt:.2f}s for {n_queries * batches} queries)")
+    return qps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="sharded-brute",
+                    choices=["sharded-brute", "bitbound-folding", "hnsw"])
+    ap.add_argument("--n-db", type=int, default=100_000)
+    ap.add_argument("--k", type=int, default=20)
+    ap.add_argument("--n-queries", type=int, default=256)
+    ap.add_argument("--use-kernel", action="store_true")
+    args = ap.parse_args()
+    serve(args.engine, n_db=args.n_db, k=args.k, n_queries=args.n_queries,
+          use_kernel=args.use_kernel)
+
+
+if __name__ == "__main__":
+    main()

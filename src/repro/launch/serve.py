@@ -1,0 +1,78 @@
+"""Token-serving driver: batched prefill + decode with per-layer caches."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import models
+from ..configs import get_arch
+from .mesh import make_local_mesh
+
+
+def generate(arch: str, prompt_len: int = 16, gen_len: int = 16,
+             batch: int = 4, reduced: bool = True, seed: int = 0, log=print):
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = make_local_mesh()
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)), jnp.int32)
+
+    params, _ = models.split(models.init_params(cfg, jax.random.key(0)))
+    decode = jax.jit(models.decode_step(cfg))
+    cache_len = prompt_len + gen_len
+
+    with mesh:
+        enc_kv = None
+        extra = {}
+        if cfg.family == "audio":
+            extra["audio_embed"] = jnp.zeros(
+                (batch, cfg.n_audio_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm":
+            extra["patch_embed"] = jnp.zeros(
+                (batch, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.enc_dec:
+            from ..models.transformer import _encode, build_enc_kv
+            enc_out = _encode(params, cfg, extra["audio_embed"])
+            enc_kv = build_enc_kv(cfg, params, enc_out)
+
+        # prefill by teacher-forced decode (exact for every family, incl.
+        # recurrent states, at 1 token/step — the batched prefill_step path
+        # is the attention-family fast path used by the dry-run)
+        caches = models.init_caches(cfg, batch, cache_len)
+        t0 = time.time()
+        for t in range(prompt_len):
+            logits, caches = decode(params, caches, tokens[:, t:t + 1], enc_kv) \
+                if enc_kv is not None else decode(params, caches, tokens[:, t:t + 1])
+        out = []
+        cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for t in range(gen_len):
+            out.append(cur)
+            logits, caches = decode(params, caches, cur, enc_kv) \
+                if enc_kv is not None else decode(params, caches, cur)
+            cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        dt = time.time() - t0
+        gen = jnp.concatenate(out, axis=1)
+        total_tok = batch * (prompt_len + gen_len)
+        log(f"[serve] {arch}: {total_tok} tokens in {dt:.2f}s "
+            f"({total_tok / dt:.1f} tok/s incl. jit)")
+    return np.asarray(gen)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    gen = generate(args.arch, args.prompt_len, args.gen_len, args.batch)
+    print("generated token ids (first row):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Training driver with fault-tolerance supervisor (DESIGN.md §6).
+
+Runs on whatever mesh the host offers (CPU smoke: 1 device; production:
+pass --production for the 16x16 pod). Features exercised by tests/examples:
+
+* checkpoint/restart: periodic async checkpoints; on any step failure the
+  supervisor restores the last checkpoint and replays (deterministic data =>
+  exact recovery). ``--fail-at`` injects a fault to prove it.
+* straggler mitigation / elasticity: data is a pure function of (seed, step)
+  so a restarted/rescaled job skips ahead with no coordination; restore
+  reshards onto the current mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import models
+from ..checkpoint import CheckpointManager
+from ..configs import get_arch
+from ..data.tokens import DataConfig, batch_for_step
+from ..train.step import (TrainConfig, init_train_state, make_train_step,
+                          train_state_specs)
+from .mesh import make_local_mesh, make_production_mesh, batch_spec
+
+
+class FaultInjector:
+    def __init__(self, fail_at: int | None):
+        self.fail_at = fail_at
+        self.fired = False
+
+    def maybe_fail(self, step: int):
+        if self.fail_at is not None and step == self.fail_at and not self.fired:
+            self.fired = True
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+def train(arch: str, steps: int = 20, global_batch: int = 8, seq_len: int = 128,
+          ckpt_dir: str = "/tmp/repro_ckpt", ckpt_every: int = 5,
+          fail_at: int | None = None, production: bool = False,
+          n_microbatches: int = 1, grad_compression: bool = False,
+          reduced: bool = True, log=print):
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = make_production_mesh() if production else make_local_mesh()
+    tcfg = TrainConfig(n_microbatches=n_microbatches,
+                       grad_compression=grad_compression)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=seq_len, global_batch=global_batch)
+
+    step_fn = make_train_step(cfg, tcfg)
+    sspecs = train_state_specs(cfg, tcfg)
+    from .mesh import filter_spec
+    state_sh = jax.tree.map(lambda sp: NamedSharding(mesh, filter_spec(sp, mesh)),
+                            sspecs, is_leaf=lambda x: isinstance(x, P))
+    bspec = NamedSharding(mesh, batch_spec(mesh))
+
+    with mesh:
+        jit_step = jax.jit(step_fn, in_shardings=(state_sh, bspec),
+                           out_shardings=(state_sh, None), donate_argnums=(0,))
+
+        mgr = CheckpointManager(ckpt_dir)
+        state = init_train_state(cfg, tcfg, jax.random.key(0))
+        state = jax.device_put(state, state_sh)
+        start = 0
+        restored = mgr.restore_latest(state, state_sh)
+        if restored[0] is not None:
+            start, state = restored[0] + 1, restored[1]
+            log(f"[restore] resuming from step {restored[0]}")
+
+        injector = FaultInjector(fail_at)
+        losses = []
+        step = start
+        while step < steps:
+            try:
+                injector.maybe_fail(step)
+                batch = {k: jax.device_put(jnp.asarray(v), bspec)
+                         for k, v in batch_for_step(dcfg, step, cfg).items()}
+                t0 = time.time()
+                state, metrics = jit_step(state, batch)
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                log(f"step {step:4d} loss {loss:.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} "
+                    f"({(time.time() - t0) * 1e3:.0f} ms)")
+                if ckpt_every and step % ckpt_every == 0:
+                    mgr.save(step, state)
+                step += 1
+            except RuntimeError as e:
+                log(f"[fault] {e} — restoring last checkpoint")
+                mgr.wait()
+                restored = mgr.restore_latest(state, state_sh)
+                if restored[0] is None:
+                    log("[fault] no checkpoint; restarting from scratch")
+                    state = jax.device_put(
+                        init_train_state(cfg, tcfg, jax.random.key(0)), state_sh)
+                    step = 0
+                else:
+                    step = restored[0] + 1
+                    state = restored[1]
+        mgr.wait()
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=5)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full architecture (production only)")
+    ap.add_argument("--production", action="store_true")
+    args = ap.parse_args()
+    train(args.arch, steps=args.steps, global_batch=args.global_batch,
+          seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+          ckpt_every=args.ckpt_every, fail_at=args.fail_at,
+          production=args.production, n_microbatches=args.microbatches,
+          grad_compression=args.grad_compression, reduced=not args.full_config)
+
+
+if __name__ == "__main__":
+    main()

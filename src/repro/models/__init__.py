@@ -1,0 +1,5 @@
+from .transformer import (  # noqa: F401
+    init_params, abstract_params, train_loss, decode_step, prefill_step,
+    init_caches, cache_specs, build_enc_kv, unit_layout, n_units,
+)
+from .param import SP, split, stack_sp  # noqa: F401

@@ -1,0 +1,210 @@
+"""GQA attention: training (chunked-flash), prefill (cache build) and decode
+(single-token with KV cache), with optional sliding window and cross-attention.
+
+Memory discipline: scores are never materialised as a full (S, S) tensor —
+queries are processed in chunks with a running (log-sum-exp) softmax, the
+jnp-level equivalent of flash attention (the lax.scan body is what a TPU
+flash kernel would fuse; on the dry-run this keeps per-chip activation
+memory within HBM for prefill_32k).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import PartitionSpec as P
+
+from .layers import W_IN, W_OUT, apply_rope
+from .param import SP, make_dense, apply_dense
+from .sharding import DP, constrain, row_parallel_dense
+
+NEG = -1e30
+
+
+def init_attention(key, cfg, d_model: int | None = None) -> dict:
+    d = d_model or cfg.d_model
+    hd = cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q": make_dense(kq, d, cfg.n_heads * hd, W_IN, cfg_dtype(cfg), bias=cfg.qkv_bias),
+        "k": make_dense(kk, d, cfg.n_kv_heads * hd, W_IN, cfg_dtype(cfg), bias=cfg.qkv_bias),
+        "v": make_dense(kv, d, cfg.n_kv_heads * hd, W_IN, cfg_dtype(cfg), bias=cfg.qkv_bias),
+        "o": make_dense(ko, cfg.n_heads * hd, d, W_OUT, cfg_dtype(cfg),
+                        scale=(cfg.n_heads * hd) ** -0.5),
+    }
+
+
+def cfg_dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _repeat_kv(k, n_heads, n_kv):
+    if n_heads == n_kv:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=2)
+
+
+def _chunked_attn(q, k, v, *, causal: bool, window: int, q_offset: int,
+                  chunk: int = 512):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, H, hd) -> (B, Sq, H, hd).
+
+    Scans over query chunks; each chunk computes scores vs all keys with a
+    masked softmax in f32. Peak live score tensor: (B, chunk, H, Sk).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd ** -0.5
+    n_chunks = max(sq // chunk, 1)
+    chunk = sq // n_chunks if sq % n_chunks == 0 else sq  # exact tiling or single
+    if sq % chunk != 0:
+        chunk, n_chunks = sq, 1
+
+    kq_pos = jnp.arange(sk)
+
+    def attend_chunk(qc, c0):
+        # qc: (B, chunk, H, hd); c0: scalar start position of the chunk
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        qpos = c0 + q_offset + jnp.arange(chunk)
+        mask = jnp.ones((chunk, sk), bool)
+        if causal:
+            mask &= kq_pos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kq_pos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None], s, NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+    if n_chunks == 1:
+        return attend_chunk(q, 0)
+
+    qs = q.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, qc_i):
+        qc, i = qc_i
+        return None, attend_chunk(qc, i * chunk)
+
+    # remat: scores/probs are recomputed in bwd (flash-attention memory law)
+    _, out = jax.lax.scan(jax.checkpoint(body), None, (qs, jnp.arange(n_chunks)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, S_cache, KV, hd)
+    v: jax.Array
+    length: jax.Array   # () int32 — valid prefix
+
+    @staticmethod
+    def spec(dp=("pod", "data")):
+        # sequence-sharded cache: works for any kv-head count (DESIGN.md §6)
+        return KVCache(k=P(dp, "model", None, None),
+                       v=P(dp, "model", None, None),
+                       length=P())
+
+
+def init_cache(cfg, batch: int, max_len: int, d_model: int | None = None) -> KVCache:
+    hd = cfg.hd
+    dt = cfg_dtype(cfg)
+    return KVCache(
+        k=jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+        v=jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+        length=jnp.zeros((), jnp.int32))
+
+
+def attention_train(p, cfg, x, positions, *, causal=True, window=0,
+                    kv_x=None, use_rope=True):
+    """Full-sequence attention (training / encoder / cross-attn).
+
+    kv_x: source sequence for cross-attention (decoder: x attends kv_x)."""
+    hd = cfg.hd
+    src = x if kv_x is None else kv_x
+    q = constrain(_split_heads(apply_dense(p["q"], x), cfg.n_heads, hd),
+                  DP, None, "model", None)
+    k = constrain(_split_heads(apply_dense(p["k"], src), cfg.n_kv_heads, hd),
+                  DP, None, "model", None)
+    v = constrain(_split_heads(apply_dense(p["v"], src), cfg.n_kv_heads, hd),
+                  DP, None, "model", None)
+    if use_rope and kv_x is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k = _repeat_kv(k, cfg.n_heads, cfg.n_kv_heads)
+    v = _repeat_kv(v, cfg.n_heads, cfg.n_kv_heads)
+    k = constrain(k, DP, None, "model", None)
+    v = constrain(v, DP, None, "model", None)
+    o = _chunked_attn(q, k, v, causal=causal and kv_x is None, window=window,
+                      q_offset=0)
+    o = constrain(o, DP, None, "model", None)
+    out = row_parallel_dense(p["o"]["w"],
+                             o.reshape(*x.shape[:-1], cfg.n_heads * hd))
+    # named so the `save_tp` remat policy can keep this row-parallel output
+    # (its all-reduce is otherwise re-run during remat — §Perf iter 4b)
+    return checkpoint_name(out, "tp_attn_out")
+
+
+def attention_decode(p, cfg, x, cache: KVCache, *, window=0, use_rope=True):
+    """Single-token decode: update cache at position cache.length, attend.
+
+    x: (B, 1, d). Returns (out (B, 1, d), new_cache)."""
+    hd = cfg.hd
+    b = x.shape[0]
+    pos = cache.length
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = constrain(_split_heads(apply_dense(p["q"], x), cfg.n_heads, hd),
+                  DP, None, None, None)
+    k = _split_heads(apply_dense(p["k"], x), cfg.n_kv_heads, hd)
+    v = _split_heads(apply_dense(p["v"], x), cfg.n_kv_heads, hd)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    s_cache = cache.k.shape[1]
+    # ring-buffer write for windowed attention, linear write otherwise
+    slot = jnp.mod(pos, s_cache) if window else jnp.minimum(pos, s_cache - 1)
+    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+    # GQA-native attention: never materialise the head-repeated cache. A
+    # jnp.repeat here forces SPMD to reshard the (sequence-sharded) cache —
+    # an all-gather of the whole cache per layer per token (1 GB/unit on
+    # granite decode_32k; found via HLO collective audit, §Perf iter 2).
+    g = cfg.n_heads // cfg.n_kv_heads
+    q5 = q.reshape(b, 1, cfg.n_kv_heads, g, hd)
+    scale = hd ** -0.5
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q5.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * scale      # (B, KV, G, 1, S)
+    kpos = jnp.arange(s_cache)
+    valid = kpos <= jnp.minimum(pos, s_cache - 1) if not window else (
+        jnp.logical_or(kpos <= slot, pos >= s_cache))
+    s = jnp.where(valid[None, None, None, None, :], s, NEG)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pr,
+                   cv.astype(jnp.float32)).astype(x.dtype)
+    out = apply_dense(p["o"], o.reshape(b, 1, cfg.n_heads * hd))
+    return out, KVCache(ck, cv, cache.length + 1)
+
+
+def attention_prefill(p, cfg, x, positions, *, window=0, use_rope=True):
+    """Prefill: full forward + return the populated cache."""
+    hd = cfg.hd
+    q = constrain(_split_heads(apply_dense(p["q"], x), cfg.n_heads, hd),
+                  DP, None, "model", None)
+    k = constrain(_split_heads(apply_dense(p["k"], x), cfg.n_kv_heads, hd),
+                  DP, None, "model", None)
+    v = constrain(_split_heads(apply_dense(p["v"], x), cfg.n_kv_heads, hd),
+                  DP, None, "model", None)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    kk = _repeat_kv(k, cfg.n_heads, cfg.n_kv_heads)
+    vv = _repeat_kv(v, cfg.n_heads, cfg.n_kv_heads)
+    o = _chunked_attn(q, kk, vv, causal=True, window=window, q_offset=0)
+    out = apply_dense(p["o"], o.reshape(*x.shape[:-1], cfg.n_heads * hd))
+    if window and k.shape[1] > window:
+        k, v = k[:, -window:], v[:, -window:]   # decode cache is a window ring
+    cache = KVCache(k=k, v=v, length=jnp.asarray(x.shape[1], jnp.int32))
+    return out, cache

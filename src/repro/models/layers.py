@@ -1,0 +1,117 @@
+"""Common layers: norms, embeddings, rotary, MLPs — pure JAX + SP specs.
+
+Sharding convention (DESIGN.md §6): TP over the mesh axis ``"model"``,
+FSDP-style weight sharding over ``"data"``. Activations carry batch on
+``("pod", "data")``; TP einsums contract over locally-sharded dims and XLA
+SPMD inserts the reduce-scatter/all-gather schedule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import PartitionSpec as P
+
+from .param import SP, make_dense, apply_dense, normal
+from .sharding import DP, constrain, row_parallel_dense
+
+# canonical specs
+W_IN = P(("pod", "data"), "model")   # (d_model, ff/heads) — column parallel
+W_OUT = P("model", ("pod", "data"))  # (ff/heads, d_model) — row parallel
+W_REP = P(None, None)
+VOCAB_EMB = P("model", ("pod", "data"))  # (vocab, d_model)
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": SP(jnp.ones((d,), dtype), P(None))}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": SP(jnp.ones((d,), dtype), P(None)),
+            "bias": SP(jnp.zeros((d,), dtype), P(None))}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": SP(normal(key, (vocab, d), dtype, d ** -0.5), VOCAB_EMB)}
+
+
+def embed(p, tokens):
+    """Token embedding. The vocab-sharded gather yields a *partial* result
+    (each shard contributes rows it owns); without the constraint XLA defers
+    the combining all-reduce into the first consumer — which may sit inside
+    the layer-scan loop and repeat per layer (xlstm prefill: 4x 7.5 GB AR per
+    unit; §Perf iter 3b). Pin the output: one AR here, DP-sharded batch."""
+    out = jnp.take(p["table"], tokens, axis=0)
+    axes = [DP] + [None] * (out.ndim - 1)
+    return constrain(out, *axes)
+
+
+def unembed(p, x):
+    """Tied output projection -> logits sharded on vocab (model axis)."""
+    logits = jnp.einsum("...d,vd->...v", x, p["table"])
+    axes = [DP] + [None] * (logits.ndim - 2) + ["model"]
+    return constrain(logits, *axes)
+
+
+def init_swiglu(key, d: int, ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": make_dense(k1, d, ff, W_IN, dtype),
+        "up": make_dense(k2, d, ff, W_IN, dtype),
+        "down": make_dense(k3, ff, d, W_OUT, dtype, scale=ff ** -0.5),
+    }
+
+
+def swiglu(p, x):
+    g = apply_dense(p["gate"], x)
+    u = apply_dense(p["up"], x)
+    out = apply_dense(p["down"], jax.nn.silu(g) * u)
+    return checkpoint_name(out, "tp_mlp_out")
+
+
+def init_gelu_mlp(key, d: int, ff: int, dtype, bias: bool = True) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": make_dense(k1, d, ff, W_IN, dtype, bias=bias),
+        "down": make_dense(k2, ff, d, W_OUT, dtype, scale=ff ** -0.5, bias=bias,
+                           bias_spec=P(None)),
+    }
+
+
+def gelu_mlp(p, x):
+    return apply_dense(p["down"], jax.nn.gelu(apply_dense(p["up"], x)))
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                     # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_learned_pos(key, max_len: int, d: int, dtype) -> dict:
+    return {"pos": SP(normal(key, (max_len, d), dtype, d ** -0.5), P(None, None))}

@@ -1,0 +1,62 @@
+"""Parameter trees with co-located sharding specs.
+
+Every ``init_*`` builds a pytree whose leaves are :class:`SP` — (value, spec)
+pairs — so the PartitionSpec can never drift from the array it shards.
+``split(tree)`` separates values from specs for pjit in_shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class SP(NamedTuple):
+    """A parameter leaf: array (or ShapeDtypeStruct) + its PartitionSpec."""
+    value: Any
+    spec: P
+
+
+def is_sp(x) -> bool:
+    return isinstance(x, SP)
+
+
+def split(tree):
+    """SP tree -> (values tree, specs tree)."""
+    values = jax.tree.map(lambda sp: sp.value, tree, is_leaf=is_sp)
+    specs = jax.tree.map(lambda sp: sp.spec, tree, is_leaf=is_sp)
+    return values, specs
+
+
+def stack_sp(trees: list):
+    """Stack a list of structurally-identical SP trees along a new leading
+    axis (layer-scan stacking); leading axis is unsharded."""
+    def _stack(*sps):
+        vals = [s.value for s in sps]
+        spec = sps[0].spec
+        return SP(jnp.stack(vals, axis=0), P(None, *spec))
+    return jax.tree.map(_stack, *trees, is_leaf=is_sp)
+
+
+def normal(key, shape, dtype, scale: float):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def make_dense(key, in_dim: int, out_dim: int, spec: P, dtype,
+               scale: float | None = None, bias: bool = False,
+               bias_spec: P | None = None):
+    scale = scale if scale is not None else in_dim ** -0.5
+    w = SP(normal(key, (in_dim, out_dim), dtype, scale), spec)
+    if not bias:
+        return {"w": w}
+    bspec = bias_spec if bias_spec is not None else P(spec[-1])
+    return {"w": w, "b": SP(jnp.zeros((out_dim,), dtype), bspec)}
+
+
+def apply_dense(p, x):
+    y = jnp.einsum("...i,io->...o", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y

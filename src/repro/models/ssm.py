@@ -1,0 +1,148 @@
+"""Mamba (S6) block — selective state-space sequence mixing.
+
+Training path: chunked selective scan — ``lax.scan`` over sequence chunks
+with an ``associative_scan`` inside each chunk, carrying the (B, d_inner,
+d_state) state between chunks. The (B, chunk, d_inner, d_state) intermediate
+is the peak live tensor; with d_inner sharded over ``model`` it stays small
+(DESIGN.md §6). Decode path: O(1) recurrent state update per token.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .param import SP, make_dense, apply_dense, normal
+from .layers import W_IN, W_OUT
+from .sharding import DP, constrain
+
+
+def dt_rank_for(d_model: int) -> int:
+    return max(math.ceil(d_model / 16), 1)
+
+
+def init_mamba(key, cfg, d: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dr = dt_rank_for(d)
+    conv = cfg.mamba_conv
+    keys = jax.random.split(key, 6)
+    # A initialised to -[1..ds] per channel (S4D-real init)
+    a_init = jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds)))
+    return {
+        "in_proj": make_dense(keys[0], d, 2 * di, W_IN, dt),
+        "conv_w": SP(normal(keys[1], (conv, di), dt, conv ** -0.5), P(None, "model")),
+        "conv_b": SP(jnp.zeros((di,), dt), P("model")),
+        "x_proj": make_dense(keys[2], di, dr + 2 * ds, P("model", None), dt),
+        "dt_proj": make_dense(keys[3], dr, di, P(None, "model"), dt, bias=True,
+                              bias_spec=P("model")),
+        "a_log": SP(a_init, P("model", None)),
+        "d_skip": SP(jnp.ones((di,), jnp.float32), P("model")),
+        "out_proj": make_dense(keys[4], di, d, W_OUT, dt, scale=di ** -0.5),
+    }
+
+
+class MambaState(NamedTuple):
+    h: jax.Array         # (B, d_inner, d_state) f32 — SSM state
+    conv: jax.Array      # (B, conv-1, d_inner) — causal conv tail
+
+    @staticmethod
+    def spec(dp=("pod", "data")):
+        return MambaState(h=P(dp, "model", None),
+                          conv=P(dp, None, "model"))
+
+
+def init_mamba_state(cfg, batch: int, d: int) -> MambaState:
+    di = cfg.mamba_expand * d
+    return MambaState(
+        h=jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.mamba_conv - 1, di), jnp.dtype(cfg.dtype)))
+
+
+def _causal_conv(p, x, cfg):
+    """Depthwise causal conv over seq. x: (B, S, di)."""
+    conv = cfg.mamba_conv
+    pad = jnp.pad(x, ((0, 0), (conv - 1, 0), (0, 0)))
+    # depthwise: sum over the small kernel window (unrolled, conv is 4)
+    y = sum(pad[:, i:i + x.shape[1], :] * p["conv_w"][i] for i in range(conv))
+    return y + p["conv_b"]
+
+
+def _ssm_params(p, x, cfg, d: int):
+    """x: (..., di) -> delta (..., di), B (..., ds), C (..., ds)."""
+    ds = cfg.mamba_d_state
+    dr = dt_rank_for(d)
+    proj = apply_dense(p["x_proj"], x)
+    dt_in, b, c = jnp.split(proj, [dr, dr + ds], axis=-1)
+    delta = jax.nn.softplus(apply_dense(p["dt_proj"], dt_in).astype(jnp.float32))
+    return delta, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def mamba_train(p, cfg, x, d: int, chunk: int = 256):
+    """Full-sequence Mamba mixing. x: (B, S, d) -> (B, S, d)."""
+    b_sz, s, _ = x.shape
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    xz = apply_dense(p["in_proj"], x)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = constrain(u, DP, None, "model")
+    z = constrain(z, DP, None, "model")
+    u = jax.nn.silu(_causal_conv(p, u, cfg))
+    delta, bmat, cmat = _ssm_params(p, u, cfg, d)
+    A = -jnp.exp(p["a_log"])                                   # (di, ds)
+
+    n_chunks = max(s // chunk, 1)
+    ch = s // n_chunks if s % n_chunks == 0 else s
+    if s % ch != 0:
+        ch, n_chunks = s, 1
+
+    def chunk_body(h, args):
+        uc, dc, bc, cc = args                                  # (B, ch, ...)
+        decay = jnp.exp(dc[..., None] * A)                     # (B, ch, di, ds)
+        xin = (dc * uc.astype(jnp.float32))[..., None] * bc[:, :, None, :]
+        # prepend carry as an extra step: h_0 with decay 1
+        dec = jnp.concatenate([jnp.ones_like(decay[:, :1]), decay], axis=1)
+        xi = jnp.concatenate([h[:, None], xin], axis=1)
+
+        def comb(a, b):
+            return (a[0] * b[0], b[0] * a[1] + b[1])
+
+        _, hs = jax.lax.associative_scan(comb, (dec, xi), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", hs[:, 1:], cc)
+        return hs[:, -1], y
+
+    u_c = u.reshape(b_sz, n_chunks, ch, di).transpose(1, 0, 2, 3)
+    d_c = delta.reshape(b_sz, n_chunks, ch, di).transpose(1, 0, 2, 3)
+    b_c = bmat.reshape(b_sz, n_chunks, ch, ds).transpose(1, 0, 2, 3)
+    c_c = cmat.reshape(b_sz, n_chunks, ch, ds).transpose(1, 0, 2, 3)
+    h0 = jnp.zeros((b_sz, di, ds), jnp.float32)
+    # remat: recompute the (B, ch, di, ds) decay/state tensors in the bwd
+    # pass instead of saving them per chunk (16x memory on jamba train_4k)
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, (u_c, d_c, b_c, c_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(b_sz, s, di)
+    y = y + u.astype(jnp.float32) * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return apply_dense(p["out_proj"], y)
+
+
+def mamba_decode(p, cfg, x, state: MambaState, d: int):
+    """Single-token decode. x: (B, 1, d) -> ((B, 1, d), new_state)."""
+    b_sz = x.shape[0]
+    di = cfg.mamba_expand * d
+    xz = apply_dense(p["in_proj"], x)                          # (B, 1, 2di)
+    u, z = jnp.split(xz[:, 0], 2, axis=-1)                     # (B, di)
+    window = jnp.concatenate([state.conv, u[:, None, :]], axis=1)  # (B, conv, di)
+    uc = jnp.einsum("bcd,cd->bd", window, p["conv_w"]) + p["conv_b"]
+    uc = jax.nn.silu(uc)
+    delta, bmat, cmat = _ssm_params(p, uc, cfg, d)             # (B, di), (B, ds)
+    A = -jnp.exp(p["a_log"])
+    decay = jnp.exp(delta[..., None] * A)                      # (B, di, ds)
+    h = decay * state.h + (delta * uc.astype(jnp.float32))[..., None] * bmat[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cmat) + uc.astype(jnp.float32) * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = apply_dense(p["out_proj"], y)[:, None, :]
+    return out, MambaState(h=h, conv=window[:, 1:])

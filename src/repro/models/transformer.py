@@ -1,0 +1,495 @@
+"""Model assembly: every assigned architecture from one composable block zoo.
+
+Layers are grouped into repeating *units* (``cfg.unit_len`` layers — 1 for
+homogeneous stacks, 8 for jamba's mamba/attention interleave, 2 for xLSTM's
+s/m alternation). Unit parameters are stacked and the stack is traversed
+with ``lax.scan`` + ``jax.checkpoint`` — the production activation
+checkpointing policy, and what keeps dry-run HLO size independent of depth.
+
+Public entry points:
+  init_params(cfg, rng)                  -> SP tree
+  train_loss(cfg)(params, batch)         -> scalar loss (CE + MoE aux)
+  prefill_step(cfg)(params, batch)       -> (logits_last, caches)
+  decode_step(cfg)(params, caches, toks) -> (logits, new caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm, xlstm
+from .layers import (embed, gelu_mlp, init_embedding, init_gelu_mlp,
+                     init_layernorm, init_learned_pos, init_rmsnorm,
+                     init_swiglu, layernorm, rmsnorm, swiglu, unembed)
+from .param import SP, split, stack_sp
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+def unit_layout(cfg: ArchConfig) -> list[tuple[str, str]]:
+    """[(mixer, ffn)] per layer position within one repeating unit."""
+    if cfg.family in ("dense", "vlm"):
+        return [("attn", "swiglu")]
+    if cfg.family == "moe":
+        return [("attn", "moe")]
+    if cfg.family == "audio":
+        return [("attn", "gelu")]
+    if cfg.family == "hybrid":
+        out = []
+        for j in range(cfg.unit_len):
+            mixer = "attn" if j == cfg.attn_position else "mamba"
+            ffn = "moe" if (cfg.moe_every and j % cfg.moe_every == 1) else "swiglu"
+            out.append((mixer, ffn))
+        return out
+    if cfg.family == "ssm":
+        return [({"s": "slstm", "m": "mlstm"}[c], "none") for c in cfg.xlstm_pattern]
+    raise ValueError(cfg.family)
+
+
+def n_units(cfg: ArchConfig) -> int:
+    ul = len(unit_layout(cfg))
+    assert cfg.n_layers % ul == 0, (cfg.name, cfg.n_layers, ul)
+    return cfg.n_layers // ul
+
+
+def _mask_pad_vocab(cfg, logits):
+    """Suppress the padded-vocab tail (cfg.padded_vocab > cfg.vocab)."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+    return jnp.where(pad, -1e30, logits)
+
+
+def _norm_init(cfg, d):
+    return init_layernorm(d, jnp.dtype(cfg.dtype)) if cfg.family == "audio" \
+        else init_rmsnorm(d, jnp.dtype(cfg.dtype))
+
+
+def _norm(cfg, p, x):
+    return layernorm(p, x, cfg.norm_eps) if cfg.family == "audio" \
+        else rmsnorm(p, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg, mixer: str, ffn: str, d: int, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"norm1": _norm_init(cfg, d)}
+    if mixer == "attn":
+        p["mixer"] = attn.init_attention(ks[0], cfg, d)
+    elif mixer == "mamba":
+        p["mixer"] = ssm.init_mamba(ks[0], cfg, d)
+    elif mixer == "slstm":
+        p["mixer"] = xlstm.init_slstm(ks[0], cfg, d)
+    elif mixer == "mlstm":
+        p["mixer"] = xlstm.init_mlstm(ks[0], cfg, d)
+    if cross:
+        p["norm_x"] = _norm_init(cfg, d)
+        p["cross"] = attn.init_attention(ks[1], cfg, d)
+    if ffn != "none":
+        p["norm2"] = _norm_init(cfg, d)
+    if ffn == "swiglu":
+        p["ffn"] = init_swiglu(ks[2], d, cfg.d_ff, jnp.dtype(cfg.dtype))
+    elif ffn == "gelu":
+        p["ffn"] = init_gelu_mlp(ks[2], d, cfg.d_ff, jnp.dtype(cfg.dtype))
+    elif ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(ks[2], cfg, d)
+    return p
+
+
+def _apply_ffn(p, cfg, x, ffn: str, exact_moe: bool = False):
+    if ffn == "none":
+        return x, 0.0
+    h = _norm(cfg, p["norm2"], x)
+    if ffn == "swiglu":
+        return x + swiglu(p["ffn"], h), 0.0
+    if ffn == "gelu":
+        return x + gelu_mlp(p["ffn"], h), 0.0
+    if ffn == "moe":
+        if exact_moe:   # decode: tiny T — dense dispatch, no capacity drops
+            y, aux = moe_mod.moe_ffn_dense(p["ffn"], cfg, h)
+        else:
+            y, aux = moe_mod.moe_ffn(p["ffn"], cfg, h)
+        return x + y, aux
+    raise ValueError(ffn)
+
+
+def _apply_layer_train(p, cfg, x, positions, mixer, ffn, d, *, causal=True,
+                       window=0, enc_out=None, use_rope=True):
+    h = _norm(cfg, p["norm1"], x)
+    if mixer == "attn":
+        x = x + attn.attention_train(p["mixer"], cfg, h, positions,
+                                     causal=causal, window=window,
+                                     use_rope=use_rope)
+    elif mixer == "mamba":
+        x = x + ssm.mamba_train(p["mixer"], cfg, h, d)
+    elif mixer == "slstm":
+        x = x + xlstm.slstm_train(p["mixer"], cfg, h, d)
+    elif mixer == "mlstm":
+        x = x + xlstm.mlstm_train(p["mixer"], cfg, h, d)
+    if enc_out is not None:
+        hx = _norm(cfg, p["norm_x"], x)
+        x = x + attn.attention_train(p["cross"], cfg, hx, positions,
+                                     kv_x=enc_out, use_rope=False)
+    return _apply_ffn(p, cfg, x, ffn)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _init_layer_cache(cfg, mixer: str, batch: int, cache_len: int, d: int):
+    if mixer == "attn":
+        return attn.init_cache(cfg, batch, cache_len, d)
+    if mixer == "mamba":
+        return ssm.init_mamba_state(cfg, batch, d)
+    if mixer == "slstm":
+        return xlstm.init_slstm_state(cfg, batch, d)
+    if mixer == "mlstm":
+        return xlstm.init_mlstm_state(cfg, batch, d)
+    raise ValueError(mixer)
+
+
+def _layer_cache_spec(cfg, mixer: str, dp=("pod", "data")):
+    if mixer == "attn":
+        return attn.KVCache.spec(dp)
+    if mixer == "mamba":
+        return ssm.MambaState.spec(dp)
+    if mixer == "slstm":
+        return xlstm.SLSTMState.spec(dp)
+    if mixer == "mlstm":
+        return xlstm.MLSTMState.spec(dp)
+    raise ValueError(mixer)
+
+
+def _apply_layer_decode(p, cfg, x, cache, mixer, ffn, d, *, window=0,
+                        enc_kv=None, use_rope=True):
+    h = _norm(cfg, p["norm1"], x)
+    if mixer == "attn":
+        y, cache = attn.attention_decode(p["mixer"], cfg, h, cache,
+                                         window=window, use_rope=use_rope)
+        x = x + y
+    elif mixer == "mamba":
+        y, cache = ssm.mamba_decode(p["mixer"], cfg, h, cache, d)
+        x = x + y
+    elif mixer == "slstm":
+        y, cache = xlstm.slstm_decode(p["mixer"], cfg, h, cache, d)
+        x = x + y
+    elif mixer == "mlstm":
+        y, cache = xlstm.mlstm_decode(p["mixer"], cfg, h, cache, d)
+        x = x + y
+    if enc_kv is not None:
+        # cross-attend to the (static) encoder output carried in the cache
+        hx = _norm(cfg, p["norm_x"], x)
+        y = _cross_decode(p["cross"], cfg, hx, enc_kv)
+        x = x + y
+    x, _ = _apply_ffn(p, cfg, x, ffn, exact_moe=True)
+    return x, cache
+
+
+def _cross_decode(p, cfg, x, enc_kv):
+    """Cross-attention with precomputed encoder K/V: enc_kv = (k, v)
+    each (B, F, H, hd)."""
+    from .param import apply_dense
+    hd = cfg.hd
+    b = x.shape[0]
+    q = apply_dense(p["q"], x).reshape(b, 1, cfg.n_heads, hd)
+    k, v = enc_kv
+    k = attn._repeat_kv(k, cfg.n_heads, cfg.n_kv_heads)
+    v = attn._repeat_kv(v, cfg.n_heads, cfg.n_kv_heads)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pr, v.astype(jnp.float32)).astype(x.dtype)
+    return apply_dense(p["o"], o.reshape(b, 1, cfg.n_heads * hd))
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, rng: jax.Array) -> dict:
+    d = cfg.d_model
+    layout = unit_layout(cfg)
+    nu = n_units(cfg)
+    keys = jax.random.split(rng, nu + 4)
+    params: dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.padded_vocab, d, jnp.dtype(cfg.dtype)),
+        "final_norm": _norm_init(cfg, d),
+    }
+
+    def make_unit(k, cross=False):
+        uks = jax.random.split(k, len(layout))
+        return {str(j): _init_layer(uks[j], cfg, mixer, ffn, d, cross=cross)
+                for j, (mixer, ffn) in enumerate(layout)}
+
+    if cfg.enc_dec:
+        enc_keys = jax.random.split(keys[1], nu)
+        dec_keys = jax.random.split(keys[2], nu)
+        params["enc_units"] = stack_sp([make_unit(k) for k in enc_keys])
+        params["units"] = stack_sp([make_unit(k, cross=True) for k in dec_keys])
+        params["enc_pos"] = init_learned_pos(keys[3], cfg.n_audio_frames, d,
+                                             jnp.dtype(cfg.dtype))
+        params["dec_pos"] = init_learned_pos(keys[3], cfg.max_seq, d,
+                                             jnp.dtype(cfg.dtype))
+        params["enc_final_norm"] = _norm_init(cfg, d)
+    else:
+        params["units"] = stack_sp([make_unit(k) for k in keys[1:1 + nu]])
+    return params
+
+
+def abstract_params(cfg: ArchConfig):
+    """ShapeDtypeStruct param tree + specs (no allocation) for the dry-run.
+
+    Specs are static python objects — they are captured by side effect during
+    the abstract trace (returning them from eval_shape would fail since
+    PartitionSpec is not a JAX type)."""
+    box = {}
+
+    def fn():
+        values, specs = split(init_params(cfg, jax.random.key(0)))
+        box["specs"] = specs
+        return values
+
+    values = jax.eval_shape(fn)
+    return values, box["specs"]
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _run_stack(units_params, cfg, x, positions, *, causal=True, window=0,
+               enc_out=None, use_rope=True, remat=True, remat_policy=None):
+    """Scan over stacked units; returns (x, moe_aux_sum).
+
+    remat_policy: None (save nothing) or "save_tp" (keep the row-parallel
+    attention/MLP outputs so their all-reduces are not re-run in the bwd
+    recompute — trades ~2 activations/unit of HBM for ICI)."""
+    layout = unit_layout(cfg)
+
+    def unit_body(carry, unit_p):
+        x, aux = carry
+        for j, (mixer, ffn) in enumerate(layout):
+            x, a = _apply_layer_train(unit_p[str(j)], cfg, x, positions, mixer,
+                                      ffn, cfg.d_model, causal=causal,
+                                      window=window, enc_out=enc_out,
+                                      use_rope=use_rope)
+            aux = aux + a
+        return (x, aux), None
+
+    if remat:
+        policy = None
+        if remat_policy == "save_tp":
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "tp_attn_out", "tp_mlp_out")
+        body = jax.checkpoint(unit_body, policy=policy)
+    else:
+        body = unit_body
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), units_params)
+    return x, aux
+
+
+def _encode(params, cfg, audio_embed):
+    """Whisper encoder: bidirectional, learned positions."""
+    f = audio_embed.shape[1]
+    x = audio_embed + params["enc_pos"]["pos"][:f]
+    positions = jnp.broadcast_to(jnp.arange(f), audio_embed.shape[:2])
+    x, _ = _run_stack(params["enc_units"], cfg, x, positions, causal=False,
+                      use_rope=False)
+    return _norm(cfg, params["enc_final_norm"], x)
+
+
+def train_loss(cfg: ArchConfig, remat_policy: str | None = None):
+    """Returns loss_fn(params, batch) -> scalar. Batch fields by family:
+    tokens (B, S) + labels (B, S); audio: + audio_embed (B, F, d);
+    vlm: + patch_embed (B, P, d) (loss on tokens only)."""
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens)
+        if cfg.family == "vlm":
+            x = jnp.concatenate([batch["patch_embed"].astype(x.dtype), x], axis=1)
+            positions = jnp.broadcast_to(jnp.arange(x.shape[1]), (b, x.shape[1]))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        enc_out = None
+        use_rope = cfg.family != "audio"
+        if cfg.enc_dec:
+            enc_out = _encode(params, cfg, batch["audio_embed"])
+            x = x + params["dec_pos"]["pos"][:s]
+        x, aux = _run_stack(params["units"], cfg, x, positions,
+                            window=cfg.attn_window, enc_out=enc_out,
+                            use_rope=use_rope, remat_policy=remat_policy)
+        if cfg.family == "vlm":
+            x = x[:, -s:]
+        x = _norm(cfg, params["final_norm"], x)
+        logits = _mask_pad_vocab(cfg, unembed(params["embed"], x).astype(jnp.float32))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce + 0.01 * aux
+
+    return loss_fn
+
+
+# -- caches for serving ------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, cache_len: int):
+    """Stacked (n_units leading dim) cache pytree."""
+    layout = unit_layout(cfg)
+    nu = n_units(cfg)
+    d = cfg.d_model
+    if cfg.attn_window:
+        attn_len = min(cache_len, cfg.attn_window)
+    else:
+        attn_len = cache_len
+
+    def unit_cache():
+        return {str(j): _init_layer_cache(cfg, mixer, batch,
+                                          attn_len if mixer == "attn" else cache_len, d)
+                for j, (mixer, _) in enumerate(layout)}
+
+    one = unit_cache()
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (nu, *x.shape)).copy(), one)
+
+
+def cache_specs(cfg: ArchConfig, dp=("pod", "data")):
+    """dp: mesh axes carrying the batch dim (None to leave batch unsharded —
+    required when global_batch doesn't divide the DP extent, e.g. long_500k)."""
+    layout = unit_layout(cfg)
+    unit = {str(j): _layer_cache_spec(cfg, mixer, dp)
+            for j, (mixer, _) in enumerate(layout)}
+    return jax.tree.map(lambda sp: P(None, *sp), unit,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_enc_kv(cfg: ArchConfig, params, enc_out):
+    """Per-decoder-layer cross-attention K/V from the encoder output —
+    computed once per request, reused every decode step (stacked over units,
+    scanned alongside the caches)."""
+    from .param import apply_dense
+    layout = unit_layout(cfg)
+    hd = cfg.hd
+    b, f, _ = enc_out.shape
+
+    def unit_body(_, unit_p):
+        kv = {}
+        for j, (mixer, _f) in enumerate(layout):
+            pc = unit_p[str(j)]["cross"]
+            k = apply_dense(pc["k"], enc_out).reshape(b, f, cfg.n_kv_heads, hd)
+            v = apply_dense(pc["v"], enc_out).reshape(b, f, cfg.n_kv_heads, hd)
+            kv[str(j)] = (k, v)
+        return None, kv
+
+    _, stacked = jax.lax.scan(unit_body, None, params["units"])
+    return stacked
+
+
+def decode_step(cfg: ArchConfig):
+    """Returns step(params, caches, tokens (B,1), [enc_kv stacked]) ->
+    (logits (B, vocab), new_caches)."""
+    layout = unit_layout(cfg)
+    use_rope = cfg.family != "audio"
+
+    def step(params, caches, tokens, enc_kv=None):
+        x = embed(params["embed"], tokens)
+        if cfg.enc_dec:
+            # learned decoder position = current self-attn cache length
+            length = caches["0"].length[0]
+            x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"]["pos"],
+                                                 length, 1, axis=0)
+
+        def unit_body(x, scanned):
+            if enc_kv is not None:
+                unit_p, unit_c, unit_kv = scanned
+            else:
+                unit_p, unit_c = scanned
+                unit_kv = None
+            new_c = {}
+            for j, (mixer, ffn) in enumerate(layout):
+                x, c = _apply_layer_decode(
+                    unit_p[str(j)], cfg, x, unit_c[str(j)], mixer, ffn,
+                    cfg.d_model, window=cfg.attn_window,
+                    enc_kv=unit_kv[str(j)] if unit_kv is not None else None,
+                    use_rope=use_rope)
+                new_c[str(j)] = c
+            return x, new_c
+
+        xs = (params["units"], caches) if enc_kv is None else \
+            (params["units"], caches, enc_kv)
+        x, new_caches = jax.lax.scan(unit_body, x, xs)
+        x = _norm(cfg, params["final_norm"], x)
+        logits = _mask_pad_vocab(cfg, unembed(params["embed"], x[:, 0]).astype(jnp.float32))
+        return logits, new_caches
+
+    return step
+
+
+def prefill_step(cfg: ArchConfig):
+    """Returns prefill(params, batch) -> (last-token logits, caches).
+
+    Runs the full forward and populates per-layer caches (attention K/V for
+    attn layers; recurrent states for SSM layers are produced by a final
+    decode-shaped pass in serving — here we return attention caches, which is
+    what the decode_32k shape consumes)."""
+    layout = unit_layout(cfg)
+    use_rope = cfg.family != "audio"
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens)
+        if cfg.family == "vlm":
+            x = jnp.concatenate([batch["patch_embed"].astype(x.dtype), x], axis=1)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), (b, x.shape[1]))
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = _encode(params, cfg, batch["audio_embed"])
+            x = x + params["dec_pos"]["pos"][:s]
+
+        def unit_body(carry, unit_p):
+            x = carry
+            caches = {}
+            for j, (mixer, ffn) in enumerate(layout):
+                p = unit_p[str(j)]
+                if mixer == "attn":
+                    h = _norm(cfg, p["norm1"], x)
+                    y, cache = attn.attention_prefill(p["mixer"], cfg, h, positions,
+                                                      window=cfg.attn_window,
+                                                      use_rope=use_rope)
+                    x = x + y
+                    if cfg.enc_dec:
+                        hx = _norm(cfg, p["norm_x"], x)
+                        x = x + attn.attention_train(p["cross"], cfg, hx, positions,
+                                                     kv_x=enc_out, use_rope=False)
+                    x, _ = _apply_ffn(p, cfg, x, ffn)
+                    caches[str(j)] = cache
+                else:
+                    # recurrent layers: run the train mixer; final state is
+                    # reconstructed by the serving loop (documented in serve/)
+                    x, _ = _apply_layer_train(p, cfg, x, positions, mixer, ffn,
+                                              cfg.d_model, use_rope=use_rope)
+                    caches[str(j)] = _init_layer_cache(cfg, mixer, b, 1, cfg.d_model)
+            return x, caches
+
+        x, caches = jax.lax.scan(unit_body, x, params["units"])
+        x = _norm(cfg, params["final_norm"], x)
+        logits = _mask_pad_vocab(cfg, unembed(params["embed"], x[:, -1]).astype(jnp.float32))
+        return logits, caches
+
+    return prefill

@@ -1,0 +1,324 @@
+"""xLSTM blocks (arXiv:2405.04517): sLSTM (scalar memory, recurrent) and
+mLSTM (matrix memory, attention-like parallel form for training + O(1)
+recurrent decode).
+
+mLSTM training uses the stabilised parallel (quadratic) formulation with
+query-chunking (same flash-style discipline as attention.py); decode updates
+the per-head (hd, hd) matrix memory C, normaliser n and stabiliser m.
+sLSTM is inherently sequential (recurrent gate coupling through h_{t-1});
+training scans over time — this is the documented cost of the architecture,
+not an implementation shortcut (the original xLSTM trains the same way).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .param import SP, make_dense, apply_dense, normal
+from .layers import W_IN, W_OUT
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+REP = P(None, None)
+# xLSTM-350m block weights are REPLICATED over the model axis (TP only for
+# the 50k-vocab embedding/unembedding). Rationale (§Perf iter 3, HLO audit):
+# with d=1024 and 4 heads, TP-sharding the projections makes every head-dim
+# contraction partial — a 537 MB all-reduce per mLSTM chunk (1.6 TB/step)
+# and a per-timestep all-reduce in the sLSTM recurrence. A 350M model's
+# whole weight set is 0.7 GB bf16 per chip replicated — TP buys nothing.
+
+
+def init_mlstm(key, cfg, d: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 6)
+    return {
+        "q": make_dense(ks[0], d, d, REP, dt),
+        "k": make_dense(ks[1], d, d, REP, dt),
+        "v": make_dense(ks[2], d, d, REP, dt),
+        # head-count gates are tiny (n_heads outputs) — replicated, since
+        # n_heads may be far below the model-axis size (xlstm-350m: 4 heads)
+        "i_gate": make_dense(ks[3], d, h, REP, dt, bias=True,
+                             bias_spec=P(None)),
+        "f_gate": make_dense(ks[4], d, h, REP, dt, bias=True,
+                             bias_spec=P(None)),
+        "o": make_dense(ks[5], d, d, REP, dt),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array     # (B, H, hd, hd) f32 matrix memory
+    n: jax.Array     # (B, H, hd) f32 normaliser
+    m: jax.Array     # (B, H) f32 stabiliser
+
+    @staticmethod
+    def spec(dp=("pod", "data")):
+        # head dim is small (4) — shard batch only
+        return MLSTMState(c=P(dp, None, None, None),
+                          n=P(dp, None, None),
+                          m=P(dp, None))
+
+
+def init_mlstm_state(cfg, batch: int, d: int) -> MLSTMState:
+    h = cfg.n_heads
+    hd = d // h
+    return MLSTMState(c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+                      n=jnp.zeros((batch, h, hd), jnp.float32),
+                      m=jnp.full((batch, h), NEG, jnp.float32))
+
+
+def _mlstm_qkv(p, cfg, x, d):
+    h = cfg.n_heads
+    hd = d // h
+    q = apply_dense(p["q"], x).reshape(*x.shape[:-1], h, hd)
+    k = apply_dense(p["k"], x).reshape(*x.shape[:-1], h, hd)
+    v = apply_dense(p["v"], x).reshape(*x.shape[:-1], h, hd)
+    i_pre = apply_dense(p["i_gate"], x).astype(jnp.float32)   # (B, S, H)
+    f_pre = apply_dense(p["f_gate"], x).astype(jnp.float32)
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_train(p, cfg, x, d: int, chunk: int = 512):
+    """Parallel (quadratic) stabilised mLSTM. x: (B, S, d)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    q, k, v, i_pre, f_pre = _mlstm_qkv(p, cfg, x, d)
+    logf = jax.nn.log_sigmoid(f_pre)                          # (B, S, H)
+    cumf = jnp.cumsum(logf, axis=1)                           # (B, S, H)
+    # log decay matrix entry (t, s): cumf_t - cumf_s + i_s  for s <= t
+    a = cumf.transpose(0, 2, 1)                               # (B, H, S)
+    ilog = (i_pre + 0.0).transpose(0, 2, 1)                   # (B, H, S)
+    scale = hd ** -0.5
+
+    n_chunks = max(s // chunk, 1)
+    ch = s // n_chunks if s % n_chunks == 0 else s
+    if s % ch != 0:
+        ch, n_chunks = s, 1
+
+    qh = q.transpose(0, 2, 1, 3)                              # (B, H, S, hd)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    kpos = jnp.arange(s)
+
+    def one_chunk(c0):
+        qs = jax.lax.dynamic_slice_in_dim(qh, c0, ch, axis=2)
+        ac = jax.lax.dynamic_slice_in_dim(a, c0, ch, axis=2)  # (B, H, ch)
+        logd = ac[..., None] - a[:, :, None, :] + ilog[:, :, None, :]  # (B,H,ch,S)
+        qpos = c0 + jnp.arange(ch)
+        mask = kpos[None, :] <= qpos[:, None]
+        logd = jnp.where(mask[None, None], logd, NEG)
+        mrow = jnp.max(logd, axis=-1, keepdims=True)          # (B, H, ch, 1)
+        dmat = jnp.exp(logd - mrow)
+        smat = jnp.einsum("bhqe,bhke->bhqk", qs.astype(jnp.float32),
+                          kh.astype(jnp.float32)) * scale * dmat
+        norm = jnp.maximum(jnp.abs(smat.sum(-1, keepdims=True)),
+                           jnp.exp(-mrow))
+        return jnp.einsum("bhqk,bhke->bhqe", smat / norm, vh.astype(jnp.float32))
+
+    if n_chunks == 1:
+        out = one_chunk(0)
+    else:
+        _, outs = jax.lax.scan(jax.checkpoint(lambda _, i: (None, one_chunk(i * ch))),
+                               None, jnp.arange(n_chunks))
+        out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, hd)
+    y = out.transpose(0, 2, 1, 3).reshape(b, s, d).astype(x.dtype)
+    return apply_dense(p["o"], y)
+
+
+def mlstm_decode(p, cfg, x, state: MLSTMState, d: int):
+    """O(1) recurrent step. x: (B, 1, d)."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    hd = d // h
+    q, k, v, i_pre, f_pre = _mlstm_qkv(p, cfg, x, d)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))  # (B, H, hd)
+    i_t = i_pre[:, 0]                                          # (B, H)
+    logf = jax.nn.log_sigmoid(f_pre[:, 0])
+    m_new = jnp.maximum(logf + state.m, i_t)
+    fw = jnp.exp(logf + state.m - m_new)[..., None]            # (B, H, 1)
+    iw = jnp.exp(i_t - m_new)[..., None]
+    scale = hd ** -0.5
+    c_new = fw[..., None] * state.c + iw[..., None] * (k[..., :, None] * v[..., None, :])
+    n_new = fw * state.n + iw * k
+    num = jnp.einsum("bhij,bhi->bhj", c_new, q * scale)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n_new, q * scale)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, d).astype(x.dtype)
+    return apply_dense(p["o"], y), MLSTMState(c_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, d: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 9)
+    gates = {}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        gates[f"w_{g}"] = make_dense(ks[2 * i], d, d, REP, dt,
+                                     bias=True, bias_spec=P(None))
+        # recurrence weights are REPLICATED: sharding the (d, d) recurrent
+        # matvec over `model` costs one all-gather of h per *timestep* per
+        # gate (33.9 s of ICI per prefill_32k step at d=1024 — §Perf iter 3).
+        # The matvec is tiny; replication removes the per-step collectives.
+        gates[f"r_{g}"] = make_dense(ks[2 * i + 1], d, d, P(None, None), dt)
+    gates["out"] = make_dense(ks[8], d, d, REP, dt)
+    return gates
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, d) f32
+    n: jax.Array   # (B, d)
+    h: jax.Array   # (B, d)
+    m: jax.Array   # (B, d)
+
+    @staticmethod
+    def spec(dp=("pod", "data")):
+        # replicated over `model`: the recurrence consumes the full h vector
+        s = P(dp, None)
+        return SLSTMState(c=s, n=s, h=s, m=s)
+
+
+def init_slstm_state(cfg, batch: int, d: int) -> SLSTMState:
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, d), NEG, jnp.float32))
+
+
+def _slstm_step(p, xi, xf, xz, xo, st: SLSTMState):
+    """One recurrence step; x* are precomputed input projections (B, d)."""
+    h = st.h
+    i_pre = xi + jnp.einsum("bd,do->bo", h, p["r_i"]["w"].astype(jnp.float32))
+    f_pre = xf + jnp.einsum("bd,do->bo", h, p["r_f"]["w"].astype(jnp.float32))
+    z_pre = xz + jnp.einsum("bd,do->bo", h, p["r_z"]["w"].astype(jnp.float32))
+    o_pre = xo + jnp.einsum("bd,do->bo", h, p["r_o"]["w"].astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + st.m, i_pre)
+    i_t = jnp.exp(i_pre - m_new)
+    f_t = jnp.exp(logf + st.m - m_new)
+    c_new = f_t * st.c + i_t * jnp.tanh(z_pre)
+    n_new = f_t * st.n + i_t
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c=c_new, n=n_new, h=h_new, m=m_new)
+
+
+def _slstm_inputs(p, x):
+    xi = apply_dense(p["w_i"], x).astype(jnp.float32)
+    xf = apply_dense(p["w_f"], x).astype(jnp.float32)
+    xz = apply_dense(p["w_z"], x).astype(jnp.float32)
+    xo = apply_dense(p["w_o"], x).astype(jnp.float32)
+    return xi, xf, xz, xo
+
+
+# --- custom-VJP recurrence core -------------------------------------------
+#
+# Autodiff of the timestep scan accumulates the recurrent-weight gradient in
+# the scan carry; under DP sharding each step's contribution is partial over
+# the batch axis, so SPMD inserts an all-reduce of four (d, d) gradients PER
+# TIMESTEP (xlstm train_4k: 16 MB x 4096 steps x 12 units x 4 microbatches
+# = 3.3 TB of ICI per step; §Perf iter 3c). The custom VJP instead emits the
+# per-step pre-activation cotangents as scan outputs and contracts dR =
+# h_prev^T @ d_pre ONCE over the whole sequence — a single all-reduce.
+
+def _gate_step(rs, pres, st):
+    """(i_pre, f_pre, z_pre, o_pre) + state -> new state. rs unused here;
+    pres already include the recurrent contribution."""
+    i_pre, f_pre, z_pre, o_pre = pres
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + st.m, i_pre)
+    i_t = jnp.exp(i_pre - m_new)
+    f_t = jnp.exp(logf + st.m - m_new)
+    c_new = f_t * st.c + i_t * jnp.tanh(z_pre)
+    n_new = f_t * st.n + i_t
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c=c_new, n=n_new, h=h_new, m=m_new)
+
+
+def _slstm_scan_fwd(rs, xs, st0):
+    """rs: (Ri, Rf, Rz, Ro) f32 (d, d); xs: (xi, xf, xz, xo) each (B, S, d)
+    f32. Returns hs (B, S, d) f32 + residuals."""
+    def body(st, xt):
+        pres = tuple(x + st.h @ r for x, r in zip(xt, rs))
+        new = _gate_step(rs, pres, st)
+        return new, (st, new.h)
+    xs_t = tuple(jnp.moveaxis(x, 1, 0) for x in xs)          # (S, B, d)
+    _, (prev_states, hs) = jax.lax.scan(body, st0, xs_t)
+    return jnp.moveaxis(hs, 0, 1), (rs, xs_t, prev_states)
+
+
+@jax.custom_vjp
+def _slstm_core(rs, xs, st0):
+    hs, _ = _slstm_scan_fwd(rs, xs, st0)
+    return hs
+
+
+def _slstm_core_fwd(rs, xs, st0):
+    hs, res = _slstm_scan_fwd(rs, xs, st0)
+    return hs, res
+
+
+def _slstm_core_bwd(res, g_hs):
+    rs, xs_t, prev_states = res
+    g_hs_t = jnp.moveaxis(g_hs, 1, 0)                        # (S, B, d)
+    rs_T = tuple(r.T for r in rs)
+    zero = jax.tree.map(jnp.zeros_like, jax.tree.map(lambda x: x[0], prev_states))
+
+    def bwd_body(carry, step_res):
+        d_state = carry                                       # grads wrt state_t
+        st_prev, xt, g_h = step_res
+
+        def fwd_t(h_prev, c_prev, n_prev, m_prev, xt_):
+            stp = SLSTMState(c=c_prev, n=n_prev, h=h_prev, m=m_prev)
+            pres = tuple(x + h_prev @ r for x, r in zip(xt_, rs))
+            new = _gate_step(rs, pres, stp)
+            # also return pres so we can capture their cotangents
+            return new
+
+        d_state = SLSTMState(c=d_state.c, n=d_state.n,
+                             h=d_state.h + g_h, m=d_state.m)
+        # vjp wrt (h_prev, c_prev, n_prev, m_prev, xt); R handled via d_pre
+        # below: express pres-dependence through xt cotangent (same shape).
+        _, vjp_fn = jax.vjp(
+            lambda hp, cp, np_, mp, xt_: fwd_t(hp, cp, np_, mp, xt_),
+            st_prev.h, st_prev.c, st_prev.n, st_prev.m, xt)
+        dh_p, dc_p, dn_p, dm_p, d_pre = vjp_fn(d_state)
+        # recurrent path: h_prev also feeds pres via R — that part of dh_p is
+        # already included because fwd_t recomputes pres from h_prev.
+        new_carry = SLSTMState(c=dc_p, n=dn_p, h=dh_p, m=dm_p)
+        return new_carry, d_pre
+
+    _, d_pres_t = jax.lax.scan(bwd_body, zero,
+                               (prev_states, xs_t, g_hs_t), reverse=True)
+    # d_pres_t: 4 x (S, B, d). Weight grads: ONE contraction over (S, B).
+    h_prev_t = prev_states.h                                  # (S, B, d)
+    d_rs = tuple(jnp.einsum("sbd,sbe->de", h_prev_t, dp) for dp in d_pres_t)
+    d_xs = tuple(jnp.moveaxis(dp, 0, 1) for dp in d_pres_t)   # (B, S, d)
+    return d_rs, d_xs, zero
+
+
+_slstm_core.defvjp(_slstm_core_fwd, _slstm_core_bwd)
+
+
+def slstm_train(p, cfg, x, d: int):
+    """Sequential scan over time. x: (B, S, d)."""
+    b, s, _ = x.shape
+    xs = _slstm_inputs(p, x)
+    rs = tuple(p[f"r_{g}"]["w"].astype(jnp.float32) for g in ("i", "f", "z", "o"))
+    hs = _slstm_core(rs, xs, init_slstm_state(cfg, b, d))
+    return apply_dense(p["out"], hs.astype(x.dtype))
+
+
+def slstm_decode(p, cfg, x, state: SLSTMState, d: int):
+    xi, xf, xz, xo = _slstm_inputs(p, x[:, 0])
+    st = _slstm_step(p, xi, xf, xz, xo, state)
+    return apply_dense(p["out"], st.h.astype(x.dtype))[:, None, :], st

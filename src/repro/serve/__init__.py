@@ -1,0 +1,1 @@
+from .knn_prefix_cache import KNNPrefixCache, simhash_sketch  # noqa: F401

@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, opt_specs  # noqa: F401
+from .step import make_train_step, TrainConfig  # noqa: F401

@@ -1,0 +1,117 @@
+"""Train step factory: grad accumulation, optimizer, optional error-feedback
+gradient compression — built to be lowered with pjit on the production mesh.
+
+Microbatching via ``lax.scan`` serves two purposes: activation memory (only
+one microbatch's activations are live) and compute/communication overlap —
+XLA's latency-hiding scheduler overlaps microbatch i+1's compute with the
+gradient reduce-scatter of microbatch i when grads are accumulated in a
+scan carry (the canonical MaxText pattern).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import models
+from ..distributed.compression import EFState, ef_compress_grads, ef_init
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update, opt_specs
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    n_microbatches: int = 1
+    grad_compression: bool = False     # error-feedback int8 on the DP path
+    remat: bool = True
+    # --- perf-iteration knobs (EXPERIMENTS.md §Perf) ---
+    gather_weights_once: bool = False  # hoist the FSDP weight all-gather out
+    #   of the microbatch loop: one AG per step instead of one per microbatch
+    #   (trades HBM for ICI; only viable when full bf16 weights fit per chip)
+    moments_bf16: bool = False         # AdamW m/v in bf16: halves opt-state
+    #   HBM and its read/write traffic (stochastic-rounding-free variant;
+    #   convergence impact measured in tests)
+    grad_accum_bf16: bool = False      # accumulate microbatch grads in bf16
+    remat_policy: str | None = None    # None | "save_tp" (§Perf iter 4b)
+
+
+def _unshard_dp(params, pspecs):
+    """Force params to be replicated over the DP axes (keep TP sharding) —
+    a single all-gather at the step boundary."""
+    from jax.sharding import PartitionSpec as P
+    from ..models.sharding import constrain
+
+    def strip(sp):
+        return [None if (a in ("pod", "data") or
+                         (isinstance(a, (tuple, list)) and
+                          set(a) & {"pod", "data"})) else a for a in sp]
+
+    def one(x, sp):
+        axes = strip(sp) + [None] * (x.ndim - len(sp))
+        return constrain(x, *axes[:x.ndim])
+
+    return jax.tree.map(one, params, pspecs)
+
+
+def make_train_step(cfg, tcfg: TrainConfig):
+    """Returns step(train_state, batch) -> (train_state, metrics).
+
+    train_state = (params, opt_state, ef_state|None)."""
+    loss_fn = models.train_loss(cfg, remat_policy=tcfg.remat_policy)
+    acc_dtype = jnp.bfloat16 if tcfg.grad_accum_bf16 else jnp.float32
+
+    def compute_grads(params, batch):
+        if tcfg.gather_weights_once:
+            _, pspecs = models.abstract_params(cfg)
+            params = _unshard_dp(params, pspecs)
+        if tcfg.n_microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        nm = tcfg.n_microbatches
+        b = batch["tokens"].shape[0]
+        assert b % nm == 0, (b, nm)
+
+        def micro(c, mb):
+            loss_acc, g_acc = c
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (loss_acc + l,
+                    jax.tree.map(lambda a, x: a + x.astype(acc_dtype), g_acc, g)), None
+
+        mbs = jax.tree.map(lambda x: x.reshape(nm, b // nm, *x.shape[1:]), batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+        (loss, grads), _ = jax.lax.scan(micro, (jnp.float32(0.0), zero), mbs)
+        inv = 1.0 / nm
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def step(state, batch):
+        params, opt_state, ef = state
+        loss, grads = compute_grads(params, batch)
+        if tcfg.grad_compression:
+            grads, ef = ef_compress_grads(grads, ef)
+        params, opt_state, metrics = adamw_update(tcfg.opt, grads, opt_state, params)
+        metrics["loss"] = loss
+        return (params, opt_state, ef), metrics
+
+    return step
+
+
+def init_train_state(cfg, tcfg: TrainConfig, rng):
+    params_sp = models.init_params(cfg, rng)
+    params, _ = models.split(params_sp)
+    opt_state = adamw_init(params, jnp.bfloat16 if tcfg.moments_bf16
+                           else jnp.float32)
+    ef = ef_init(params) if tcfg.grad_compression else None
+    return (params, opt_state, ef)
+
+
+def train_state_specs(cfg, tcfg: TrainConfig):
+    _, pspecs = models.abstract_params(cfg)
+    ospecs = opt_specs(pspecs)
+    efspecs = EFState(error=pspecs) if tcfg.grad_compression else None
+    return (pspecs, ospecs, efspecs)
+
+
+def abstract_train_state(cfg, tcfg: TrainConfig):
+    """ShapeDtypeStruct train state (no allocation) for the dry-run."""
+    return jax.eval_shape(lambda: init_train_state(cfg, tcfg, jax.random.key(0)))

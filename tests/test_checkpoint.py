@@ -1,0 +1,67 @@
+"""Checkpoint manager: atomic publish, integrity, retention, restore."""
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, save_checkpoint, restore_checkpoint
+from repro.checkpoint.manager import latest_step
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (8, 4)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": jnp.float32(3.5)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 3, t)
+    restored = restore_checkpoint(tmp_path, 3, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_integrity_check_detects_corruption(tmp_path):
+    t = _tree()
+    path = save_checkpoint(tmp_path, 1, t)
+    victim = sorted(path.glob("leaf_*.npy"))[0]
+    raw = bytearray(victim.read_bytes())
+    raw[-1] ^= 0xFF
+    victim.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="integrity"):
+        restore_checkpoint(tmp_path, 1, t)
+
+
+def test_atomic_publish_no_tmp_left(tmp_path):
+    save_checkpoint(tmp_path, 2, _tree())
+    assert not any(p.name.startswith(".tmp") for p in tmp_path.iterdir())
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s), blocking=True)
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+    assert mgr.latest() == 4
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(7, _tree(7))
+    mgr.wait()
+    assert latest_step(tmp_path) == 7
+    step, restored = mgr.restore_latest(_tree(7))
+    assert step == 7
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    save_checkpoint(tmp_path, 5, _tree())
+    with pytest.raises(AssertionError):
+        restore_checkpoint(tmp_path, 5, {"only": jnp.zeros(3)})

@@ -1,0 +1,53 @@
+"""End-to-end engine behaviour (paper §IV): brute force is exact; BitBound &
+folding trade recall per Table I / Fig 2; work scales down with cutoff."""
+import numpy as np
+
+from repro.core import (BruteForceEngine, BitBoundFoldingEngine, recall_at_k)
+
+
+def test_bruteforce_exact(small_db, queries, brute_truth):
+    s, true_ids = brute_truth
+    eng = BruteForceEngine(small_db)
+    ids, vals = eng.search(queries, 20)
+    expect = np.take_along_axis(s, true_ids, axis=1)
+    np.testing.assert_allclose(vals, expect, rtol=1e-6)
+    assert recall_at_k(ids, true_ids) == 1.0
+
+
+def test_bitbound_pure_recall_high(small_db, queries, brute_truth):
+    """m=1 (no folding): only the Eq.2 prune is active — misses are only
+    true neighbours below the cutoff."""
+    _, true_ids = brute_truth
+    eng = BitBoundFoldingEngine(small_db, cutoff=0.2, m=1)
+    ids, _ = eng.search(queries, 20)
+    assert recall_at_k(ids, true_ids) >= 0.95
+
+
+def test_scanned_work_decreases_with_cutoff(small_db, queries):
+    scans = []
+    for cutoff in (0.2, 0.5, 0.8):
+        eng = BitBoundFoldingEngine(small_db, cutoff=cutoff, m=1)
+        eng.search(queries, 10)
+        scans.append(eng.scanned(len(queries)))
+    assert scans[0] >= scans[1] >= scans[2]
+    assert scans[2] < scans[0]
+
+
+def test_two_stage_folding_recall(small_db, queries, brute_truth):
+    """Paper Table I trend: scheme-1 folding with the k_r1 rescore keeps
+    accuracy high through m=8, then degrades at m=32."""
+    _, true_ids = brute_truth
+    recalls = {}
+    for m in (1, 4, 32):
+        eng = BitBoundFoldingEngine(small_db, cutoff=0.0, m=m)
+        ids, _ = eng.search(queries, 20)
+        recalls[m] = recall_at_k(ids, true_ids)
+    assert recalls[1] == 1.0
+    assert recalls[4] >= 0.9
+    assert recalls[32] <= recalls[4]
+
+
+def test_self_query_always_found(small_db, queries):
+    eng = BitBoundFoldingEngine(small_db, cutoff=0.8, m=2)
+    ids, vals = eng.search(queries, 5)
+    assert (vals[:, 0] >= 1.0 - 1e-6).all()

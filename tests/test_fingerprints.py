@@ -1,0 +1,51 @@
+"""Property tests for packed fingerprints and Tanimoto similarity."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (pack_bits, unpack_bits, popcount, tanimoto,
+                        batched_tanimoto_scores)
+
+bits_arrays = st.integers(1, 8).flatmap(
+    lambda words: st.lists(
+        st.lists(st.integers(0, 1), min_size=words * 32, max_size=words * 32),
+        min_size=1, max_size=6))
+
+
+@given(bits_arrays)
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(rows):
+    bits = np.asarray(rows, dtype=np.uint8)
+    packed = pack_bits(bits)
+    assert packed.dtype == np.uint32
+    np.testing.assert_array_equal(unpack_bits(packed), bits)
+
+
+@given(bits_arrays)
+@settings(max_examples=50, deadline=None)
+def test_popcount_matches_bit_sum(rows):
+    bits = np.asarray(rows, dtype=np.uint8)
+    packed = jnp.asarray(pack_bits(bits))
+    np.testing.assert_array_equal(np.asarray(popcount(packed)),
+                                  bits.sum(axis=1))
+
+
+@given(st.integers(1, 4), st.data())
+@settings(max_examples=50, deadline=None)
+def test_tanimoto_matches_set_formula(words, data):
+    n = words * 32
+    a = np.asarray(data.draw(st.lists(st.integers(0, 1), min_size=n, max_size=n)), np.uint8)
+    b = np.asarray(data.draw(st.lists(st.integers(0, 1), min_size=n, max_size=n)), np.uint8)
+    inter = int(np.sum(a & b))
+    union = int(np.sum(a | b))
+    expect = inter / union if union else 0.0
+    got = float(tanimoto(jnp.asarray(pack_bits(a)), jnp.asarray(pack_bits(b))))
+    assert abs(got - expect) < 1e-6
+
+
+def test_tanimoto_properties(small_db):
+    db = jnp.asarray(small_db[:100])
+    s = np.asarray(batched_tanimoto_scores(db, db))
+    assert (s >= 0).all() and (s <= 1.0 + 1e-6).all()
+    np.testing.assert_allclose(s, s.T, rtol=1e-6)          # symmetry
+    np.testing.assert_allclose(np.diag(s), 1.0, rtol=1e-6)  # self-similarity

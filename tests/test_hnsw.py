@@ -1,0 +1,93 @@
+"""HNSW: build invariants + accelerated search recall."""
+import numpy as np
+import pytest
+
+from repro.core import hnsw as hn
+from repro.core import HNSWEngine, recall_at_k
+from repro.data.molecules import SyntheticConfig, synthetic_fingerprints, queries_from_db
+
+
+@pytest.fixture(scope="module")
+def tiny_index():
+    db = synthetic_fingerprints(SyntheticConfig(n=800, seed=3))
+    return db, hn.build_hnsw(db, m=8, ef_construction=40, seed=0)
+
+
+def test_degree_bounds(tiny_index):
+    db, idx = tiny_index
+    assert idx.base_adj.shape == (800, 16)           # 2M at base
+    # no self-loops, ids in range
+    for i in range(800):
+        row = idx.base_adj[i]
+        valid = row[row >= 0]
+        assert (valid != i).all()
+        assert (valid < 800).all()
+    for l, adj in enumerate(idx.level_adj, start=1):
+        assert adj.shape[1] == idx.m
+
+
+def test_layers_nested(tiny_index):
+    """Every node at level l also exists at all lower levels (hierarchy)."""
+    db, idx = tiny_index
+    prev = None
+    for l in range(len(idx.level_nodes), 0, -1):
+        nodes = set(idx.level_nodes[l - 1].tolist())
+        if prev is not None:
+            assert prev <= nodes
+        prev = nodes
+
+
+def test_entry_point_at_top(tiny_index):
+    db, idx = tiny_index
+    if idx.max_level > 0:
+        assert idx.entry_point in set(idx.level_nodes[-1].tolist())
+
+
+def test_base_layer_connected_enough(tiny_index):
+    """BFS from the entry point reaches nearly every node (the paper's
+    long-range links keep the graph navigable)."""
+    db, idx = tiny_index
+    seen = {int(idx.entry_point)}
+    frontier = [int(idx.entry_point)]
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for v in idx.base_adj[u]:
+                v = int(v)
+                if v >= 0 and v not in seen:
+                    seen.add(v)
+                    nxt.append(v)
+        frontier = nxt
+    assert len(seen) >= 0.95 * idx.n
+
+
+def test_search_recall_vs_bruteforce(tiny_index):
+    db, idx = tiny_index
+    q = queries_from_db(db, 16, seed=5)
+    eng = HNSWEngine(db, index=idx, ef_search=64)
+    ids, sims = eng.search(q, 10)
+    # oracle
+    import jax.numpy as jnp
+    from repro.core import batched_tanimoto_scores
+    s = np.asarray(batched_tanimoto_scores(jnp.asarray(q), jnp.asarray(db)))
+    true = np.argsort(-s, axis=1, kind="stable")[:, :10]
+    rec = recall_at_k(ids, true)
+    assert rec >= 0.8, rec
+    # self-query must find itself (similarity 1)
+    assert (sims[:, 0] >= 1.0 - 1e-6).all()
+
+
+def test_recall_increases_with_ef(tiny_index):
+    db, idx = tiny_index
+    q = queries_from_db(db, 16, seed=6)
+    import jax.numpy as jnp
+    from repro.core import batched_tanimoto_scores
+    s = np.asarray(batched_tanimoto_scores(jnp.asarray(q), jnp.asarray(db)))
+    true = np.argsort(-s, axis=1, kind="stable")[:, :10]
+    eng = HNSWEngine(db, index=idx)
+    recs = []
+    for ef in (10, 40, 120):
+        ids, _ = eng.search(q, 10, ef=ef)
+        recs.append(recall_at_k(ids, true))
+    assert recs[-1] >= recs[0] - 0.02, recs
+    assert recs[-1] >= 0.85, recs

@@ -1,0 +1,49 @@
+"""KNN prefix cache: the paper's engine applied to LM serving."""
+import numpy as np
+
+from repro.serve import KNNPrefixCache, simhash_sketch
+
+
+def test_sketch_similarity_tracks_overlap():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1000, 64)
+    b = a.copy()
+    b[48:] = rng.integers(0, 1000, 16)        # 75% shared prefix
+    c = rng.integers(0, 1000, 64)             # unrelated
+    from repro.core import tanimoto, pack_bits
+    import jax.numpy as jnp
+    sa, sb, sc = (jnp.asarray(simhash_sketch(x)) for x in (a, b, c))
+    sim_ab = float(tanimoto(sa, sb))
+    sim_ac = float(tanimoto(sa, sc))
+    assert sim_ab > 0.5 > sim_ac
+    assert float(tanimoto(sa, sa)) == 1.0
+
+
+def test_cache_hit_on_shared_prefix():
+    rng = np.random.default_rng(1)
+    cache = KNNPrefixCache(sim_threshold=0.5, min_prefix=8)
+    base = rng.integers(0, 1000, 100)
+    cache.insert(base, payload="kv_base")
+    # same conversation, longer continuation
+    query = np.concatenate([base[:80], rng.integers(0, 1000, 30)])
+    payload, reuse = cache.lookup(query)
+    assert payload == "kv_base"
+    assert reuse == 80
+    assert cache.hits == 1
+
+
+def test_cache_miss_on_unrelated_prompt():
+    rng = np.random.default_rng(2)
+    cache = KNNPrefixCache(sim_threshold=0.5, min_prefix=8)
+    cache.insert(rng.integers(0, 1000, 100), payload="kv")
+    payload, reuse = cache.lookup(rng.integers(0, 1000, 100))
+    assert payload is None and reuse == 0
+
+
+def test_capacity_eviction():
+    rng = np.random.default_rng(3)
+    cache = KNNPrefixCache(capacity=4)
+    for i in range(8):
+        cache.insert(rng.integers(0, 1000, 32), payload=i)
+    assert len(cache._sketches) == 4
+    assert cache._payloads == [4, 5, 6, 7]

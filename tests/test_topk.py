@@ -1,0 +1,60 @@
+"""Streaming top-k and register-array priority queue properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topk import (streaming_topk, pq_make, pq_insert_max,
+                             pq_pop_max, pq_worst_max)
+
+floats = st.floats(-1e6, 1e6, allow_nan=False, width=32)
+
+
+@given(st.lists(floats, min_size=1, max_size=300), st.integers(1, 16),
+       st.sampled_from([4, 16, 64]))
+@settings(max_examples=60, deadline=None)
+def test_streaming_topk_matches_sort(xs, k, tile):
+    scores = jnp.asarray(np.asarray(xs, np.float32))
+    vals, idxs = streaming_topk(scores, k, tile=tile)
+    vals, idxs = np.asarray(vals), np.asarray(idxs)
+    expect = np.sort(np.asarray(xs, np.float32))[::-1][:k]
+    got = vals[:min(k, len(xs))]
+    np.testing.assert_allclose(got, expect[:len(got)], rtol=1e-6)
+    # returned indices actually point at the returned values
+    for v, i in zip(vals, idxs):
+        if i >= 0 and np.isfinite(v):
+            assert abs(xs[i] - v) < 1e-3
+
+
+@given(st.lists(st.tuples(floats, st.integers(0, 10_000)), min_size=1,
+                max_size=60), st.integers(1, 12))
+@settings(max_examples=60, deadline=None)
+def test_pq_keeps_best_k(items, cap):
+    pq = pq_make(cap, max_heap=True)
+    for s, pay in items:
+        pq = pq_insert_max(pq, jnp.float32(s), jnp.int32(pay))
+    scores = np.asarray(pq.scores)
+    # sorted descending
+    valid = scores[np.isfinite(scores)]
+    assert (np.diff(valid) <= 1e-6).all()
+    expect = np.sort(np.asarray([s for s, _ in items], np.float32))[::-1][:cap]
+    np.testing.assert_allclose(valid, expect[:len(valid)], rtol=1e-5, atol=1e-5)
+
+
+def test_pq_pop_order():
+    pq = pq_make(4, max_heap=True)
+    for s in [0.2, 0.9, 0.5, 0.7, 0.1]:
+        pq = pq_insert_max(pq, jnp.float32(s), jnp.int32(int(s * 10)))
+    out = []
+    for _ in range(4):
+        s, p, pq = pq_pop_max(pq)
+        out.append(float(s))
+    assert out == sorted(out, reverse=True)
+    assert abs(out[0] - 0.9) < 1e-6
+
+
+def test_pq_worst_tracks_kth():
+    pq = pq_make(3, max_heap=True)
+    assert not np.isfinite(float(pq_worst_max(pq)))
+    for s in [0.3, 0.6, 0.9]:
+        pq = pq_insert_max(pq, jnp.float32(s), jnp.int32(0))
+    assert abs(float(pq_worst_max(pq)) - 0.3) < 1e-6
