@@ -1,6 +1,14 @@
 """Paper Fig. 2: BitBound pruned search fraction & speedup vs similarity
-cutoff — measured on the index AND predicted by the Gaussian model (Eq. 3)."""
+cutoff — measured on the index AND predicted by the Gaussian model (Eq. 3).
+
+``--backend`` selects the engine path: "numpy" (host reference loop) or
+"tpu" (device-resident two-stage pipeline; interpret-mode Pallas off-TPU).
+Both paths emit rows with the same JSON schema, distinguished by the
+``backend`` field, so results are directly comparable.
+"""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -8,27 +16,46 @@ from repro.core import BitBoundFoldingEngine
 from repro.core import bitbound as bb
 from .common import K, emit, get_db, get_queries
 
+CUTOFFS = (0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
 
-def run(n_db=60_000, n_queries=64):
+
+def run(n_db=60_000, n_queries=64, backend="numpy"):
     db = get_db(n_db)
     queries = get_queries(db, n_queries)
     idx = bb.build_index(np.asarray(db))
     rows = []
-    for cutoff in (0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9):
-        eng = BitBoundFoldingEngine(db, cutoff=cutoff, m=1)
+    for cutoff in CUTOFFS:
+        eng = BitBoundFoldingEngine(db, cutoff=cutoff, m=1, backend=backend)
         eng.search(queries, K)
         frac = eng.scanned(n_queries) / (n_queries * n_db)
         model_frac = bb.expected_search_fraction(idx.mu, idx.sigma, cutoff)
         rows.append({
             "name": f"bitbound_Sc{cutoff}", "cutoff": cutoff,
+            "backend": backend,
             "measured_fraction": round(frac, 4),
             "measured_speedup": round(1.0 / max(frac, 1e-9), 2),
             "gaussian_model_fraction": round(model_frac, 4),
             "gaussian_model_speedup": round(1.0 / model_frac, 2),
         })
-    emit("fig2_bitbound_speedup", rows)
+    suffix = "" if backend == "numpy" else f"_{backend}"
+    emit(f"fig2_bitbound_speedup{suffix}", rows)
     return rows
 
 
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "jnp", "tpu"])
+    ap.add_argument("--n-db", type=int, default=None,
+                    help="database size (default 60k numpy / 20k device)")
+    ap.add_argument("--n-queries", type=int, default=None)
+    args = ap.parse_args()
+    # interpret-mode Pallas is functional, not fast: default to a smaller DB
+    # on the device paths so the sweep finishes in CLI time off-TPU
+    n_db = args.n_db or (60_000 if args.backend == "numpy" else 20_000)
+    n_queries = args.n_queries or (64 if args.backend == "numpy" else 16)
+    run(n_db=n_db, n_queries=n_queries, backend=args.backend)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -5,8 +5,14 @@
 * *projected* TPU-v5e throughput from the roofline: the fused kernel is
   memory-bound (DESIGN.md §2), so QPS ≈ HBM_bw / bytes_per_query — the
   analogue of the paper's 57.6 GB/s → 450 Mcpd/s engine accounting.
+
+``--backend`` runs the BitBound+folding sweep through either the numpy
+reference loop or the device-resident ``search_tpu`` two-stage pipeline;
+rows share one JSON schema with a ``backend`` field.
 """
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -24,7 +30,7 @@ def projected_qps(n_db: int, words: int, scan_fraction: float = 1.0,
     return bw / bytes_per_query
 
 
-def run(n_db=60_000, n_queries=32):
+def run(n_db=60_000, n_queries=32, backend="numpy"):
     db = get_db(n_db)
     queries = get_queries(db, n_queries)
     rows = []
@@ -33,7 +39,8 @@ def run(n_db=60_000, n_queries=32):
     dt = timeit(lambda: eng.search(queries, K))
     qps = n_queries / dt
     rows.append({
-        "name": "bruteforce", "us_per_call": round(dt / n_queries * 1e6, 1),
+        "name": "bruteforce", "backend": "jnp",
+        "us_per_call": round(dt / n_queries * 1e6, 1),
         "host_qps": round(qps, 1),
         "host_compounds_per_s": round(qps * n_db / 1e6, 1),
         "tpu_projected_qps_1chip": round(projected_qps(1_941_405, 32), 1),
@@ -42,12 +49,14 @@ def run(n_db=60_000, n_queries=32):
 
     for m in (1, 2, 4, 8):
         for cutoff in (0.6, 0.8):
-            eng = BitBoundFoldingEngine(db, cutoff=cutoff, m=m)
+            eng = BitBoundFoldingEngine(db, cutoff=cutoff, m=m,
+                                        backend=backend)
             dt = timeit(lambda: eng.search(queries, K), repeats=2)
             frac = eng.scanned(n_queries) / (n_queries * n_db)
             qps = n_queries / dt
             rows.append({
                 "name": f"bitbound_fold_m{m}_Sc{cutoff}",
+                "backend": backend,
                 "us_per_call": round(dt / n_queries * 1e6, 1),
                 "host_qps": round(qps, 1),
                 "scan_fraction": round(frac, 4),
@@ -55,9 +64,23 @@ def run(n_db=60_000, n_queries=32):
                 "tpu_projected_qps_1chip": round(projected_qps(
                     1_941_405, 32 / m, frac), 1),
             })
-    emit("fig7_exhaustive_qps", rows)
+    suffix = "" if backend == "numpy" else f"_{backend}"
+    emit(f"fig7_exhaustive_qps{suffix}", rows)
     return rows
 
 
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "jnp", "tpu"])
+    ap.add_argument("--n-db", type=int, default=None,
+                    help="database size (default 60k numpy / 20k device)")
+    ap.add_argument("--n-queries", type=int, default=None)
+    args = ap.parse_args()
+    n_db = args.n_db or (60_000 if args.backend == "numpy" else 20_000)
+    n_queries = args.n_queries or (32 if args.backend == "numpy" else 8)
+    run(n_db=n_db, n_queries=n_queries, backend=args.backend)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -59,6 +59,34 @@ def bound_range(index: BitBoundIndex, query_count: jax.Array, cutoff: float):
     return lo, hi
 
 
+def bound_range_np(counts_sorted: np.ndarray, query_counts: np.ndarray,
+                   cutoff: float):
+    """Host-side batched Eq. 2: windows [lo, hi) for a whole query batch.
+
+    Numpy analogue of :func:`bound_range`; the engine uses it to size the
+    static kernel grid (a Python int) before dispatching to device. Note the
+    bound is evaluated in float64 here vs float32 on device, so for popcounts
+    landing exactly on the a/Sc boundary the two can differ by one count
+    value — both are valid Eq.2 windows, but don't cross-validate them
+    expecting bit-equality.
+    """
+    a = np.asarray(query_counts, dtype=np.float64)
+    lo_cnt = np.ceil(a * cutoff)
+    hi_cnt = np.floor(a / max(cutoff, 1e-6))
+    lo = np.searchsorted(counts_sorted, lo_cnt, side="left")
+    hi = np.searchsorted(counts_sorted, hi_cnt, side="right")
+    return lo.astype(np.int64), hi.astype(np.int64)
+
+
+def bucket_tiles(n_tiles: int, total_tiles: int) -> int:
+    """Round a tile-window size up to the next power of two (clamped to the
+    whole DB) — the engine compiles one kernel per bucket, so the number of
+    distinct compilations is O(log total_tiles) regardless of query mix."""
+    n_tiles = max(int(n_tiles), 1)
+    b = 1 << (n_tiles - 1).bit_length()
+    return min(b, max(int(total_tiles), 1))
+
+
 def aligned_range(lo, hi, tile: int, n: int):
     """Round the candidate range outward to tile boundaries (the engine scans
     whole HBM tiles; partial tiles are masked inside the kernel)."""

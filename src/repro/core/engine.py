@@ -6,15 +6,20 @@ Three engines, one per paper design point:
   scan+top-k path (on-the-fly engine; Pallas kernel when enabled, streaming
   jnp fallback otherwise).
 * :class:`BitBoundFoldingEngine` — exhaustive with Eq.2 popcount pruning and
-  2-stage modulo-OR folding.
+  2-stage modulo-OR folding; host-side numpy reference plus a fully
+  device-resident ``search_tpu`` path.
 * :class:`HNSWEngine` — approximate graph search.
 
-All engines share ``search(queries, k) -> (ids, sims)`` and report per-query
-work counters used by the benchmarks (candidates scanned, etc.).
+All engines share ``search(queries, k) -> (ids, sims)``, a ``backend=``
+selector choosing the execution path, and the work-counter contract
+``scanned(n_queries)``: the number of candidate fingerprints the engine
+scores for ``n_queries`` queries, extrapolated from the statistics of the
+most recent ``search`` batch (engines whose per-query work is input
+independent compute it in closed form). Before any search it is 0 for
+data-dependent engines.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 
 import jax
@@ -24,8 +29,16 @@ import numpy as np
 from . import bitbound as bb
 from . import folding as fl
 from . import hnsw as hn
-from .fingerprints import popcount, tanimoto_scores
+from .fingerprints import popcount, tanimoto_scores, batched_tanimoto_scores
 from .topk import streaming_topk
+
+
+def _kernels_available() -> bool:
+    try:
+        from ..kernels import ops  # noqa: F401
+        return True
+    except Exception:  # Pallas/Mosaic not importable on this install
+        return False
 
 
 def _brute_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array, k: int,
@@ -44,10 +57,20 @@ def _brute_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array, k: int,
 
 @dataclass
 class BruteForceEngine:
+    """Exhaustive scan. ``backend``: ``"tpu"`` = fused Pallas kernel
+    (interpret-mode off-TPU), ``"jnp"`` = streaming jnp path. The legacy
+    ``use_kernel`` flag maps onto the selector when ``backend`` is unset."""
     db: jax.Array
     use_kernel: bool = False
+    backend: str | None = None
 
     def __post_init__(self):
+        if self.backend is None:
+            self.backend = "tpu" if self.use_kernel else "jnp"
+        if self.backend not in ("jnp", "tpu"):
+            raise ValueError(f"BruteForceEngine backend must be 'jnp' or "
+                             f"'tpu', got {self.backend!r}")
+        self.use_kernel = self.backend == "tpu" and _kernels_available()
         self.db = jnp.asarray(self.db)
         self.db_cnt = popcount(self.db)
         self._search = jax.jit(
@@ -59,6 +82,7 @@ class BruteForceEngine:
         return np.asarray(ids), np.asarray(sims)
 
     def scanned(self, n_queries: int) -> int:
+        # per-query work is the whole DB regardless of the query batch
         return n_queries * self.db.shape[0]
 
 
@@ -67,29 +91,63 @@ class BitBoundFoldingEngine:
     """BitBound (Eq. 2) + 2-stage folding (paper §III-B, §IV-A).
 
     Stage 1 scans only the popcount-bounded range of the *folded* DB and keeps
-    k_r1 = k*m*log2(2m) candidates; stage 2 rescores them at full resolution.
-    ``cutoff`` is the similarity cutoff Sc. m=1 disables folding (pure
-    BitBound).
+    ``k_r1 = k*m*log2(2m)`` candidates; stage 2 rescores them at full
+    resolution. ``cutoff`` is the similarity cutoff Sc; ``m=1`` disables
+    folding (pure BitBound).
+
+    Two execution paths share the index:
+
+    * ``search_numpy`` — host-side reference with true variable-length Eq.2
+      ranges (one python loop per query). Exact semantics, used as the parity
+      oracle and for algorithmic speedup measurements.
+    * ``search_tpu`` — device-resident fixed-shape path: stage 1 runs the
+      scalar-prefetched row-window Pallas kernel over each query's Eq.2 tile
+      window of the folded DB (``kernels.ops.window_topk``), stage 2 gathers
+      the ``k_r1`` survivors and rescores at full resolution with a fused
+      top-k — one jitted function, no host round-trips, returning
+      ``(ids, sims, scanned)`` as device arrays. Window sizes are bucketed to
+      powers of two (``bitbound.bucket_tiles``) and one compiled function is
+      cached per ``(bucket, k)``, so recompilation is O(log n_tiles). When
+      Pallas is unavailable (or ``backend="jnp"``) stage 1 falls back to a
+      masked jnp scan with identical results.
+
+    ``backend`` selects what :meth:`search` runs: ``"numpy"`` (default,
+    reference), ``"tpu"`` (Pallas device path) or ``"jnp"`` (device path
+    without Pallas).
     """
     db: np.ndarray
     cutoff: float = 0.8
     m: int = 4
     scheme: int = 1
     use_kernel: bool = False
+    backend: str | None = None
 
     def __post_init__(self):
+        if self.backend is None:
+            self.backend = "tpu" if self.use_kernel else "numpy"
+        if self.backend not in ("numpy", "jnp", "tpu"):
+            raise ValueError(f"BitBoundFoldingEngine backend must be 'numpy', "
+                             f"'jnp' or 'tpu', got {self.backend!r}")
         self.index = bb.build_index(jnp.asarray(self.db))
         folded_np = fl.fold(np.asarray(self.index.db), self.m, self.scheme)
         self.folded = jnp.asarray(folded_np)
         self.folded_cnt = popcount(self.folded)
         self.full = self.index.db
         self.full_cnt = self.index.counts
+        self._counts_np = np.asarray(self.index.counts)
         self._last_scanned = 0
-        if self.use_kernel:
-            from ..kernels import ops as kops
-            self._kernel = kops
-        # jitted per-(range-bucket) stage-1 scan: bucket sizes are powers of 2
-        self._stage1_cache: dict[int, callable] = {}
+        self._last_n_queries = 0
+        # device path: jitted two-stage search per (window-bucket, k)
+        self._stage1_cache: dict[tuple[int, int], callable] = {}
+        self._device_state: dict | None = None
+
+    # -- dispatch -----------------------------------------------------------
+    def search(self, queries, k: int):
+        """Top-k per query via the configured backend -> (ids, sims) numpy."""
+        if self.backend in ("jnp", "tpu"):
+            ids, sims, _ = self.search_tpu(queries, k)
+            return np.asarray(ids), np.asarray(sims)
+        return self.search_numpy(queries, k)
 
     # -- host-side (variable-shape) reference path --------------------------
     def _np_scores(self, q: np.ndarray, db: np.ndarray, db_cnt: np.ndarray):
@@ -97,10 +155,10 @@ class BitBoundFoldingEngine:
         union = int(np.bitwise_count(q).sum()) + db_cnt.astype(np.int64) - inter
         return np.where(union > 0, inter / np.maximum(union, 1), 0.0)
 
-    def search(self, queries, k: int):
+    def search_numpy(self, queries, k: int):
         """Reference engine (numpy): true variable-range pruning, used for
-        wall-clock algorithmic speedup measurements. The fixed-shape TPU path
-        is `search_tpu`."""
+        wall-clock algorithmic speedup measurements and as the parity oracle
+        for the fixed-shape device path (`search_tpu`)."""
         queries = np.asarray(queries)
         full = np.asarray(self.full)
         full_cnt = np.asarray(self.full_cnt)
@@ -110,30 +168,141 @@ class BitBoundFoldingEngine:
         kr1 = fl.kr1_for(k, self.m)
         ids_out = np.full((len(queries), k), -1, dtype=np.int64)
         sims_out = np.zeros((len(queries), k), dtype=np.float32)
+        # one shared Eq.2 implementation with the device path — the m=1
+        # bit-for-bit parity contract depends on identical windows
+        a_all = np.bitwise_count(queries).sum(-1)
+        los, his = bb.bound_range_np(full_cnt, a_all, self.cutoff)
         scanned = 0
         for qi, q in enumerate(queries):
-            a = int(np.bitwise_count(q).sum())
-            lo_cnt = int(np.ceil(a * self.cutoff))
-            hi_cnt = int(np.floor(a / max(self.cutoff, 1e-6)))
-            lo = np.searchsorted(full_cnt, lo_cnt, side="left")
-            hi = np.searchsorted(full_cnt, hi_cnt, side="right")
+            lo, hi = los[qi], his[qi]
             if hi <= lo:
                 continue
             scanned += hi - lo
             qf = fl.fold(q[None], self.m, self.scheme)[0]
             s1 = self._np_scores(qf, folded[lo:hi], folded_cnt[lo:hi])
             kr1_eff = min(kr1, hi - lo)
-            cand = np.argpartition(-s1, kr1_eff - 1)[:kr1_eff] + lo
+            # stable sort, ties by ascending sorted-row index — the same
+            # deterministic order the device path's top_k produces
+            cand = np.argsort(-s1, kind="stable")[:kr1_eff] + lo
             s2 = self._np_scores(q, full[cand], full_cnt[cand])
             k_eff = min(k, len(cand))
             best = np.argsort(-s2, kind="stable")[:k_eff]
             ids_out[qi, :k_eff] = order[cand[best]]
             sims_out[qi, :k_eff] = s2[best]
         self._last_scanned = scanned
+        self._last_n_queries = len(queries)
         return ids_out, sims_out
 
+    # -- device-resident fixed-shape path -----------------------------------
+    def _ensure_device(self) -> dict:
+        if self._device_state is not None:
+            return self._device_state
+        kops = None
+        if self.backend != "jnp":
+            try:
+                from ..kernels import ops as kops_mod
+                kops = kops_mod
+            except Exception:  # Pallas unavailable: fall back to jnp stage 1
+                kops = None
+        n = self.full.shape[0]
+        if kops is not None:
+            tile = kops._pick_tile(n, None)
+        else:
+            tile = min(2048, max(128, 1 << (max(n - 1, 1).bit_length() - 1)))
+        total_tiles = (n + tile - 1) // tile
+        self._device_state = {"kops": kops, "tile": tile,
+                              "total_tiles": total_tiles}
+        return self._device_state
+
+    def _build_device_search(self, bucket: int, k: int):
+        """One jitted two-stage pipeline for windows of <= ``bucket`` tiles."""
+        state = self._ensure_device()
+        kops, tile = state["kops"], state["tile"]
+        n = self.full.shape[0]
+        m, scheme = self.m, self.scheme
+        k_stage1 = min(max(fl.kr1_for(k, m), k), n)
+        k_out = min(k, k_stage1)
+        folded, folded_cnt = self.folded, self.folded_cnt
+        full, full_cnt, order = self.full, self.full_cnt, self.index.order
+
+        def run(queries, lo_row, hi_row):
+            qf = fl.fold_jax(queries, m, scheme)
+            if kops is not None:
+                cand, s1 = kops.window_topk(qf, folded, folded_cnt, lo_row,
+                                            hi_row, k=k_stage1,
+                                            max_tiles=bucket, tile_n=tile)
+            else:
+                s = batched_tanimoto_scores(qf, folded, folded_cnt)
+                idx = jnp.arange(n)[None, :]
+                in_window = jnp.logical_and(idx >= lo_row[:, None],
+                                            idx < hi_row[:, None])
+                s = jnp.where(in_window, s, -jnp.inf)
+                s1, cand = jax.lax.top_k(s, k_stage1)
+                cand = jnp.where(jnp.isfinite(s1), cand, -1)
+            valid = cand >= 0
+            safe = jnp.clip(cand, 0, n - 1)
+            if m == 1:
+                # folded == full: stage-1 scores are already exact
+                vals, top = s1[:, :k_out], safe[:, :k_out]
+                ok = valid[:, :k_out]
+            else:
+                rows = full[safe]                       # (Q, k_r1, W) gather
+                q_cnt = popcount(queries)
+                inter = jnp.sum(jax.lax.population_count(
+                    queries[:, None, :] & rows).astype(jnp.int32), axis=-1)
+                union = q_cnt[:, None] + full_cnt[safe] - inter
+                s2 = jnp.where(union > 0,
+                               inter.astype(jnp.float32) /
+                               union.astype(jnp.float32), 0.0)
+                s2 = jnp.where(valid, s2, -jnp.inf)
+                vals, pos = jax.lax.top_k(s2, k_out)    # fused full-res top-k
+                top = jnp.take_along_axis(safe, pos, axis=1)
+                ok = jnp.isfinite(vals)
+            ids = jnp.where(ok, order[top], -1)
+            sims = jnp.where(ok, vals, 0.0).astype(jnp.float32)
+            if k_out < k:                               # k > N degenerate pad
+                pad = ((0, 0), (0, k - k_out))
+                ids = jnp.pad(ids, pad, constant_values=-1)
+                sims = jnp.pad(sims, pad)
+            scanned = jnp.sum(jnp.maximum(hi_row - lo_row, 0))
+            return ids, sims, scanned
+
+        return jax.jit(run)
+
+    def search_tpu(self, queries, k: int):
+        """Fixed-shape device path -> ``(ids, sims, scanned)`` jax arrays.
+
+        Host work is only window metadata (two searchsorteds per batch and
+        the power-of-two grid bucket); the folded scan, gather, rescore and
+        top-k all run inside one jitted function per ``(bucket, k)``.
+        """
+        state = self._ensure_device()
+        tile, total_tiles = state["tile"], state["total_tiles"]
+        queries = jnp.asarray(queries)
+        q_np = np.asarray(queries)
+        a = np.bitwise_count(q_np).sum(-1)
+        lo, hi = bb.bound_range_np(self._counts_np, a, self.cutoff)
+        n_tiles = np.where(hi > lo,
+                           (hi + tile - 1) // tile - lo // tile, 0)
+        bucket = bb.bucket_tiles(int(n_tiles.max(initial=0)), total_tiles)
+        if state["kops"] is None:
+            bucket = total_tiles  # jnp fallback scans full rows, one variant
+        key = (bucket, int(k))
+        fn = self._stage1_cache.get(key)
+        if fn is None:
+            fn = self._build_device_search(bucket, k)
+            self._stage1_cache[key] = fn
+        ids, sims, scanned = fn(queries, jnp.asarray(lo, jnp.int32),
+                                jnp.asarray(hi, jnp.int32))
+        self._last_scanned = scanned
+        self._last_n_queries = queries.shape[0]
+        return ids, sims, scanned
+
     def scanned(self, n_queries: int) -> int:
-        return self._last_scanned
+        if self._last_n_queries == 0:
+            return 0
+        per_batch = int(self._last_scanned)
+        return round(per_batch * n_queries / self._last_n_queries)
 
 
 @dataclass
@@ -156,16 +325,21 @@ class HNSWEngine:
             lambda q, k, ef: hn.search_hnsw(self._graph, q, k, ef),
             static_argnames=("k", "ef"))
         self._last_iters = 0
+        self._last_n_queries = 0
 
     def search(self, queries, k: int, ef: int | None = None):
         ef = ef or self.ef_search
         ids, sims, iters = self._jit_search(jnp.asarray(queries), k, ef)
         self._last_iters = int(np.asarray(iters).sum())
+        self._last_n_queries = int(jnp.asarray(queries).shape[0])
         return np.asarray(ids), np.asarray(sims)
 
     def scanned(self, n_queries: int) -> int:
         # each traversal iteration evaluates <= 2M neighbours
-        return self._last_iters * 2 * self.index.m
+        if self._last_n_queries == 0:
+            return 0
+        evals = self._last_iters * 2 * self.index.m
+        return round(evals * n_queries / self._last_n_queries)
 
 
 def recall_at_k(pred_ids: np.ndarray, true_ids: np.ndarray) -> float:

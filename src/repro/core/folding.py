@@ -71,6 +71,33 @@ def fold_scheme1_jax(words: jax.Array, m: int) -> jax.Array:
     return out
 
 
+def fold_scheme2_jax(words: jax.Array, m: int) -> jax.Array:
+    """Jit-traceable adjacent-OR fold (query path of the device engine).
+
+    Bit-level: unpack each uint32 word to its 32 bits, OR every m neighbouring
+    bits, repack. Matches :func:`fold_scheme2` exactly."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)    # (..., W, 32)
+    L = words.shape[-1] * WORD_BITS
+    bits = bits.reshape(*words.shape[:-1], L)
+    folded = bits.reshape(*words.shape[:-1], L // m, m).max(axis=-1)
+    out_words = folded.reshape(*words.shape[:-1], L // m // WORD_BITS, WORD_BITS)
+    weights = jnp.uint32(1) << shifts
+    return jnp.sum(out_words.astype(jnp.uint32) * weights, axis=-1,
+                   dtype=jnp.uint32)
+
+
+def fold_jax(words: jax.Array, m: int, scheme: int = 1) -> jax.Array:
+    """Jit-traceable :func:`fold` (both schemes), for on-device query folding."""
+    if m == 1:
+        return words
+    if scheme == 1:
+        return fold_scheme1_jax(words, m)
+    if scheme == 2:
+        return fold_scheme2_jax(words, m)
+    raise ValueError(f"unknown folding scheme {scheme}")
+
+
 def fold_scheme2(words: np.ndarray, m: int) -> np.ndarray:
     """Adjacent-OR fold: unpack, OR every m neighbouring bits, repack."""
     bits = unpack_bits(words)

@@ -92,6 +92,57 @@ def bitbound_topk(queries: jax.Array, db_sorted: jax.Array,
     return ids_sorted, vals
 
 
+@functools.partial(jax.jit, static_argnames=("k", "max_tiles", "tile_n", "n_valid"))
+def _window_topk_impl(queries, db_p, cnt_p, lo_tile, n_tiles, lo_row, hi_row,
+                      k: int, max_tiles: int, tile_n: int, n_valid: int):
+    return ktk.windowed_fused_topk(queries, db_p, cnt_p, lo_tile, n_tiles,
+                                   lo_row, hi_row, k=k, max_tiles=max_tiles,
+                                   n_valid=n_valid, tile_n=tile_n,
+                                   interpret=_interpret())
+
+
+def window_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
+                lo_row: jax.Array, hi_row: jax.Array, k: int,
+                max_tiles: int | None = None, tile_n: int | None = None):
+    """Fused KNN over a per-query row window [lo_row, hi_row) of ``db``.
+
+    Stage 1 of the two-stage engine: ``db`` is typically the *folded*
+    popcount-sorted database while the row bounds come from the Eq.2 window on
+    the full-resolution popcounts. Ids index into ``db``; empty slots are
+    id -1 / val -inf. Jit-compatible (callable from inside an enclosing jit)
+    when k/max_tiles/tile_n are static.
+
+    HARD PRECONDITION: ``max_tiles`` (the static grid extent) must cover the
+    largest window in the batch — a window spanning more tiles is silently
+    truncated to its first ``max_tiles`` tiles and rows beyond it are never
+    scored (no error, no marker). The engine guarantees this by bucketing
+    ``max_tiles`` to a power of two >= the batch's max window; other callers
+    must size it the same way (the row bounds are traced values, so this
+    cannot be validated here)."""
+    queries = jnp.asarray(queries)
+    db = jnp.asarray(db)
+    n = db.shape[0]
+    tile = _pick_tile(n, tile_n)
+    pad = (-n) % tile
+    db_p = jnp.pad(db, ((0, pad), (0, 0)))
+    cnt_p = jnp.pad(jnp.asarray(db_cnt, dtype=jnp.int32), (0, pad))
+    total_tiles = db_p.shape[0] // tile
+    if max_tiles is None:
+        max_tiles = total_tiles
+    max_tiles = max(min(max_tiles, total_tiles), 1)
+    lo_row = jnp.asarray(lo_row, dtype=jnp.int32)
+    hi_row = jnp.asarray(hi_row, dtype=jnp.int32)
+    lo_tile = lo_row // tile
+    n_tiles = jnp.where(hi_row > lo_row,
+                        (hi_row + tile - 1) // tile - lo_tile, 0)
+    n_tiles = jnp.clip(n_tiles, 0, max_tiles)
+    ids, vals = _window_topk_impl(queries, db_p, cnt_p, lo_tile, n_tiles,
+                                  lo_row, hi_row, k=k, max_tiles=max_tiles,
+                                  tile_n=tile, n_valid=n)
+    ids = jnp.where(jnp.isfinite(vals), ids, -1)
+    return ids, vals
+
+
 def bitcount(words: jax.Array) -> jax.Array:
     return ktk.bitcount(jnp.asarray(words), interpret=_interpret())
 

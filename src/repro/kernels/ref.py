@@ -45,5 +45,18 @@ def bitbound_topk_ref(queries: jax.Array, db_sorted: jax.Array,
     return ids.astype(jnp.int32), vals
 
 
+def window_topk_ref(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
+                    lo_row: jax.Array, hi_row: jax.Array, k: int):
+    """Oracle for the row-window kernel: rows outside [lo_row, hi_row) are
+    -inf (never returned); invalid slots come back as id -1."""
+    scores = tanimoto_scores_ref(queries, db, db_cnt)
+    idx = jnp.arange(db.shape[0])[None, :]
+    in_window = jnp.logical_and(idx >= lo_row[:, None], idx < hi_row[:, None])
+    scores = jnp.where(in_window, scores, -jnp.inf)
+    vals, ids = jax.lax.top_k(scores, k)
+    ids = jnp.where(jnp.isfinite(vals), ids, -1)
+    return ids.astype(jnp.int32), vals
+
+
 def bitcount_ref(words: jax.Array) -> jax.Array:
     return popcount(words)

@@ -229,6 +229,115 @@ def bitbound_fused_topk(queries: jax.Array, db_sorted: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# row-window fused kernel (stage 1 of the device-resident two-stage engine)
+# ---------------------------------------------------------------------------
+#
+# Same scalar-prefetched tile streaming as the BitBound kernel above, but the
+# valid region is an explicit per-query row interval [lo_row, hi_row) instead
+# of a popcount-vs-cutoff predicate. That is what the folded stage-1 scan
+# needs: the Eq.2 window is defined on *full-resolution* popcounts (the sort
+# key of the database), while the streamed tiles hold the *folded* prints —
+# the folded popcounts say nothing about window membership. Because the DB is
+# popcount-sorted, the row interval IS the Eq.2 set, exactly.
+
+def _window_body(lo_t_ref, nt_ref, lo_ref, hi_ref, q_ref, qcnt_ref, db_ref,
+                 dbcnt_ref, ids_ref, vals_ref, top_s, top_i,
+                 *, k: int, tile_n: int, max_tiles: int, n_valid: int):
+    qi = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        top_s[...] = jnp.full((1, k), NEG, jnp.float32)
+        top_i[...] = jnp.full((1, k), -1, jnp.int32)
+
+    active = t < nt_ref[qi]
+
+    @pl.when(active)
+    def _scan():
+        q = q_ref[0, :]
+        db = db_ref[...]
+        inter = jnp.sum(jax.lax.population_count(q[None, :] & db).astype(jnp.int32),
+                        axis=-1)
+        union = qcnt_ref[0] + dbcnt_ref[...] - inter
+        s = jnp.where(union > 0,
+                      inter.astype(jnp.float32) / union.astype(jnp.float32),
+                      jnp.float32(0.0))
+        idx = (lo_t_ref[qi] + t) * tile_n + jax.lax.iota(jnp.int32, tile_n)
+        in_window = jnp.logical_and(idx >= lo_ref[qi], idx < hi_ref[qi])
+        s = jnp.where(jnp.logical_and(in_window, idx < n_valid), s, NEG)
+        all_s = jnp.concatenate([top_s[0, :], s])
+        all_i = jnp.concatenate([top_i[0, :], idx])
+        new_s, pos = jax.lax.top_k(all_s, k)
+        top_s[0, :] = new_s
+        top_i[0, :] = all_i[pos]
+
+    @pl.when(t == max_tiles - 1)
+    def _emit():
+        vals_ref[0, :] = top_s[0, :]
+        ids_ref[0, :] = top_i[0, :]
+
+
+def windowed_fused_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
+                        lo_tile: jax.Array, n_tiles_q: jax.Array,
+                        lo_row: jax.Array, hi_row: jax.Array, k: int,
+                        max_tiles: int, n_valid: int,
+                        tile_n: int = DEFAULT_TILE_N, interpret: bool = True):
+    """Scan only rows [lo_row[q], hi_row[q]) of ``db`` for each query.
+
+    lo_tile, n_tiles_q: (Q,) int32 tile window covering the row interval;
+    lo_row, hi_row: (Q,) int32 exact row bounds (boundary rows of partially
+    covered tiles are masked). ``db`` may be the folded database while the
+    bounds come from the full-resolution popcount sort. Returns ids into the
+    (sorted) DB and similarity values; empty slots are id -1 / val -inf."""
+    q_n, w = queries.shape
+    n_pad = db.shape[0]
+    total_tiles = n_pad // tile_n
+    q_cnt = jnp.sum(jax.lax.population_count(queries).astype(jnp.int32), axis=-1)
+
+    def db_index(q, t, lo_t, nt, lo, hi):
+        blk = jnp.where(t < nt[q], lo_t[q] + t, lo_t[q])
+        return (jnp.minimum(blk, total_tiles - 1), 0)
+
+    def cnt_index(q, t, lo_t, nt, lo, hi):
+        blk = jnp.where(t < nt[q], lo_t[q] + t, lo_t[q])
+        return (jnp.minimum(blk, total_tiles - 1),)
+
+    body = functools.partial(_window_body, k=k, tile_n=tile_n,
+                             max_tiles=max_tiles, n_valid=n_valid)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(q_n, max_tiles),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda q, t, lo_t, nt, lo, hi: (q, 0)),
+            pl.BlockSpec((1,), lambda q, t, lo_t, nt, lo, hi: (q,)),
+            pl.BlockSpec((tile_n, w), db_index),
+            pl.BlockSpec((tile_n,), cnt_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda q, t, lo_t, nt, lo, hi: (q, 0)),
+            pl.BlockSpec((1, k), lambda q, t, lo_t, nt, lo, hi: (q, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.int32),
+        ],
+    )
+    out = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((q_n, k), jnp.int32),
+            jax.ShapeDtypeStruct((q_n, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lo_tile.astype(jnp.int32), n_tiles_q.astype(jnp.int32),
+      lo_row.astype(jnp.int32), hi_row.astype(jnp.int32),
+      queries, q_cnt, db, db_cnt)
+    return out[0], out[1]
+
+
+# ---------------------------------------------------------------------------
 # standalone BitCnt kernel (paper module 1) — mostly pedagogical; the fused
 # engine precomputes DB counts and counts queries inline.
 # ---------------------------------------------------------------------------

@@ -23,13 +23,17 @@ from .mesh import make_local_mesh
 
 def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
           n_queries: int = 256, batches: int = 4, use_kernel: bool = False,
-          log=print):
+          backend: str | None = None, log=print):
+    """``backend`` selects the BitBound execution path: "numpy" (host
+    reference), "tpu" (device-resident two-stage Pallas pipeline,
+    interpret-mode off-TPU) or "jnp" (device path without Pallas)."""
     db = synthetic_fingerprints(SyntheticConfig(n=n_db))
     queries = queries_from_db(db, n_queries * batches)
-    mesh = make_local_mesh()
 
     if engine == "sharded-brute":
-        with mesh:
+        # only this branch needs the device mesh — the single-chip engines
+        # must stay servable even where mesh construction is unsupported
+        with make_local_mesh() as mesh:
             db_s, cnt_s, n_valid = shard_database(mesh, db)
             search, _, _ = make_sharded_search(mesh, db_s.shape[0], k,
                                                use_kernel=use_kernel)
@@ -44,7 +48,13 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
             dt = time.time() - t0
     elif engine == "bitbound-folding":
         eng = BitBoundFoldingEngine(db, cutoff=CHEMBL_LIKE.cutoff,
-                                    m=CHEMBL_LIKE.folding_m)
+                                    m=CHEMBL_LIKE.folding_m, backend=backend)
+        if eng.backend in ("jnp", "tpu"):
+            # warm every batch once: different batches can hit different
+            # (window-bucket, k) pipelines, and compiling inside the timed
+            # loop would pollute the QPS measurement
+            for b in range(batches):
+                eng.search(queries[b * n_queries:(b + 1) * n_queries], k)
         t0 = time.time()
         for b in range(batches):
             eng.search(queries[b * n_queries:(b + 1) * n_queries], k)
@@ -62,7 +72,8 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
         raise ValueError(engine)
 
     qps = n_queries * batches / dt
-    log(f"[search-serve] engine={engine} db={n_db} k={k}: "
+    log(f"[search-serve] engine={engine} backend={backend or 'default'} "
+        f"db={n_db} k={k}: "
         f"{qps:.0f} QPS ({dt:.2f}s for {n_queries * batches} queries)")
     return qps
 
@@ -75,9 +86,12 @@ def main():
     ap.add_argument("--k", type=int, default=20)
     ap.add_argument("--n-queries", type=int, default=256)
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    choices=["numpy", "jnp", "tpu"],
+                    help="bitbound-folding execution path (default: numpy)")
     args = ap.parse_args()
     serve(args.engine, n_db=args.n_db, k=args.k, n_queries=args.n_queries,
-          use_kernel=args.use_kernel)
+          use_kernel=args.use_kernel, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,183 @@
+"""Collection-safe fallback for ``hypothesis`` (given/settings/strategies).
+
+The tier-1 property tests are written against hypothesis, but the suite must
+*collect and run* in environments where hypothesis is not installed (this
+container, the no-hypothesis CI leg). This module is a tiny stand-in with the
+same decorator surface: strategies draw deterministic pseudo-random examples
+from a per-test seeded RNG, so a failing example reproduces across runs.
+
+It is intentionally NOT a shrinking property-based framework — it is a seeded
+example sampler that keeps the same test bodies executable either way:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _propcheck import given, settings, strategies as st
+
+Supported: ``st.integers``, ``st.floats``, ``st.lists``, ``st.tuples``,
+``st.sampled_from``, ``st.booleans``, ``st.just``, ``st.data()``, plus
+``.map`` / ``.flatmap`` / ``.filter`` on any strategy.
+"""
+from __future__ import annotations
+
+import os
+import random
+import zlib
+
+# Number of examples per test defaults to the test's @settings(max_examples=N)
+# capped at PROPCHECK_MAX_EXAMPLES (the shim has no shrinker, so huge example
+# counts buy little; keep the no-hypothesis leg fast).
+_MAX_EXAMPLES_CAP = int(os.environ.get("PROPCHECK_MAX_EXAMPLES", "12"))
+_DEFAULT_EXAMPLES = 10
+
+
+class SearchStrategy:
+    """A deterministic sampler: ``_draw(rng) -> value``."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def flatmap(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)).example(rng))
+
+    def filter(self, pred, max_tries: int = 100):
+        def draw(rng):
+            for _ in range(max_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("propcheck filter: no satisfying example found")
+        return SearchStrategy(draw)
+
+
+class DataObject:
+    """Interactive draw handle for ``st.data()`` tests."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy, label: str | None = None):
+        return strategy.example(self._rng)
+
+
+class _DataStrategy(SearchStrategy):
+    def __init__(self):
+        super().__init__(lambda rng: DataObject(rng))
+
+
+class strategies:
+    """Namespace mirror of ``hypothesis.strategies``."""
+
+    SearchStrategy = SearchStrategy
+
+    @staticmethod
+    def integers(min_value=None, max_value=None):
+        lo = -(2**31) if min_value is None else min_value
+        hi = 2**31 - 1 if max_value is None else max_value
+
+        def draw(rng):
+            # bias towards boundaries, where off-by-ones live
+            r = rng.random()
+            if r < 0.08:
+                return lo
+            if r < 0.16:
+                return hi
+            return rng.randint(lo, hi)
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def floats(min_value=None, max_value=None, allow_nan=True,
+               allow_infinity=None, width=64):
+        lo = -1e9 if min_value is None else float(min_value)
+        hi = 1e9 if max_value is None else float(max_value)
+
+        def draw(rng):
+            r = rng.random()
+            if r < 0.06:
+                v = lo
+            elif r < 0.12:
+                v = hi
+            elif r < 0.2:
+                v = 0.0 if lo <= 0.0 <= hi else lo
+            else:
+                v = rng.uniform(lo, hi)
+            if width == 32:
+                import numpy as np
+                v = float(np.float32(v))
+            return v
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def booleans():
+        return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def just(value):
+        return SearchStrategy(lambda rng: value)
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return SearchStrategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    @staticmethod
+    def lists(elements: SearchStrategy, min_size=0, max_size=None):
+        hi = (min_size + 20) if max_size is None else max_size
+
+        def draw(rng):
+            n = rng.randint(min_size, hi)
+            return [elements.example(rng) for _ in range(n)]
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def tuples(*strats: SearchStrategy):
+        return SearchStrategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+    @staticmethod
+    def data():
+        return _DataStrategy()
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    """Attach example-count settings; other hypothesis knobs are ignored."""
+    def deco(fn):
+        fn._propcheck_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strats: SearchStrategy):
+    """Run the test body over deterministically sampled examples.
+
+    The wrapper takes no parameters (drawn values fill the test's signature),
+    so pytest does not mistake strategy-bound argument names for fixtures.
+    """
+    def deco(fn):
+        def wrapper():
+            cfg = (getattr(wrapper, "_propcheck_settings", None)
+                   or getattr(fn, "_propcheck_settings", {}))
+            n = min(cfg.get("max_examples", _DEFAULT_EXAMPLES), _MAX_EXAMPLES_CAP)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                example = [s.example(rng) for s in strats]
+                try:
+                    fn(*example)
+                except Exception as e:  # surface the failing example
+                    shown = [x if not isinstance(x, DataObject) else "<data>"
+                             for x in example]
+                    raise AssertionError(
+                        f"propcheck example {i}/{n} failed for {fn.__name__}: "
+                        f"args={shown!r}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

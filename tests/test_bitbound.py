@@ -2,7 +2,10 @@
 outside the popcount window can reach the similarity cutoff."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collection-safe fallback (see tests/_propcheck.py)
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import bitbound as bb
 from repro.core import pack_bits

@@ -51,3 +51,37 @@ def test_self_query_always_found(small_db, queries):
     eng = BitBoundFoldingEngine(small_db, cutoff=0.8, m=2)
     ids, vals = eng.search(queries, 5)
     assert (vals[:, 0] >= 1.0 - 1e-6).all()
+
+
+def test_scanned_counter_contract(small_db, queries):
+    """Unified work-counter contract: ``scanned(n_queries)`` is the number of
+    candidates scored for n_queries queries, extrapolated from the most
+    recent search batch (closed-form for input-independent engines)."""
+    n, nq = small_db.shape[0], len(queries)
+
+    brute = BruteForceEngine(small_db)
+    # input-independent: defined before any search, linear in n_queries
+    assert brute.scanned(nq) == nq * n
+    brute.search(queries, 5)
+    assert brute.scanned(nq) == nq * n
+    assert brute.scanned(2 * nq) == 2 * nq * n
+
+    for backend in ("numpy", "tpu"):
+        eng = BitBoundFoldingEngine(small_db, cutoff=0.6, m=2,
+                                    backend=backend)
+        # data-dependent: zero before any search...
+        assert eng.scanned(nq) == 0
+        eng.search(queries, 5)
+        got = eng.scanned(nq)
+        # ...equals the summed Eq.2 window sizes of the batch afterwards
+        counts = np.sort(np.bitwise_count(np.asarray(small_db)).sum(-1))
+        expect = 0
+        for q in np.asarray(queries):
+            a = int(np.bitwise_count(q).sum())
+            lo = np.searchsorted(counts, int(np.ceil(a * 0.6)), side="left")
+            hi = np.searchsorted(counts, int(np.floor(a / 0.6)), side="right")
+            expect += max(hi - lo, 0)
+        assert got == expect, backend
+        # and scales linearly in the requested n_queries
+        assert eng.scanned(2 * nq) == 2 * got
+        assert eng.scanned(0) == 0

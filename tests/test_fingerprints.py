@@ -1,7 +1,10 @@
 """Property tests for packed fingerprints and Tanimoto similarity."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collection-safe fallback (see tests/_propcheck.py)
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import (pack_bits, unpack_bits, popcount, tanimoto,
                         batched_tanimoto_scores)

@@ -1,7 +1,10 @@
 """Folding (modulo-OR compression) properties + two-stage search accuracy."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collection-safe fallback (see tests/_propcheck.py)
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import folding as fl
 from repro.core import pack_bits, unpack_bits

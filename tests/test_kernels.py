@@ -68,6 +68,132 @@ def test_bitbound_kernel_restricted_window_grid():
     np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), rtol=1e-6)
 
 
+# -- BitBound kernel edge cases (interpret mode vs ref.py) -------------------
+
+def test_bitbound_kernel_empty_window():
+    """A sparse query at a high cutoff has an empty Eq.2 window: every slot
+    must come back id -1 / val -inf, exactly like the oracle."""
+    db = _db(1000, seed=5)
+    idx = bb.build_index(jnp.asarray(db))
+    q = np.zeros((1, db.shape[1]), dtype=np.uint32)
+    q[0, 0] = 0b11    # popcount 2 -> window is popcount {2} only
+    assert not (np.asarray(idx.counts) == 2).any()
+    qs = jnp.asarray(q)
+    ids, vals = ops.bitbound_topk(qs, idx.db, idx.counts, k=8, cutoff=0.9,
+                                  tile_n=128)
+    rids, rvals = ref.bitbound_topk_ref(qs, idx.db, idx.counts, k=8,
+                                        cutoff=0.9)
+    assert (np.asarray(ids) == -1).all()
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(rids))
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rvals))
+
+
+def test_bitbound_kernel_window_smaller_than_k():
+    """Eq.2 window holds fewer candidates than k: the valid prefix matches
+    the oracle and the tail is -1 / -inf on both."""
+    db = _db(2000, seed=6)
+    idx = bb.build_index(jnp.asarray(db))
+    counts = np.asarray(idx.counts)
+    # query popcount = rarest count value -> tiny window at cutoff ~1
+    vals_u, freq = np.unique(counts, return_counts=True)
+    rare = int(vals_u[np.argmin(freq)])
+    q_bits = np.zeros((1, db.shape[1] * 32), dtype=np.uint8)
+    q_bits[0, :rare] = 1
+    from repro.core import pack_bits
+    qs = jnp.asarray(pack_bits(q_bits))
+    k = int(freq.min()) + 10
+    ids, vals = ops.bitbound_topk(qs, idx.db, idx.counts, k=k, cutoff=0.999,
+                                  tile_n=256)
+    rids, rvals = ref.bitbound_topk_ref(qs, idx.db, idx.counts, k=k,
+                                        cutoff=0.999)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ids) < 0, np.asarray(rids) < 0)
+    assert (np.asarray(ids)[0, -1] == -1)   # tail really is unfilled
+
+
+def test_bitbound_kernel_all_zero_query():
+    """Popcount-0 query: window is the popcount-0 rows; Tanimoto with an
+    empty print is defined as 0, never NaN/inf."""
+    db = _db(1500, seed=7)
+    db[:3] = 0    # make the zero-count window non-empty
+    idx = bb.build_index(jnp.asarray(db))
+    qs = jnp.zeros((2, db.shape[1]), dtype=jnp.uint32)
+    ids, vals = ops.bitbound_topk(qs, idx.db, idx.counts, k=5, cutoff=0.8,
+                                  tile_n=128)
+    rids, rvals = ref.bitbound_topk_ref(qs, idx.db, idx.counts, k=5,
+                                        cutoff=0.8)
+    assert not np.isnan(np.asarray(vals)).any()
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rvals))
+    np.testing.assert_array_equal(np.asarray(ids) < 0, np.asarray(rids) < 0)
+    # the zero rows are legitimate window members with similarity 0
+    assert (np.asarray(ids)[:, :3] >= 0).all()
+
+
+def test_bitbound_kernel_non_tile_aligned_n():
+    """N not a multiple of the tile: padded tail rows must never appear."""
+    db = _db(3001, seed=8)
+    idx = bb.build_index(jnp.asarray(db))
+    qs = jnp.asarray(queries_from_db(db, 4))
+    ids, vals = ops.bitbound_topk(qs, idx.db, idx.counts, k=12, cutoff=0.5,
+                                  tile_n=256)
+    rids, rvals = ref.bitbound_topk_ref(qs, idx.db, idx.counts, k=12,
+                                        cutoff=0.5)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), rtol=1e-6)
+    assert (np.asarray(ids) < 3001).all()
+
+
+# -- row-window kernel (stage 1 of the device two-stage engine) --------------
+
+def test_window_kernel_matches_oracle():
+    """Per-query row windows incl. empty, tiny, full-DB and tail windows."""
+    db = _db(3000, seed=3)
+    qs = jnp.asarray(queries_from_db(db, 5))
+    idx = bb.build_index(jnp.asarray(db))
+    lo = jnp.asarray([100, 500, 700, 0, 2999], jnp.int32)
+    hi = jnp.asarray([2500, 500, 705, 3000, 3000], jnp.int32)
+    ids, vals = ops.window_topk(qs, idx.db, idx.counts, lo, hi, k=10,
+                                tile_n=256)
+    rids, rvals = ref.window_topk_ref(qs, idx.db, idx.counts, lo, hi, k=10)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ids) < 0, np.asarray(rids) < 0)
+
+
+def test_window_kernel_restricted_max_tiles():
+    """Static grid smaller than the full DB stays exact when windows fit."""
+    db = _db(4096, seed=9)
+    qs = jnp.asarray(queries_from_db(db, 3))
+    idx = bb.build_index(jnp.asarray(db))
+    lo = jnp.asarray([0, 1000, 3000], jnp.int32)
+    hi = jnp.asarray([900, 2000, 4096], jnp.int32)
+    ids, vals = ops.window_topk(qs, idx.db, idx.counts, lo, hi, k=7,
+                                tile_n=256, max_tiles=5)
+    _, rvals = ref.window_topk_ref(qs, idx.db, idx.counts, lo, hi, k=7)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), rtol=1e-6)
+
+
+def test_window_kernel_folded_db_full_bounds():
+    """The two-stage wiring: bounds from full-resolution popcounts, scores on
+    the folded DB — the kernel must not consult folded popcounts for the
+    window."""
+    from repro.core import folding as fl
+    db = _db(2000, seed=10)
+    idx = bb.build_index(jnp.asarray(db))
+    folded = jnp.asarray(fl.fold(np.asarray(idx.db), 4, 1))
+    qs = jnp.asarray(fl.fold(queries_from_db(db, 3), 4, 1))
+    lo = jnp.asarray([0, 600, 1990], jnp.int32)
+    hi = jnp.asarray([500, 1400, 2000], jnp.int32)
+    from repro.core.fingerprints import popcount
+    fcnt = popcount(folded)
+    ids, vals = ops.window_topk(qs, folded, fcnt, lo, hi, k=9, tile_n=128)
+    rids, rvals = ref.window_topk_ref(qs, folded, fcnt, lo, hi, k=9)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), rtol=1e-6)
+    got = np.asarray(ids)
+    for qi in range(3):
+        ok = got[qi] >= 0
+        assert (got[qi][ok] >= int(lo[qi])).all()
+        assert (got[qi][ok] < int(hi[qi])).all()
+
+
 def test_bitcount_kernel_sweep():
     for n, w in [(100, 8), (4096, 32), (5000, 16)]:
         rng = np.random.default_rng(n)

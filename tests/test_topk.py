@@ -1,7 +1,10 @@
 """Streaming top-k and register-array priority queue properties."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collection-safe fallback (see tests/_propcheck.py)
+    from _propcheck import given, settings, strategies as st
 
 from repro.core.topk import (streaming_topk, pq_make, pq_insert_max,
                              pq_pop_max, pq_worst_max)
