@@ -40,6 +40,7 @@ def run(n_db=60_000, n_queries=32, backend="numpy"):
     qps = n_queries / dt
     rows.append({
         "name": "bruteforce", "backend": "jnp",
+        "n_db": n_db, "n_queries": n_queries,
         "us_per_call": round(dt / n_queries * 1e6, 1),
         "host_qps": round(qps, 1),
         "host_compounds_per_s": round(qps * n_db / 1e6, 1),
@@ -57,6 +58,7 @@ def run(n_db=60_000, n_queries=32, backend="numpy"):
             rows.append({
                 "name": f"bitbound_fold_m{m}_Sc{cutoff}",
                 "backend": backend,
+                "n_db": n_db, "n_queries": n_queries,
                 "us_per_call": round(dt / n_queries * 1e6, 1),
                 "host_qps": round(qps, 1),
                 "scan_fraction": round(frac, 4),

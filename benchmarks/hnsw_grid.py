@@ -1,5 +1,16 @@
-"""Paper Figs. 8/9: HNSW QPS vs recall over the (M, ef) grid."""
+"""Paper Figs. 8/9/12: HNSW QPS vs recall over the (M, ef) grid.
+
+``--backend`` sweeps the same grid through the engine's execution paths
+(``numpy`` host reference / ``jnp`` device traversal / ``tpu`` device
+traversal with the Pallas gather-distance kernel, interpret-mode off-TPU),
+so the paper's Fig. 12 recall-vs-QPS operating point is directly trackable
+per backend. Rows land in the ``experiments/bench`` JSON schema with
+``backend``/``beam`` columns plus the traversal telemetry
+(iterations, expansions, budget terminations) from ``HNSWEngine.stats``.
+"""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -8,27 +19,62 @@ from repro.core import hnsw as hn
 from .common import K, brute_truth, emit, get_db, get_queries, timeit
 
 
-def run(n_db=8_000, n_queries=32, ms=(5, 10, 20), efs=(20, 60, 120, 200)):
+def run(n_db=8_000, n_queries=32, ms=(5, 10, 20), efs=(20, 60, 120, 200),
+        backend="jnp", beam=1, ef_construction=100):
     db = get_db(n_db, seed=7)
     queries = get_queries(db, n_queries, seed=8)
     true_ids, _ = brute_truth(db, queries, K)
     rows = []
     for m in ms:
-        index = hn.build_hnsw(np.asarray(db), m=m, ef_construction=100, seed=0)
-        eng = HNSWEngine(db, index=index)
+        index = hn.build_hnsw(np.asarray(db), m=m,
+                              ef_construction=ef_construction, seed=0)
+        eng = HNSWEngine(db, index=index, backend=backend, beam=beam)
         for ef in efs:
             dt = timeit(lambda: eng.search(queries, K, ef=ef), repeats=2)
             ids, _ = eng.search(queries, K, ef=ef)
             rows.append({
-                "name": f"hnsw_m{m}_ef{ef}", "m": m, "ef": ef,
+                "name": f"hnsw_m{m}_ef{ef}_{backend}", "m": m, "ef": ef,
+                "backend": backend, "beam": beam,
+                "n_db": n_db, "n_queries": n_queries,
                 "us_per_call": round(dt / n_queries * 1e6, 1),
                 "host_qps": round(n_queries / dt, 1),
                 "recall": round(recall_at_k(ids, true_ids), 4),
                 "avg_neighbour_evals": eng.scanned(n_queries) // n_queries,
+                "avg_iters": round(eng.stats.get("iters", 0) / n_queries, 1),
+                "max_iters_hit": eng.stats.get("max_iters_hit", 0),
             })
-    emit("fig8_hnsw_grid", rows)
+    suffix = "" if backend == "jnp" else f"_{backend}"
+    emit(f"fig8_hnsw_grid{suffix}", rows)
     return rows
 
 
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="jnp",
+                    choices=["numpy", "jnp", "tpu"])
+    ap.add_argument("--n-db", type=int, default=None,
+                    help="database size (default 8000, 2000 for tpu "
+                         "interpret mode)")
+    ap.add_argument("--n-queries", type=int, default=None)
+    ap.add_argument("--ms", type=int, nargs="+", default=None,
+                    help="HNSW M values to sweep")
+    ap.add_argument("--efs", type=int, nargs="+", default=None,
+                    help="ef_search values to sweep")
+    ap.add_argument("--beam", type=int, default=1,
+                    help="candidates expanded per traversal iteration")
+    ap.add_argument("--ef-construction", type=int, default=None)
+    args = ap.parse_args()
+    # interpret-mode Pallas (off-TPU) walks the gather grid in python:
+    # default to a tiny-mode sweep there so the smoke leg stays fast
+    tiny = args.backend == "tpu"
+    run(n_db=args.n_db or (2_000 if tiny else 8_000),
+        n_queries=args.n_queries or (8 if tiny else 32),
+        ms=tuple(args.ms) if args.ms else ((8,) if tiny else (5, 10, 20)),
+        efs=tuple(args.efs) if args.efs else ((20, 60) if tiny
+                                              else (20, 60, 120, 200)),
+        backend=args.backend, beam=args.beam,
+        ef_construction=args.ef_construction or (40 if tiny else 100))
+
+
 if __name__ == "__main__":
-    run()
+    main()

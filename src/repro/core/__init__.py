@@ -4,6 +4,7 @@ from .fingerprints import (  # noqa: F401
     batched_tanimoto_scores, n_words, DEFAULT_LEN,
 )
 from .engine import (  # noqa: F401
-    BruteForceEngine, BitBoundFoldingEngine, HNSWEngine, recall_at_k,
+    SearchEngine, BruteForceEngine, BitBoundFoldingEngine, HNSWEngine,
+    recall_at_k,
 )
 from . import bitbound, folding, hnsw, topk  # noqa: F401

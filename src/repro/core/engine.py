@@ -1,6 +1,6 @@
 """Unified similarity-search engines (paper §IV).
 
-Three engines, one per paper design point:
+Three engines, one per paper design point, on one shared base:
 
 * :class:`BruteForceEngine` — exhaustive linear scan with the fused
   scan+top-k path (on-the-fly engine; Pallas kernel when enabled, streaming
@@ -8,15 +8,34 @@ Three engines, one per paper design point:
 * :class:`BitBoundFoldingEngine` — exhaustive with Eq.2 popcount pruning and
   2-stage modulo-OR folding; host-side numpy reference plus a fully
   device-resident ``search_tpu`` path.
-* :class:`HNSWEngine` — approximate graph search.
+* :class:`HNSWEngine` — approximate graph search over the device-resident
+  batched traversal engine (``core/hnsw.py``).
 
-All engines share ``search(queries, k) -> (ids, sims)``, a ``backend=``
-selector choosing the execution path, and the work-counter contract
-``scanned(n_queries)``: the number of candidate fingerprints the engine
-scores for ``n_queries`` queries, extrapolated from the statistics of the
-most recent ``search`` batch (engines whose per-query work is input
-independent compute it in closed form). Before any search it is 0 for
-data-dependent engines.
+The ``backend=`` contract (shared, :class:`SearchEngine`)
+---------------------------------------------------------
+Every engine exposes ``search(queries, k) -> (ids, sims)`` numpy arrays and a
+``backend`` selector naming the execution path:
+
+* ``"numpy"`` — host-side reference loop with true variable-length data
+  structures. Exact semantics; the parity oracle for the device paths.
+  (Engines whose reference *is* the device path don't offer it.)
+* ``"jnp"``   — fully device-resident fixed-shape path built from plain jnp
+  ops (works on any JAX backend, no Pallas required).
+* ``"tpu"``   — same device-resident path with its hot stage swapped for the
+  Pallas kernel (Mosaic on TPU, interpret mode elsewhere). Engines fall back
+  to the ``jnp`` stage automatically when Pallas cannot be imported.
+
+Invalid names raise ``ValueError`` listing the engine's supported backends.
+The legacy ``use_kernel=True`` flag maps onto ``backend="tpu"`` when
+``backend`` is unset.
+
+Work accounting: ``scanned(n_queries)`` is the number of candidate
+fingerprints the engine scores for ``n_queries`` queries, extrapolated from
+the *most recent* ``search`` batch: ``last_batch_total * n_queries /
+last_batch_n_queries``. Before any search it is 0 for data-dependent
+engines; engines whose per-query work is input-independent compute it in
+closed form. Per-batch traversal telemetry beyond that single number lives
+in the engine's ``stats`` dict (see :attr:`HNSWEngine.stats`).
 """
 from __future__ import annotations
 
@@ -41,6 +60,55 @@ def _kernels_available() -> bool:
         return False
 
 
+class SearchEngine:
+    """Shared engine plumbing: backend selection, compiled-function caching
+    and the ``scanned`` work-counter contract (module docstring).
+
+    Subclasses declare ``BACKENDS`` / ``DEFAULT_BACKEND`` and call
+    :meth:`_init_engine` from ``__post_init__``; per-batch work is recorded
+    with :meth:`_record_batch` and jitted pipelines are memoised per static
+    key with :meth:`_cached`.
+    """
+
+    BACKENDS: tuple = ("jnp", "tpu")
+    DEFAULT_BACKEND: str = "jnp"
+
+    def _init_engine(self) -> None:
+        if self.backend is None:
+            self.backend = ("tpu" if getattr(self, "use_kernel", False)
+                            else self.DEFAULT_BACKEND)
+        if self.backend not in self.BACKENDS:
+            raise ValueError(
+                f"{type(self).__name__} backend must be one of "
+                f"{'/'.join(repr(b) for b in self.BACKENDS)}, "
+                f"got {self.backend!r}")
+        self._last_scanned = 0
+        self._last_n_queries = 0
+        self._jit_cache: dict = {}
+        self.stats: dict = {}
+
+    def _cached(self, key, builder):
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            fn = builder()
+            self._jit_cache[key] = fn
+        return fn
+
+    def _record_batch(self, scanned, n_queries) -> None:
+        self._last_scanned = int(scanned)
+        self._last_n_queries = int(n_queries)
+
+    def scanned(self, n_queries: int) -> int:
+        """Candidates scored for ``n_queries`` queries, extrapolated from the
+        most recent search batch (0 before any search)."""
+        if self._last_n_queries == 0:
+            return 0
+        return round(self._last_scanned * n_queries / self._last_n_queries)
+
+    def search(self, queries, k: int):
+        raise NotImplementedError
+
+
 def _brute_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array, k: int,
                 use_kernel: bool, tile: int = 2048):
     if use_kernel:
@@ -56,20 +124,18 @@ def _brute_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array, k: int,
 
 
 @dataclass
-class BruteForceEngine:
+class BruteForceEngine(SearchEngine):
     """Exhaustive scan. ``backend``: ``"tpu"`` = fused Pallas kernel
-    (interpret-mode off-TPU), ``"jnp"`` = streaming jnp path. The legacy
-    ``use_kernel`` flag maps onto the selector when ``backend`` is unset."""
+    (interpret-mode off-TPU), ``"jnp"`` = streaming jnp path."""
     db: jax.Array
     use_kernel: bool = False
     backend: str | None = None
 
+    BACKENDS = ("jnp", "tpu")
+    DEFAULT_BACKEND = "jnp"
+
     def __post_init__(self):
-        if self.backend is None:
-            self.backend = "tpu" if self.use_kernel else "jnp"
-        if self.backend not in ("jnp", "tpu"):
-            raise ValueError(f"BruteForceEngine backend must be 'jnp' or "
-                             f"'tpu', got {self.backend!r}")
+        self._init_engine()
         self.use_kernel = self.backend == "tpu" and _kernels_available()
         self.db = jnp.asarray(self.db)
         self.db_cnt = popcount(self.db)
@@ -87,7 +153,7 @@ class BruteForceEngine:
 
 
 @dataclass
-class BitBoundFoldingEngine:
+class BitBoundFoldingEngine(SearchEngine):
     """BitBound (Eq. 2) + 2-stage folding (paper §III-B, §IV-A).
 
     Stage 1 scans only the popcount-bounded range of the *folded* DB and keeps
@@ -122,12 +188,11 @@ class BitBoundFoldingEngine:
     use_kernel: bool = False
     backend: str | None = None
 
+    BACKENDS = ("numpy", "jnp", "tpu")
+    DEFAULT_BACKEND = "numpy"
+
     def __post_init__(self):
-        if self.backend is None:
-            self.backend = "tpu" if self.use_kernel else "numpy"
-        if self.backend not in ("numpy", "jnp", "tpu"):
-            raise ValueError(f"BitBoundFoldingEngine backend must be 'numpy', "
-                             f"'jnp' or 'tpu', got {self.backend!r}")
+        self._init_engine()
         self.index = bb.build_index(jnp.asarray(self.db))
         folded_np = fl.fold(np.asarray(self.index.db), self.m, self.scheme)
         self.folded = jnp.asarray(folded_np)
@@ -135,10 +200,8 @@ class BitBoundFoldingEngine:
         self.full = self.index.db
         self.full_cnt = self.index.counts
         self._counts_np = np.asarray(self.index.counts)
-        self._last_scanned = 0
-        self._last_n_queries = 0
         # device path: jitted two-stage search per (window-bucket, k)
-        self._stage1_cache: dict[tuple[int, int], callable] = {}
+        self._stage1_cache = self._jit_cache
         self._device_state: dict | None = None
 
     # -- dispatch -----------------------------------------------------------
@@ -189,8 +252,7 @@ class BitBoundFoldingEngine:
             best = np.argsort(-s2, kind="stable")[:k_eff]
             ids_out[qi, :k_eff] = order[cand[best]]
             sims_out[qi, :k_eff] = s2[best]
-        self._last_scanned = scanned
-        self._last_n_queries = len(queries)
+        self._record_batch(scanned, len(queries))
         return ids_out, sims_out
 
     # -- device-resident fixed-shape path -----------------------------------
@@ -287,26 +349,37 @@ class BitBoundFoldingEngine:
         bucket = bb.bucket_tiles(int(n_tiles.max(initial=0)), total_tiles)
         if state["kops"] is None:
             bucket = total_tiles  # jnp fallback scans full rows, one variant
-        key = (bucket, int(k))
-        fn = self._stage1_cache.get(key)
-        if fn is None:
-            fn = self._build_device_search(bucket, k)
-            self._stage1_cache[key] = fn
+        fn = self._cached((bucket, int(k)),
+                          lambda: self._build_device_search(bucket, k))
         ids, sims, scanned = fn(queries, jnp.asarray(lo, jnp.int32),
                                 jnp.asarray(hi, jnp.int32))
-        self._last_scanned = scanned
-        self._last_n_queries = queries.shape[0]
+        self._record_batch(scanned, queries.shape[0])
         return ids, sims, scanned
-
-    def scanned(self, n_queries: int) -> int:
-        if self._last_n_queries == 0:
-            return 0
-        per_batch = int(self._last_scanned)
-        return round(per_batch * n_queries / self._last_n_queries)
 
 
 @dataclass
-class HNSWEngine:
+class HNSWEngine(SearchEngine):
+    """Approximate graph search (paper §III-C / §IV-B).
+
+    ``backend`` (module-docstring contract):
+
+    * ``"numpy"`` — host reference traversal, true variable-length queues
+      (:func:`repro.core.hnsw.search_hnsw_numpy`).
+    * ``"jnp"``   — batched device-resident traversal with the jnp
+      gather-distance stage.
+    * ``"tpu"``   — same traversal with the Pallas ``gather_tanimoto``
+      kernel as the fine-grained distance stage (jnp fallback when Pallas
+      is unavailable).
+
+    ``beam`` is the number of candidates expanded per traversal iteration
+    (``beam * 2M`` neighbours scored per kernel launch); ``max_iters`` caps
+    the lock-step loop (default ``4*ef + 16``).
+
+    After each ``search``, :attr:`stats` holds the batch's traversal
+    telemetry: ``iters`` / ``expansions`` / ``neighbour_evals`` totals and,
+    on device backends, per-query arrays plus termination-reason counts
+    (``converged`` vs ``max_iters_hit``).
+    """
     db: np.ndarray
     m: int = 16
     ef_construction: int = 100
@@ -314,32 +387,69 @@ class HNSWEngine:
     seed: int = 0
     index: hn.HNSWIndex = None
     _graph: hn.HNSWDeviceGraph = None
+    backend: str | None = None
+    beam: int = 1
+    max_iters: int | None = None
+
+    BACKENDS = ("numpy", "jnp", "tpu")
+    DEFAULT_BACKEND = "jnp"
 
     def __post_init__(self):
+        self._init_engine()
         if self.index is None:
             self.index = hn.build_hnsw(np.asarray(self.db), m=self.m,
                                        ef_construction=self.ef_construction,
                                        seed=self.seed)
-        self._graph = hn.to_device_graph(self.index)
-        self._jit_search = jax.jit(
-            lambda q, k, ef: hn.search_hnsw(self._graph, q, k, ef),
-            static_argnames=("k", "ef"))
-        self._last_iters = 0
-        self._last_n_queries = 0
+        # the numpy backend never touches the device — don't ship the graph
+        self._graph = (None if self.backend == "numpy"
+                       else hn.to_device_graph(self.index))
+        self._score_fn = None   # None -> jnp gather inside search_hnsw
+        if self.backend == "tpu" and _kernels_available():
+            from ..kernels import ops as kops
+            graph = self._graph
 
-    def search(self, queries, k: int, ef: int | None = None):
+            def score_fn(qs, qc, ids):
+                return kops.gather_tanimoto(qs, graph.db, ids, q_cnt=qc)
+            self._score_fn = score_fn
+
+    def _device_search(self, k: int, ef: int, beam: int):
+        def build():
+            return jax.jit(lambda q: hn.search_hnsw(
+                self._graph, q, k, ef, max_iters=self.max_iters, beam=beam,
+                score_fn=self._score_fn))
+        return self._cached((k, ef, beam), build)
+
+    def search(self, queries, k: int, ef: int | None = None,
+               beam: int | None = None):
         ef = ef or self.ef_search
-        ids, sims, iters = self._jit_search(jnp.asarray(queries), k, ef)
-        self._last_iters = int(np.asarray(iters).sum())
-        self._last_n_queries = int(jnp.asarray(queries).shape[0])
+        beam = beam or self.beam
+        m2 = self.index.base_adj.shape[1]
+        if self.backend == "numpy":
+            ids, sims, ctr = hn.search_hnsw_numpy(self.index,
+                                                  np.asarray(queries), k, ef)
+            self._record_batch(ctr["evals"], len(queries))
+            self.stats = {"backend": "numpy", "iters": ctr["iters"],
+                          "expansions": ctr["iters"],
+                          "neighbour_evals": ctr["evals"]}
+            return ids, sims
+        fn = self._device_search(k, ef, beam)
+        ids, sims, tstats = fn(jnp.asarray(queries))
+        iters = np.asarray(tstats.iters)
+        expans = np.asarray(tstats.expansions)
+        reason = np.asarray(tstats.reason)
+        # each expanded candidate gathers and scores <= 2M neighbour slots
+        self._record_batch(int(expans.sum()) * m2, iters.shape[0])
+        self.stats = {
+            "backend": self.backend,
+            "iters": int(iters.sum()),
+            "expansions": int(expans.sum()),
+            "neighbour_evals": int(expans.sum()) * m2,
+            "converged": int((reason == hn.REASON_CONVERGED).sum()),
+            "max_iters_hit": int((reason == hn.REASON_MAX_ITERS).sum()),
+            "iters_per_query": iters,
+            "expansions_per_query": expans,
+        }
         return np.asarray(ids), np.asarray(sims)
-
-    def scanned(self, n_queries: int) -> int:
-        # each traversal iteration evaluates <= 2M neighbours
-        if self._last_n_queries == 0:
-            return 0
-        evals = self._last_iters * 2 * self.index.m
-        return round(evals * n_queries / self._last_n_queries)
 
 
 def recall_at_k(pred_ids: np.ndarray, true_ids: np.ndarray) -> float:

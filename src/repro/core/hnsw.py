@@ -4,11 +4,21 @@
   on CPU; the FPGA/TPU accelerates *search*). Heuristic neighbour selection
   (Malkov & Yashunin Alg. 4) with the long-range-link property the paper
   credits for HNSW's recall.
-* Graph **search** is the accelerated path: a batched JAX engine mirroring the
-  paper's graph-traversal engine — SEARCH-LAYER-TOP greedy descent
-  (Alg. 1) and SEARCH-LAYER-BASE beam search (Alg. 2) with two fixed-shape
-  register-array priority queues (candidates C, results M) and a vectorised
-  TFC distance stage over the (2M-padded) adjacency gather.
+* Graph **search** is the accelerated path: a batched, device-resident
+  traversal engine mirroring the paper's FPGA graph engine —
+  SEARCH-LAYER-TOP greedy descent (Alg. 1) followed by a lock-step batched
+  SEARCH-LAYER-BASE beam search (Alg. 2):
+
+  - two fixed-shape **register-array priority queues** per query (candidates
+    C, results M) from ``core/topk.py`` — compare-and-shift / rank-merge
+    semantics, the paper's Fig. 9 structure;
+  - a **fine-grained gather-distance stage** scoring one whole beam
+    expansion (``beam * 2M`` neighbour ids per query) per launch — either
+    the Pallas scalar-prefetch kernel ``kernels.ops.gather_tanimoto`` or its
+    jnp twin :func:`score_ids_jnp`;
+  - per-query **termination** (Alg. 2 bound) with a global ``max_iters``
+    budget; per-query telemetry (iterations, expansions, stop reason) comes
+    back as :class:`TraversalStats`.
 
 Distances: we work directly in *similarity* space (maximise Tanimoto), so the
 candidate queue pops the most-similar element and the result queue evicts the
@@ -24,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .topk import NEG_INF
+from .topk import NEG_INF, PQ, merge_sorted, pq_pop_many, pq_worst
 
 
 # ---------------------------------------------------------------------------
@@ -67,36 +77,47 @@ class HNSWIndex:
 def _select_heuristic(cand_ids: np.ndarray, cand_sims: np.ndarray, m: int,
                       db: np.ndarray, db_cnt: np.ndarray) -> np.ndarray:
     """Alg. 4 neighbour selection: keep candidate e only if it is closer to the
-    query than to every already-selected neighbour (keeps long-range links)."""
+    query than to every already-selected neighbour (keeps long-range links).
+
+    The candidate-to-candidate similarity matrix is computed in one vectorised
+    pass (candidate sets are small: <= ef_construction rows); the selection
+    loop itself is pure index bookkeeping. This is the construction hot path —
+    the per-pair scoring it replaces dominated build time.
+    """
     order = np.argsort(-cand_sims, kind="stable")
+    cand = np.asarray(cand_ids, dtype=np.int64)[order]
+    sims = np.asarray(cand_sims, dtype=np.float32)[order]
+    fps = db[cand]
+    cnts = db_cnt[cand].astype(np.int64)
+    inter = np.bitwise_count(fps[:, None, :] & fps[None, :, :]).sum(-1)
+    union = cnts[:, None] + cnts[None, :] - inter
+    pair = np.where(union > 0, inter / np.maximum(union, 1), 0.0).astype(np.float32)
+
     selected: list[int] = []
-    for j in order:
+    for j in range(len(cand)):
         if len(selected) >= m:
             break
-        e = int(cand_ids[j])
-        e_fp = db[e]
-        ok = True
-        for s in selected:
-            s_to_e = _np_tanimoto(e_fp, db[s:s + 1], db_cnt[s:s + 1])[0]
-            if s_to_e > cand_sims[j]:   # e closer to an existing neighbour than to q
-                ok = False
-                break
-        if ok:
-            selected.append(e)
+        # e closer to an existing neighbour than to q -> rejected
+        if all(pair[j, s] <= sims[j] for s in selected):
+            selected.append(j)
     # backfill with best remaining if heuristic selected < m (paper keeps M links)
     if len(selected) < m:
-        for j in order:
-            e = int(cand_ids[j])
-            if e not in selected:
-                selected.append(e)
+        chosen = set(selected)
+        for j in range(len(cand)):
+            if j not in chosen:
+                selected.append(j)
+                chosen.add(j)
                 if len(selected) >= m:
                     break
-    return np.asarray(selected[:m], dtype=np.int32)
+    return cand[np.asarray(selected[:m], dtype=np.int64)].astype(np.int32)
 
 
-def _search_layer_np(index_db, db_cnt, adj, q, entry_points, ef):
-    """Host-side SEARCH-LAYER-BASE used during construction. adj: dict-like
-    callable gid -> int32 array of neighbour gids."""
+def _search_layer_np(index_db, db_cnt, adj, q, entry_points, ef,
+                     counters: dict | None = None):
+    """Host-side SEARCH-LAYER-BASE used during construction and by the
+    ``numpy`` engine backend. adj: dict-like callable gid -> int32 array of
+    neighbour gids. ``counters`` (optional) accumulates ``evals`` (scored
+    neighbours) and ``iters`` (queue pops) for the telemetry contract."""
     visited = set(int(e) for e in entry_points)
     ep = np.asarray(list(visited), dtype=np.int32)
     sims = _np_tanimoto(q, index_db[ep], db_cnt[ep])
@@ -110,6 +131,8 @@ def _search_layer_np(index_db, db_cnt, adj, q, entry_points, ef):
         neg_s, c = heapq.heappop(cand)
         if -neg_s < results[0][0] and len(results) >= ef:
             break
+        if counters is not None:
+            counters["iters"] = counters.get("iters", 0) + 1
         neigh = adj(c)
         neigh = [int(e) for e in neigh if e >= 0 and int(e) not in visited]
         if not neigh:
@@ -117,6 +140,8 @@ def _search_layer_np(index_db, db_cnt, adj, q, entry_points, ef):
         visited.update(neigh)
         na = np.asarray(neigh, dtype=np.int32)
         ns = _np_tanimoto(q, index_db[na], db_cnt[na])
+        if counters is not None:
+            counters["evals"] = counters.get("evals", 0) + len(neigh)
         for e, s in zip(neigh, ns.tolist()):
             if len(results) < ef or s > results[0][0]:
                 heapq.heappush(cand, (-s, e))
@@ -245,18 +270,31 @@ def to_device_graph(index: HNSWIndex) -> HNSWDeviceGraph:
 
 
 def _sims(q: jax.Array, q_cnt: jax.Array, g: HNSWDeviceGraph, ids: jax.Array) -> jax.Array:
-    """Vectorised TFC stage: Tanimoto of query vs gathered fingerprints.
-    Invalid ids (-1) -> -inf."""
+    """Single-query view of :func:`score_ids_jnp` (greedy-descent stage)."""
+    return score_ids_jnp(q[None], q_cnt[None], g, ids[None])[0]
+
+
+def score_ids_jnp(queries: jax.Array, q_cnt: jax.Array, g: HNSWDeviceGraph,
+                  ids: jax.Array) -> jax.Array:
+    """Batched gather-distance fallback: (Q, W) x (Q, E) ids -> (Q, E) sims.
+
+    Plain-jnp twin of the Pallas ``kernels.ops.gather_tanimoto`` kernel —
+    identical arithmetic (popcount-Tanimoto, -inf for id -1), used when
+    Pallas is unavailable or the engine backend is ``"jnp"``.
+    """
     safe = jnp.maximum(ids, 0)
-    fps = g.db[safe]                       # (E, W)
-    inter = jnp.sum(jax.lax.population_count(q[None, :] & fps).astype(jnp.int32), -1)
-    union = q_cnt + g.db_popcount[safe] - inter
-    s = jnp.where(union > 0, inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
+    fps = g.db[safe]                                    # (Q, E, W)
+    inter = jnp.sum(jax.lax.population_count(
+        queries[:, None, :] & fps).astype(jnp.int32), axis=-1)
+    union = q_cnt[:, None] + g.db_popcount[safe] - inter
+    s = jnp.where(union > 0,
+                  inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
     return jnp.where(ids >= 0, s, NEG_INF)
 
 
-def _greedy_descent(q, q_cnt, g: HNSWDeviceGraph, level: int) -> jax.Array:
-    """SEARCH-LAYER-TOP (Alg. 1) at one (static) upper level."""
+def _greedy_descent(q, q_cnt, g: HNSWDeviceGraph, level: int,
+                    start: jax.Array) -> jax.Array:
+    """SEARCH-LAYER-TOP (Alg. 1) at one (static) upper level from ``start``."""
     adj = g.upper_adj[level - 1]
 
     def cond(state):
@@ -272,86 +310,199 @@ def _greedy_descent(q, q_cnt, g: HNSWDeviceGraph, level: int) -> jax.Array:
         return (jnp.where(better, neigh[j], cur),
                 jnp.where(better, s[j], cur_sim), better)
 
-    ep = g.entry_point
-    s0 = _sims(q, q_cnt, g, ep[None])[0]
-    cur, _, _ = jax.lax.while_loop(cond, body, (ep, s0, jnp.bool_(True)))
+    s0 = _sims(q, q_cnt, g, start[None])[0]
+    cur, _, _ = jax.lax.while_loop(cond, body, (start, s0, jnp.bool_(True)))
     return cur
 
 
-def _search_base(q, q_cnt, g: HNSWDeviceGraph, ep: jax.Array, ef: int,
-                 max_iters: int):
-    """SEARCH-LAYER-BASE (Alg. 2), fixed-shape. Returns (ids, sims) desc, (ef,)."""
-    n = g.db.shape[0]
-    vwords = (n + 31) // 32
-    ep_sim = _sims(q, q_cnt, g, ep[None])[0]
+# Early-termination reasons (TraversalStats.reason values).
+REASON_CONVERGED = 0   # best remaining candidate worse than worst result
+REASON_MAX_ITERS = 1   # iteration budget exhausted before convergence
 
-    # C (candidates, pop best) and M (results, evict worst): sorted desc arrays.
-    cand_s = jnp.full((ef,), NEG_INF).at[0].set(ep_sim)
-    cand_i = jnp.full((ef,), -1, jnp.int32).at[0].set(ep)
-    res_s, res_i = cand_s, cand_i
-    visited = jnp.zeros((vwords,), jnp.uint32)
-    visited = visited.at[ep // 32].set(jnp.uint32(1) << (ep % 32).astype(jnp.uint32))
 
-    def cond(st):
-        cand_s, cand_i, res_s, res_i, visited, it = st
-        has_cand = cand_s[0] > NEG_INF
-        # stop when best candidate is worse than the worst retained result
-        worst = res_s[ef - 1]
-        return jnp.logical_and(it < max_iters,
-                               jnp.logical_and(has_cand, cand_s[0] >= worst))
-
-    def body(st):
-        cand_s, cand_i, res_s, res_i, visited, it = st
-        top_i = cand_i[0]
-        # pop best candidate
-        cand_s = jnp.concatenate([cand_s[1:], jnp.array([NEG_INF])])
-        cand_i = jnp.concatenate([cand_i[1:], jnp.array([-1], jnp.int32)])
-        neigh = g.base_adj[jnp.maximum(top_i, 0)]           # (2M,)
-        word = visited[jnp.maximum(neigh, 0) // 32]
-        bit = (word >> (jnp.maximum(neigh, 0) % 32).astype(jnp.uint32)) & 1
-        fresh = jnp.logical_and(neigh >= 0, bit == 0)
-        # mark visited. Scatter-OR via scatter-ADD: fresh neighbour ids are
-        # unique, so their single-bit masks never collide within a word and
-        # addition equals bitwise OR (a .set here would drop bits whenever
-        # two neighbours share a word).
-        upd = jnp.where(fresh, jnp.uint32(1) << (jnp.maximum(neigh, 0) % 32).astype(jnp.uint32),
-                        jnp.uint32(0))
-        visited = visited.at[jnp.maximum(neigh, 0) // 32].add(upd)
-        s = _sims(q, q_cnt, g, neigh)
-        s = jnp.where(fresh, s, NEG_INF)
-        worst = res_s[ef - 1]
-        keep = s > worst                                     # or M not full: worst=-inf then
-        s = jnp.where(keep, s, NEG_INF)
-        ni = jnp.where(keep, neigh, -1)
-        # merge into result and candidate queues (register-array PQ analogue:
-        # one sorted merge per expansion, constant shape)
-        def merge(qs, qi):
-            all_s = jnp.concatenate([qs, s])
-            all_i = jnp.concatenate([qi, ni])
-            top, pos = jax.lax.top_k(all_s, ef)
-            return top, all_i[pos]
-        res_s, res_i = merge(res_s, res_i)
-        cand_s, cand_i = merge(cand_s, cand_i)
-        return cand_s, cand_i, res_s, res_i, visited, it + 1
-
-    st = (cand_s, cand_i, res_s, res_i, visited, jnp.int32(0))
-    _, _, res_s, res_i, _, iters = jax.lax.while_loop(cond, body, st)
-    return res_i, res_s, iters
+class TraversalStats(NamedTuple):
+    """Per-query telemetry from one batched traversal."""
+    iters: jax.Array        # (Q,) int32 — beam-expansion iterations executed
+    expansions: jax.Array   # (Q,) int32 — candidates actually expanded
+    reason: jax.Array       # (Q,) int32 — REASON_CONVERGED / REASON_MAX_ITERS
 
 
 def search_hnsw(g: HNSWDeviceGraph, queries: jax.Array, k: int, ef: int,
-                max_iters: int | None = None):
-    """Batched KNN search. queries: (Q, W) uint32 -> (ids (Q,k), sims (Q,k))."""
+                max_iters: int | None = None, beam: int = 1, score_fn=None):
+    """Batched device-resident KNN search over the base layer.
+
+    The whole query batch traverses in lock-step inside one
+    ``lax.while_loop``: per iteration each still-active query pops its best
+    ``beam`` candidates from the candidate queue C, gathers their base-layer
+    adjacency (``beam * 2M`` neighbour ids), scores all of them in ONE
+    gather-distance launch (``score_fn``), and rank-merges the scored batch
+    into both fixed-shape register-array queues (C and the result set M,
+    ``core/topk.py``). A per-query visited bitset gives exactly-once scoring;
+    queries terminate individually (Alg. 2 bound: best candidate worse than
+    the worst retained result) and finished queries ride along masked until
+    the last one converges or ``max_iters`` is hit.
+
+    queries: (Q, W) uint32. Returns ``(ids (Q, k), sims (Q, k), stats)``
+    with ids descending by similarity (-1 pads) and :class:`TraversalStats`
+    device arrays.
+
+    ``score_fn(queries, q_cnt, ids) -> sims`` is the fine-grained distance
+    stage; default is the jnp gather (:func:`score_ids_jnp`), engines pass
+    the Pallas ``gather_tanimoto`` kernel for the ``tpu`` backend.
+    """
     ef = max(ef, k)
+    beam = max(1, min(beam, ef))
     if max_iters is None:
         max_iters = 4 * ef + 16
+    if score_fn is None:
+        def score_fn(qs, qc, ids):
+            return score_ids_jnp(qs, qc, g, ids)
 
-    def one(q):
-        q_cnt = jnp.sum(jax.lax.population_count(q).astype(jnp.int32))
+    q_n = queries.shape[0]
+    n = g.db.shape[0]
+    m2 = g.base_adj.shape[1]
+    n_exp = beam * m2                                   # neighbours per launch
+    vwords = (n + 31) // 32
+    q_cnt = jnp.sum(jax.lax.population_count(queries).astype(jnp.int32), -1)
+
+    # greedy descent through the upper layers (Alg. 1), vmapped per query
+    def descend(q, qc):
         ep = g.entry_point
-        for level in range(g.max_level, 0, -1):   # static unroll over levels
-            ep = _greedy_descent(q, q_cnt, g, level)
-        ids, sims, iters = _search_base(q, q_cnt, g, ep, ef, max_iters)
-        return ids[:k], sims[:k], iters
+        for level in range(g.max_level, 0, -1):          # static unroll
+            ep = _greedy_descent(q, qc, g, level, ep)
+        return ep
 
-    return jax.vmap(one)(queries)
+    ep = jax.vmap(descend)(queries, q_cnt)               # (Q,)
+    ep_sim = score_fn(queries, q_cnt, ep[:, None])[:, 0]
+
+    # C (candidates, pop-best) and M (results, evict-worst): batched
+    # register-array queues (core/topk.py PQ invariants), one row per query —
+    # every queue op below is the vmapped scalar PQ primitive.
+    cand = PQ(jnp.full((q_n, ef), NEG_INF).at[:, 0].set(ep_sim),
+              jnp.full((q_n, ef), -1, jnp.int32).at[:, 0].set(ep))
+    res = cand
+    rows = jnp.arange(q_n)
+    visited = jnp.zeros((q_n, vwords), jnp.uint32)
+    visited = visited.at[rows, ep // 32].set(
+        jnp.uint32(1) << (ep % 32).astype(jnp.uint32))
+
+    def where_rows(mask, new, old):
+        """Per-query select between two batched PQ pytrees."""
+        return jax.tree.map(
+            lambda a, b: jnp.where(mask[:, None], a, b), new, old)
+
+    state = (cand, res, visited,
+             jnp.ones((q_n,), bool),                     # active
+             jnp.zeros((q_n,), jnp.int32),               # iters
+             jnp.zeros((q_n,), jnp.int32),               # expansions
+             jnp.int32(0))                               # lock-step counter
+
+    def cond(st):
+        active, it = st[3], st[6]
+        return jnp.logical_and(jnp.any(active), it < max_iters)
+
+    def body(st):
+        cand, res, visited, active, iters, expans, it = st
+        worst = jax.vmap(pq_worst)(res)                  # eviction threshold
+        # Alg. 2 termination, per query: stop when the best candidate cannot
+        # beat the worst retained result (monotone -> inactive stays inactive)
+        go = jnp.logical_and(active, jnp.logical_and(
+            cand.scores[:, 0] > NEG_INF, cand.scores[:, 0] >= worst))
+
+        # pop the beam: best B candidates, queue shifts up by B
+        pop_s, pop_i, popped = jax.vmap(
+            lambda pq: pq_pop_many(pq, beam))(cand)
+        valid_pop = (pop_s > NEG_INF) & (pop_s >= worst[:, None]) & go[:, None]
+        cand = where_rows(go, popped, cand)
+
+        # beam expansion: adjacency gather, (Q, beam, 2M)
+        nb = g.base_adj[jnp.maximum(pop_i, 0)]
+        nb = jnp.where(valid_pop[:, :, None], nb, -1)
+
+        # visited check + mark, one beam slot at a time (static unroll): ids
+        # within a slot are unique (one node's adjacency), so the scatter-ADD
+        # below equals scatter-OR; marking between slots dedups neighbours
+        # shared by two popped candidates in the same iteration.
+        fresh_slots = []
+        for b in range(beam):
+            ids_b = nb[:, b, :]
+            safe = jnp.maximum(ids_b, 0)
+            word = jnp.take_along_axis(visited, safe // 32, axis=1)
+            bit = (word >> (safe % 32).astype(jnp.uint32)) & 1
+            fresh = jnp.logical_and(ids_b >= 0, bit == 0)
+            upd = jnp.where(
+                fresh, jnp.uint32(1) << (safe % 32).astype(jnp.uint32),
+                jnp.uint32(0))
+            visited = visited.at[rows[:, None], safe // 32].add(upd)
+            fresh_slots.append(fresh)
+        fresh = jnp.stack(fresh_slots, axis=1).reshape(q_n, n_exp)
+        flat = jnp.where(fresh, nb.reshape(q_n, n_exp), -1)
+
+        # fine-grained distance stage: B*2M neighbours per query, one launch
+        s = score_fn(queries, q_cnt, flat)
+        keep = s > worst[:, None]                        # evict-worst filter
+        s = jnp.where(keep, s, NEG_INF)
+        flat = jnp.where(keep, flat, -1)
+
+        # sort the expansion once (it feeds BOTH queues — pq_insert_batch
+        # would sort twice), then rank-merge into each queue (Fig. 9)
+        kk = min(n_exp, ef)
+        s_srt, pos = jax.lax.top_k(s, kk)
+        i_srt = jnp.take_along_axis(flat, pos, axis=1)
+        vmerge = jax.vmap(
+            lambda pq, ms, mi: PQ(*merge_sorted(pq.scores, pq.payload,
+                                                ms, mi)))
+        res = where_rows(go, vmerge(res, s_srt, i_srt), res)
+        cand = where_rows(go, vmerge(cand, s_srt, i_srt), cand)
+
+        iters = iters + go.astype(jnp.int32)
+        expans = expans + jnp.sum(valid_pop, axis=1).astype(jnp.int32)
+        return cand, res, visited, go, iters, expans, it + 1
+
+    _, res, _, active, iters, expans, _ = jax.lax.while_loop(cond, body, state)
+    reason = jnp.where(active, REASON_MAX_ITERS, REASON_CONVERGED)
+    ids = res.payload[:, :k]
+    sims = jnp.where(ids >= 0, res.scores[:, :k], 0.0)
+    return ids, sims, TraversalStats(iters=iters, expansions=expans,
+                                     reason=reason.astype(jnp.int32))
+
+
+def search_hnsw_numpy(index: HNSWIndex, queries: np.ndarray, k: int, ef: int):
+    """Host-side reference traversal (the ``numpy`` engine backend).
+
+    True variable-length queues (heapq), one python loop per query — the
+    semantics oracle for the fixed-shape device path. Returns
+    ``(ids (Q, k) int64, sims (Q, k) float32, counters)`` where counters
+    accumulates ``evals`` / ``iters`` over the batch.
+    """
+    ef = max(ef, k)
+    db, db_cnt = index.db, index.db_popcount
+
+    def adj_at(level):
+        if level == 0:
+            return lambda gid: index.base_adj[gid]
+        gids = index.level_nodes[level - 1]
+        adjm = index.level_adj[level - 1]
+
+        def f(gid):
+            r = np.searchsorted(gids, gid)
+            if r < len(gids) and gids[r] == gid:
+                return adjm[r]
+            return np.empty((0,), np.int32)
+        return f
+
+    queries = np.asarray(queries)
+    ids_out = np.full((len(queries), k), -1, dtype=np.int64)
+    sims_out = np.zeros((len(queries), k), dtype=np.float32)
+    counters: dict = {"evals": 0, "iters": 0}
+    for qi, q in enumerate(queries):
+        ep = np.asarray([index.entry_point], dtype=np.int32)
+        for level in range(index.max_level, 0, -1):
+            ids, _ = _search_layer_np(db, db_cnt, adj_at(level), q, ep, 1)
+            ep = ids[:1]
+        ids, sims = _search_layer_np(db, db_cnt, adj_at(0), q, ep, ef,
+                                     counters=counters)
+        kk = min(k, len(ids))
+        ids_out[qi, :kk] = ids[:kk]
+        sims_out[qi, :kk] = sims[:kk]
+    return ids_out, sims_out, counters

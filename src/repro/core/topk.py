@@ -1,16 +1,36 @@
-"""Top-k primitives: streaming tile merge and sorted-array priority queue.
+"""Top-k primitives: the shared register-array priority queue + tile merge.
 
-Two structures from the paper (DESIGN.md §2):
+One module models the paper's two sorting structures (DESIGN.md §2, Fig. 9):
 
-* ``streaming_topk`` — the top-K *merge sort* unit of the exhaustive engine:
-  the score stream is consumed tile by tile; each tile's local top-k is merged
-  into a running top-k so the full score array never exists in memory. This is
-  the pure-JAX model of the fused Pallas kernel in ``kernels/tanimoto_topk``.
+* :class:`PQ` — a fixed-capacity *register-array priority queue*: a
+  descending-sorted pair of (scores, payload) lanes with ``NEG_INF`` / ``-1``
+  sentinels in the empty slots. This is the TPU analogue of the paper's
+  register-array PQ (even/odd compare-and-swap network, initiation interval
+  1): every operation is a constant-shape vector op across the ``cap`` lanes,
+  never a data-dependent resize.
 
-* ``PriorityQueue`` — fixed-shape sorted-array priority queue, the TPU
-  analogue of the paper's register-array PQ (even/odd compare-and-swap,
-  initiation interval 1). Insert is a vectorised compare-and-shift across
-  lanes: O(1) sequential depth, constant shapes (no data-dependent sizes).
+  - :func:`pq_insert` — compare-and-shift insert: find the insertion lane,
+    shift the tail by one, write. O(cap) lane work, O(1) sequential depth.
+    When full, the worst entry falls off the end (the paper's bounded result
+    set M behaviour — "evict worst").
+  - :func:`pq_insert_batch` — merge a batch of E unsorted candidates: one
+    sort of the batch (``lax.top_k``) followed by a rank-computation merge of
+    the two sorted runs (:func:`merge_sorted`), i.e. a *merge* network, not a
+    re-sort of the whole queue.
+  - :func:`pq_pop` / :func:`pq_pop_many` — pop the best 1 / B entries and
+    shift the array up (the candidate set C of HNSW's SEARCH-LAYER).
+  - :func:`pq_worst` — the current eviction threshold (``NEG_INF`` while the
+    queue still has free lanes, so inserts always succeed until full).
+
+* :func:`streaming_topk` — the top-K merge-sort unit of the exhaustive
+  engine: a score stream is consumed tile by tile and each tile is folded
+  into a running :class:`PQ` via :func:`pq_insert_batch`, so the full score
+  array never exists in memory. Pure-JAX model of the fused Pallas kernel in
+  ``kernels/tanimoto_topk``.
+
+Both the HNSW traversal queues (``core/hnsw.py``) and the streaming scan are
+built on the same PQ primitives — there is exactly one top-k merge
+implementation in the codebase.
 """
 from __future__ import annotations
 
@@ -22,12 +42,96 @@ import jax.numpy as jnp
 NEG_INF = jnp.float32(-jnp.inf)
 
 
-def merge_topk(scores_a, idx_a, scores_b, idx_b, k: int):
-    """Merge two (descending) top-k candidate sets into one of size k."""
-    s = jnp.concatenate([scores_a, scores_b])
-    i = jnp.concatenate([idx_a, idx_b])
-    top_s, pos = jax.lax.top_k(s, k)
-    return top_s, i[pos]
+class PQ(NamedTuple):
+    """Fixed-capacity register-array priority queue.
+
+    Invariant: ``scores`` is sorted descending; empty lanes hold ``NEG_INF``
+    scores and ``-1`` payloads and always form a suffix. The queue is "full"
+    exactly when ``scores[-1] > NEG_INF``.
+    """
+    scores: jax.Array   # (cap,) float32, descending
+    payload: jax.Array  # (cap,) int32
+
+    @property
+    def cap(self) -> int:
+        return self.scores.shape[0]
+
+
+def pq_make(cap: int) -> PQ:
+    return PQ(jnp.full((cap,), NEG_INF),
+              jnp.full((cap,), -1, dtype=jnp.int32))
+
+
+def pq_insert(pq: PQ, score: jax.Array, payload: jax.Array) -> PQ:
+    """Compare-and-shift insert (register-array style).
+
+    Vectorised across lanes: compute the insertion position, shift the tail
+    one lane down, write. When the queue is full and ``score`` is worse than
+    every entry, the insert is dropped; otherwise the worst entry is evicted.
+    Ties keep existing entries ahead of the new one.
+    """
+    cap = pq.cap
+    lane = jnp.arange(cap)
+    pos = jnp.sum((pq.scores >= score).astype(jnp.int32))
+    shifted_s = jnp.where(lane > pos, jnp.roll(pq.scores, 1), pq.scores)
+    shifted_p = jnp.where(lane > pos, jnp.roll(pq.payload, 1), pq.payload)
+    new_s = jnp.where(lane == pos, score, shifted_s)
+    new_p = jnp.where(lane == pos, payload, shifted_p)
+    dropped = pos >= cap
+    return PQ(jnp.where(dropped, pq.scores, new_s),
+              jnp.where(dropped, pq.payload, new_p))
+
+
+def pq_pop(pq: PQ):
+    """Pop the best entry; returns ``(score, payload, rest)``."""
+    s, p, rest = pq_pop_many(pq, 1)
+    return s[0], p[0], rest
+
+
+def pq_pop_many(pq: PQ, b: int):
+    """Pop the best ``b`` entries (the beam): returns ``(scores (b,),
+    payloads (b,), rest)``. Popping past the valid suffix yields sentinels."""
+    b = min(b, pq.cap)
+    rest = PQ(
+        jnp.concatenate([pq.scores[b:], jnp.full((b,), NEG_INF)]),
+        jnp.concatenate([pq.payload[b:], jnp.full((b,), -1, jnp.int32)]))
+    return pq.scores[:b], pq.payload[:b], rest
+
+
+def pq_worst(pq: PQ) -> jax.Array:
+    """Eviction threshold: the worst retained score, ``NEG_INF`` until full."""
+    return pq.scores[-1]
+
+
+def merge_sorted(s_a: jax.Array, i_a: jax.Array,
+                 s_b: jax.Array, i_b: jax.Array):
+    """Merge two descending-sorted runs, keeping the best ``len(s_a)``.
+
+    Rank-computation merge (the constant-shape analogue of a merge network):
+    each element's output position is its own index plus the count of
+    elements from the other run strictly ahead of it — two vectorised
+    ``searchsorted`` calls and one scatter, no re-sort. Ties place run-A
+    elements first, so re-merging is stable w.r.t. the existing queue.
+    """
+    a, b = s_a.shape[0], s_b.shape[0]
+    na, nb = -s_a, -s_b                       # ascending views
+    pos_a = jnp.arange(a) + jnp.searchsorted(nb, na, side="left")
+    pos_b = jnp.arange(b) + jnp.searchsorted(na, nb, side="right")
+    out_s = jnp.zeros((a + b,), s_a.dtype).at[pos_a].set(s_a).at[pos_b].set(s_b)
+    out_i = jnp.zeros((a + b,), i_a.dtype).at[pos_a].set(i_a).at[pos_b].set(i_b)
+    return out_s[:a], out_i[:a]
+
+
+def pq_insert_batch(pq: PQ, scores: jax.Array, payloads: jax.Array) -> PQ:
+    """Merge a batch of E unsorted candidates into the queue.
+
+    Sorts the batch once (only its best ``cap`` can matter), then rank-merges
+    the two sorted runs. ``NEG_INF`` scores never displace valid entries.
+    """
+    kk = min(scores.shape[0], pq.cap)
+    s_sorted, pos = jax.lax.top_k(scores, kk)
+    p_sorted = jnp.take(payloads, pos)
+    return PQ(*merge_sorted(pq.scores, pq.payload, s_sorted, p_sorted))
 
 
 def streaming_topk(scores: jax.Array, k: int, tile: int = 2048):
@@ -39,65 +143,11 @@ def streaming_topk(scores: jax.Array, k: int, tile: int = 2048):
     n_pad = (-n) % tile
     scores_p = jnp.pad(scores, (0, n_pad), constant_values=-jnp.inf)
     n_tiles = scores_p.shape[0] // tile
-    init = (jnp.full((k,), NEG_INF), jnp.full((k,), -1, dtype=jnp.int32))
 
-    def body(carry, t):
-        run_s, run_i = carry
+    def body(pq, t):
         tile_s = jax.lax.dynamic_slice(scores_p, (t * tile,), (tile,))
         tile_i = t * tile + jnp.arange(tile, dtype=jnp.int32)
-        run_s, run_i = merge_topk(run_s, run_i, tile_s, tile_i, k)
-        return (run_s, run_i), None
+        return pq_insert_batch(pq, tile_s, tile_i), None
 
-    (vals, idxs), _ = jax.lax.scan(body, init, jnp.arange(n_tiles))
-    return vals, idxs
-
-
-class PQ(NamedTuple):
-    """Fixed-capacity priority queue state. ``scores`` sorted; invalid = sentinel."""
-    scores: jax.Array   # (cap,) f32
-    payload: jax.Array  # (cap,) int32
-    size: jax.Array     # () int32
-
-
-def pq_make(cap: int, max_heap: bool) -> PQ:
-    """max_heap=True keeps the *largest* entries sorted descending (results set M);
-    max_heap=False keeps the *smallest* sorted ascending (not used for similarity,
-    provided for distance metrics)."""
-    fill = NEG_INF if max_heap else jnp.float32(jnp.inf)
-    return PQ(jnp.full((cap,), fill), jnp.full((cap,), -1, dtype=jnp.int32),
-              jnp.int32(0))
-
-
-def pq_insert_max(pq: PQ, score: jax.Array, payload: jax.Array) -> PQ:
-    """Insert into a descending-sorted max queue (register-array style).
-
-    Vectorised compare-and-shift: find insertion position, shift the tail by
-    one lane, write. When full, the smallest entry falls off the end — which
-    is exactly the paper's bounded result set M behaviour.
-    """
-    cap = pq.scores.shape[0]
-    pos = jnp.sum((pq.scores >= score).astype(jnp.int32))  # first index with smaller score
-    lane = jnp.arange(cap)
-    shifted_s = jnp.where(lane > pos, jnp.roll(pq.scores, 1), pq.scores)
-    shifted_p = jnp.where(lane > pos, jnp.roll(pq.payload, 1), pq.payload)
-    new_s = jnp.where(lane == pos, score, shifted_s)
-    new_p = jnp.where(lane == pos, payload, shifted_p)
-    dropped = pos >= cap  # score worse than everything in a full queue
-    new_s = jnp.where(dropped, pq.scores, new_s)
-    new_p = jnp.where(dropped, pq.payload, new_p)
-    size = jnp.where(dropped, pq.size, jnp.minimum(pq.size + 1, cap))
-    return PQ(new_s, new_p, size)
-
-
-def pq_pop_max(pq: PQ):
-    """Pop the best (largest score) entry; returns (score, payload, new_pq)."""
-    s0, p0 = pq.scores[0], pq.payload[0]
-    new_s = jnp.concatenate([pq.scores[1:], jnp.array([NEG_INF])])
-    new_p = jnp.concatenate([pq.payload[1:], jnp.array([-1], dtype=jnp.int32)])
-    return s0, p0, PQ(new_s, new_p, jnp.maximum(pq.size - 1, 0))
-
-
-def pq_worst_max(pq: PQ) -> jax.Array:
-    """Score of the worst *valid* entry (or -inf when not full)."""
-    cap = pq.scores.shape[0]
-    return jnp.where(pq.size >= cap, pq.scores[cap - 1], NEG_INF)
+    pq, _ = jax.lax.scan(body, pq_make(k), jnp.arange(n_tiles))
+    return pq.scores, pq.payload

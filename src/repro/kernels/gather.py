@@ -1,0 +1,104 @@
+"""Fused gather-distance Pallas kernel — the fine-grained distance engine of
+the HNSW traversal path (paper §III-C: the distance calculation unit feeding
+the graph-walk priority queues).
+
+FPGA -> TPU mapping:
+
+* On the FPGA, beam expansion issues the popped vertices' adjacency lists to
+  a fine-grained distance engine: each neighbour id becomes one HBM fetch of
+  a single fingerprint, pipelined through BitCnt -> TFC at initiation
+  interval 1, and the scores stream straight into the register-array PQs.
+* Here the candidate id matrix ``(Q, E)`` is a **scalar-prefetch** operand:
+  the grid is ``(Q, E)`` and the database BlockSpec's ``index_map`` reads
+  ``ids[q, e]`` to DMA exactly that fingerprint row HBM->VMEM — a true
+  data-dependent gather, the Pallas analogue of the FPGA's address generator.
+  Per grid step the kernel computes one popcount-Tanimoto (the row's BitCnt
+  is recomputed in-register — W words, cheaper than a second gather of the
+  precomputed count) and accumulates it into a per-query VMEM row of E
+  scores, emitted once on the last step.
+* Validity masking: id ``-1`` marks padded / already-visited / masked-out
+  neighbours. The index_map clamps them to row 0 (the fetch must still be
+  addressable) and the body overwrites their score with ``-inf`` so the PQ
+  merge downstream never admits them.
+
+The kernel is jit-compatible and is launched from *inside* the traversal's
+``lax.while_loop`` — one launch scores a whole beam expansion (B·2M
+neighbours for every query in the batch), which is what amortises traversal
+overhead vs. per-candidate dispatch.
+
+Validated with ``interpret=True`` on CPU against ``ref.gather_tanimoto_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = float("-inf")  # python scalar: must not be a captured jnp constant
+
+
+def _gather_body(ids_ref, q_ref, qcnt_ref, row_ref, out_ref, s_buf,
+                 *, n_cand: int):
+    qi = pl.program_id(0)
+    e = pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _init():
+        s_buf[...] = jnp.full((1, n_cand), NEG, jnp.float32)
+
+    q = q_ref[0, :]                                     # (W,) uint32
+    row = row_ref[0, :]                                 # (W,) gathered print
+    inter = jnp.sum(jax.lax.population_count(q & row).astype(jnp.int32))
+    cnt = jnp.sum(jax.lax.population_count(row).astype(jnp.int32))
+    union = qcnt_ref[0] + cnt - inter
+    s = jnp.where(union > 0,
+                  inter.astype(jnp.float32) / union.astype(jnp.float32),
+                  jnp.float32(0.0))
+    s = jnp.where(ids_ref[qi, e] >= 0, s, NEG)          # validity mask
+    lane = jax.lax.iota(jnp.int32, n_cand)
+    s_buf[0, :] = jnp.where(lane == e, s, s_buf[0, :])
+
+    @pl.when(e == n_cand - 1)
+    def _emit():
+        out_ref[0, :] = s_buf[0, :]
+
+
+def gather_tanimoto_scores(queries: jax.Array, q_cnt: jax.Array,
+                           db: jax.Array, ids: jax.Array,
+                           interpret: bool = True) -> jax.Array:
+    """queries (Q, W) u32, q_cnt (Q,) i32, db (N, W) u32, ids (Q, E) i32.
+
+    Returns sims (Q, E) f32: Tanimoto(query_q, db[ids[q, e]]), with ``-inf``
+    wherever ``ids[q, e] < 0``. The DB stays in HBM; only the E gathered rows
+    per query cross into VMEM.
+    """
+    q_n, w = queries.shape
+    e_n = ids.shape[1]
+    n = db.shape[0]
+
+    def row_index(q, e, ids_ref):
+        # clamp invalid (-1) and out-of-range ids to an addressable row; the
+        # body masks their score to -inf, so the fetched data is never used
+        return (jnp.clip(ids_ref[q, e], 0, n - 1), 0)
+
+    body = functools.partial(_gather_body, n_cand=e_n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q_n, e_n),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda q, e, ids_ref: (q, 0)),   # query row
+            pl.BlockSpec((1,), lambda q, e, ids_ref: (q,)),       # query count
+            pl.BlockSpec((1, w), row_index),                      # gathered row
+        ],
+        out_specs=pl.BlockSpec((1, e_n), lambda q, e, ids_ref: (q, 0)),
+        scratch_shapes=[pltpu.VMEM((1, e_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((q_n, e_n), jnp.float32),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), queries, q_cnt, db)

@@ -147,6 +147,25 @@ def bitcount(words: jax.Array) -> jax.Array:
     return ktk.bitcount(jnp.asarray(words), interpret=_interpret())
 
 
+def gather_tanimoto(queries: jax.Array, db: jax.Array, ids: jax.Array,
+                    q_cnt: jax.Array | None = None) -> jax.Array:
+    """Fine-grained gather-distance stage: per-query candidate ids -> sims.
+
+    queries (Q, W) u32, db (N, W) u32, ids (Q, E) i32 -> (Q, E) f32.
+    Entries with id ``-1`` come back as ``-inf``. Jit-compatible — the HNSW
+    traversal calls this from inside its ``lax.while_loop``, scoring one
+    whole beam expansion (B·2M neighbour ids) per kernel launch.
+    """
+    from . import gather as kg
+    queries = jnp.asarray(queries)
+    db = jnp.asarray(db)
+    ids = jnp.asarray(ids, dtype=jnp.int32)
+    if q_cnt is None:
+        q_cnt = popcount(queries)
+    return kg.gather_tanimoto_scores(queries, q_cnt, db, ids,
+                                     interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("k", "qb", "tile_n"))
 def _blocked_topk_impl(queries, db, db_cnt, k: int, qb: int, tile_n: int):
     n = db.shape[0]

@@ -58,5 +58,20 @@ def window_topk_ref(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
     return ids.astype(jnp.int32), vals
 
 
+def gather_tanimoto_ref(queries: jax.Array, db: jax.Array,
+                        ids: jax.Array) -> jax.Array:
+    """Oracle for the gather-distance kernel: (Q, W) x (Q, E) ids -> (Q, E)
+    sims, with -inf wherever id < 0."""
+    safe = jnp.clip(ids, 0, db.shape[0] - 1)
+    rows = db[safe]                                     # (Q, E, W)
+    q_cnt = popcount(queries)
+    inter = jnp.sum(jax.lax.population_count(
+        queries[:, None, :] & rows).astype(jnp.int32), axis=-1)
+    union = q_cnt[:, None] + popcount(db)[safe] - inter
+    s = jnp.where(union > 0,
+                  inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
+    return jnp.where(ids >= 0, s, -jnp.inf)
+
+
 def bitcount_ref(words: jax.Array) -> jax.Array:
     return popcount(words)

@@ -24,9 +24,11 @@ from .mesh import make_local_mesh
 def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
           n_queries: int = 256, batches: int = 4, use_kernel: bool = False,
           backend: str | None = None, log=print):
-    """``backend`` selects the BitBound execution path: "numpy" (host
-    reference), "tpu" (device-resident two-stage Pallas pipeline,
-    interpret-mode off-TPU) or "jnp" (device path without Pallas)."""
+    """``backend`` selects the engine execution path (shared contract, see
+    ``core/engine.py``): "numpy" (host reference), "tpu" (device-resident
+    Pallas pipeline, interpret-mode off-TPU) or "jnp" (device path without
+    Pallas). Applies to the ``bitbound-folding`` (two-stage scan) and
+    ``hnsw`` (batched graph traversal) engines."""
     db = synthetic_fingerprints(SyntheticConfig(n=n_db))
     queries = queries_from_db(db, n_queries * batches)
 
@@ -62,12 +64,18 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
     elif engine == "hnsw":
         eng = HNSWEngine(db[:min(n_db, 20_000)], m=CHEMBL_LIKE.hnsw_m,
                          ef_construction=CHEMBL_LIKE.hnsw_ef_construction,
-                         ef_search=CHEMBL_LIKE.hnsw_ef_search)
+                         ef_search=CHEMBL_LIKE.hnsw_ef_search,
+                         backend=backend)
         eng.search(queries[:n_queries], k)  # compile
         t0 = time.time()
         for b in range(batches):
             eng.search(queries[b * n_queries:(b + 1) * n_queries], k)
         dt = time.time() - t0
+        log(f"[search-serve] hnsw traversal stats: "
+            f"{eng.stats.get('iters', 0)} iters, "
+            f"{eng.stats.get('neighbour_evals', 0)} neighbour evals, "
+            f"{eng.stats.get('max_iters_hit', 0)} budget-terminated "
+            f"(last batch)")
     else:
         raise ValueError(engine)
 
@@ -88,7 +96,8 @@ def main():
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--backend", default=None,
                     choices=["numpy", "jnp", "tpu"],
-                    help="bitbound-folding execution path (default: numpy)")
+                    help="engine execution path for bitbound-folding "
+                         "(default numpy) and hnsw (default jnp)")
     args = ap.parse_args()
     serve(args.engine, n_db=args.n_db, k=args.k, n_queries=args.n_queries,
           use_kernel=args.use_kernel, backend=args.backend)

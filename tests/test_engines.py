@@ -1,8 +1,10 @@
 """End-to-end engine behaviour (paper §IV): brute force is exact; BitBound &
 folding trade recall per Table I / Fig 2; work scales down with cutoff."""
 import numpy as np
+import pytest
 
-from repro.core import (BruteForceEngine, BitBoundFoldingEngine, recall_at_k)
+from repro.core import (BruteForceEngine, BitBoundFoldingEngine, HNSWEngine,
+                        recall_at_k)
 
 
 def test_bruteforce_exact(small_db, queries, brute_truth):
@@ -85,3 +87,48 @@ def test_scanned_counter_contract(small_db, queries):
         # and scales linearly in the requested n_queries
         assert eng.scanned(2 * nq) == 2 * got
         assert eng.scanned(0) == 0
+
+
+def test_scanned_contract_pins_all_engines(small_db, queries):
+    """Regression (ISSUE 2 satellite): every data-dependent engine follows
+    the SAME extrapolate-from-last-batch contract — ``scanned(n) =
+    last_batch_total * n / last_batch_n_queries`` — including when the
+    requested ``n`` differs from the batch size (the old HNSW counter
+    double-counted there)."""
+    db = np.asarray(small_db)[:500]
+    qs = np.asarray(queries)[:4]      # batch of 4 ...
+    ask = 10                          # ... but ask about 10 queries
+
+    engines = [
+        BitBoundFoldingEngine(db, cutoff=0.6, m=2, backend="numpy"),
+        BitBoundFoldingEngine(db, cutoff=0.6, m=2, backend="tpu"),
+        HNSWEngine(db, m=6, ef_construction=30, backend="numpy"),
+        HNSWEngine(db, m=6, ef_construction=30, backend="jnp"),
+    ]
+    for eng in engines:
+        label = f"{type(eng).__name__}[{eng.backend}]"
+        assert eng.scanned(ask) == 0, label        # nothing before a search
+        eng.search(qs, 5)
+        batch_total = eng.scanned(len(qs))         # identity at batch size
+        assert batch_total > 0, label
+        assert eng.scanned(ask) == round(batch_total * ask / len(qs)), label
+        assert eng.scanned(2 * len(qs)) == 2 * batch_total, label
+        assert eng.scanned(0) == 0, label
+
+    # HNSW specifically: the batch total is the traversal's own telemetry,
+    # not an iteration count rescaled twice
+    hnsw = engines[-1]
+    hnsw.search(qs, 5)
+    assert hnsw.scanned(len(qs)) == hnsw.stats["neighbour_evals"]
+
+    # input-independent engine: closed form, defined before any search
+    brute = BruteForceEngine(db)
+    assert brute.scanned(ask) == ask * db.shape[0]
+
+
+def test_engine_backend_validation():
+    db = np.zeros((4, 8), np.uint32)
+    with pytest.raises(ValueError, match="backend"):
+        BruteForceEngine(db, backend="numpy")      # no host path for brute
+    with pytest.raises(ValueError, match="backend"):
+        BitBoundFoldingEngine(db, backend="cuda")

@@ -1,6 +1,10 @@
-"""HNSW: build invariants + accelerated search recall."""
+"""HNSW: build invariants, accelerated search recall, backend parity."""
 import numpy as np
 import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collection-safe fallback (see tests/_propcheck.py)
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import hnsw as hn
 from repro.core import HNSWEngine, recall_at_k
@@ -75,6 +79,88 @@ def test_search_recall_vs_bruteforce(tiny_index):
     assert rec >= 0.8, rec
     # self-query must find itself (similarity 1)
     assert (sims[:, 0] >= 1.0 - 1e-6).all()
+
+
+def _truth(db, q, k=10):
+    import jax.numpy as jnp
+    from repro.core import batched_tanimoto_scores
+    s = np.asarray(batched_tanimoto_scores(jnp.asarray(q), jnp.asarray(db)))
+    return np.argsort(-s, axis=1, kind="stable")[:, :k]
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 48]),
+       st.sampled_from([1, 2, 4]))
+@settings(max_examples=4, deadline=None)
+def test_backend_parity_jnp_vs_tpu(seed, ef, beam):
+    """The jnp and tpu (Pallas gather kernel) backends run the same traversal
+    with the same arithmetic — recall must match within 0.01 and sims must
+    agree on small random databases (satellite of ISSUE 2)."""
+    db = synthetic_fingerprints(SyntheticConfig(n=300, seed=seed % 1000))
+    idx = hn.build_hnsw(np.asarray(db), m=4, ef_construction=20, seed=0)
+    q = queries_from_db(db, 4, seed=seed % 977)
+    true = _truth(db, q, 5)
+    recalls = {}
+    sims_by_backend = {}
+    for backend in ("jnp", "tpu"):
+        eng = HNSWEngine(db, index=idx, backend=backend, beam=beam)
+        ids, sims = eng.search(q, 5, ef=ef)
+        recalls[backend] = recall_at_k(ids, true)
+        sims_by_backend[backend] = sims
+    assert abs(recalls["jnp"] - recalls["tpu"]) <= 0.01, recalls
+    np.testing.assert_allclose(sims_by_backend["jnp"],
+                               sims_by_backend["tpu"], rtol=1e-6)
+
+
+def test_numpy_backend_reference_recall(tiny_index):
+    """Host reference traversal reaches the same recall ballpark as the
+    device path on the same index."""
+    db, idx = tiny_index
+    q = queries_from_db(db, 8, seed=9)
+    true = _truth(db, q, 10)
+    recs = {}
+    for backend in ("numpy", "jnp"):
+        eng = HNSWEngine(db, index=idx, backend=backend, ef_search=64)
+        ids, _ = eng.search(q, 10)
+        recs[backend] = recall_at_k(ids, true)
+    assert recs["numpy"] >= 0.9, recs
+    assert abs(recs["numpy"] - recs["jnp"]) <= 0.05, recs
+
+
+def test_traversal_stats_surface(tiny_index):
+    """Telemetry contract: iterations / expansions / termination reasons come
+    through HNSWEngine.stats (no private back-channel)."""
+    db, idx = tiny_index
+    q = queries_from_db(db, 8, seed=11)
+    eng = HNSWEngine(db, index=idx, ef_search=32, backend="jnp")
+    assert eng.stats == {}                      # nothing before a search
+    eng.search(q, 5)
+    st_ = eng.stats
+    assert st_["iters"] > 0 and st_["expansions"] > 0
+    assert st_["neighbour_evals"] == st_["expansions"] * idx.base_adj.shape[1]
+    assert st_["converged"] + st_["max_iters_hit"] == len(q)
+    assert st_["iters_per_query"].shape == (len(q),)
+    assert not hasattr(eng, "_last_iters")      # back-channel removed
+    # a tiny budget must terminate queries with the budget reason
+    tight = HNSWEngine(db, index=idx, ef_search=64, backend="jnp", max_iters=2)
+    tight.search(q, 5)
+    assert tight.stats["max_iters_hit"] == len(q)
+
+
+def test_beam_expansion_cuts_iterations(tiny_index):
+    """Multi-candidate beam expansion amortises traversal: ~B fewer
+    lock-step iterations at equivalent recall."""
+    db, idx = tiny_index
+    q = queries_from_db(db, 8, seed=12)
+    true = _truth(db, q, 10)
+    stats = {}
+    recs = {}
+    for beam in (1, 4):
+        eng = HNSWEngine(db, index=idx, ef_search=64, backend="jnp", beam=beam)
+        ids, _ = eng.search(q, 10)
+        stats[beam] = eng.stats["iters"]
+        recs[beam] = recall_at_k(ids, true)
+    assert stats[4] < stats[1] / 2, stats
+    assert recs[4] >= recs[1] - 0.05, recs
 
 
 def test_recall_increases_with_ef(tiny_index):

@@ -1,4 +1,4 @@
-"""Streaming top-k and register-array priority queue properties."""
+"""Register-array priority queue invariants + streaming top-k properties."""
 import jax.numpy as jnp
 import numpy as np
 try:
@@ -6,8 +6,9 @@ try:
 except ImportError:  # collection-safe fallback (see tests/_propcheck.py)
     from _propcheck import given, settings, strategies as st
 
-from repro.core.topk import (streaming_topk, pq_make, pq_insert_max,
-                             pq_pop_max, pq_worst_max)
+from repro.core.topk import (PQ, merge_sorted, pq_insert, pq_insert_batch,
+                             pq_make, pq_pop, pq_pop_many, pq_worst,
+                             streaming_topk)
 
 floats = st.floats(-1e6, 1e6, allow_nan=False, width=32)
 
@@ -31,33 +32,93 @@ def test_streaming_topk_matches_sort(xs, k, tile):
 @given(st.lists(st.tuples(floats, st.integers(0, 10_000)), min_size=1,
                 max_size=60), st.integers(1, 12))
 @settings(max_examples=60, deadline=None)
-def test_pq_keeps_best_k(items, cap):
-    pq = pq_make(cap, max_heap=True)
+def test_pq_invariants(items, cap):
+    """Sorted order, fixed capacity, evict-worst: the queue always holds
+    exactly the best <= cap entries seen so far, descending."""
+    pq = pq_make(cap)
+    for n_seen, (s, pay) in enumerate(items, start=1):
+        pq = pq_insert(pq, jnp.float32(s), jnp.int32(pay))
+        scores = np.asarray(pq.scores)
+        assert scores.shape == (cap,)                       # fixed shape
+        valid = scores[np.isfinite(scores)]
+        assert (np.diff(valid) <= 1e-6).all()               # sorted desc
+        seen = np.sort(np.asarray([x for x, _ in items[:n_seen]],
+                                  np.float32))[::-1][:cap]
+        np.testing.assert_allclose(valid, seen[:len(valid)],
+                                   rtol=1e-5, atol=1e-5)    # best-k retained
+        # empty lanes are a suffix of sentinels
+        n_valid = len(valid)
+        assert not np.isfinite(scores[n_valid:]).any()
+        assert (np.asarray(pq.payload)[n_valid:] == -1).all()
+
+
+@given(st.lists(st.tuples(floats, st.integers(0, 10_000)), min_size=1,
+                max_size=80), st.integers(1, 12))
+@settings(max_examples=40, deadline=None)
+def test_pq_batch_insert_matches_sequential(items, cap):
+    """pq_insert_batch (sort + rank-merge) == repeated compare-and-shift."""
+    seq = pq_make(cap)
     for s, pay in items:
-        pq = pq_insert_max(pq, jnp.float32(s), jnp.int32(pay))
-    scores = np.asarray(pq.scores)
-    # sorted descending
-    valid = scores[np.isfinite(scores)]
-    assert (np.diff(valid) <= 1e-6).all()
-    expect = np.sort(np.asarray([s for s, _ in items], np.float32))[::-1][:cap]
-    np.testing.assert_allclose(valid, expect[:len(valid)], rtol=1e-5, atol=1e-5)
+        seq = pq_insert(seq, jnp.float32(s), jnp.int32(pay))
+    scores = jnp.asarray(np.asarray([s for s, _ in items], np.float32))
+    pays = jnp.asarray(np.asarray([p for _, p in items], np.int32))
+    batch = pq_insert_batch(pq_make(cap), scores, pays)
+    np.testing.assert_allclose(np.asarray(seq.scores),
+                               np.asarray(batch.scores), rtol=1e-6)
+
+
+@given(st.lists(floats, min_size=1, max_size=40),
+       st.lists(floats, min_size=1, max_size=40))
+@settings(max_examples=40, deadline=None)
+def test_merge_sorted_matches_full_sort(xs, ys):
+    a = np.sort(np.asarray(xs, np.float32))[::-1].copy()
+    b = np.sort(np.asarray(ys, np.float32))[::-1].copy()
+    ia = np.arange(len(a), dtype=np.int32)
+    ib = 1000 + np.arange(len(b), dtype=np.int32)
+    ms, mi = merge_sorted(jnp.asarray(a), jnp.asarray(ia),
+                          jnp.asarray(b), jnp.asarray(ib))
+    expect = np.sort(np.concatenate([a, b]))[::-1][:len(a)]
+    np.testing.assert_allclose(np.asarray(ms), expect, rtol=1e-6)
+    # payloads track their scores
+    both_s = np.concatenate([a, b])
+    both_i = np.concatenate([ia, ib])
+    for s, i in zip(np.asarray(ms), np.asarray(mi)):
+        assert s in both_s[both_i == i]
 
 
 def test_pq_pop_order():
-    pq = pq_make(4, max_heap=True)
+    pq = pq_make(4)
     for s in [0.2, 0.9, 0.5, 0.7, 0.1]:
-        pq = pq_insert_max(pq, jnp.float32(s), jnp.int32(int(s * 10)))
+        pq = pq_insert(pq, jnp.float32(s), jnp.int32(int(s * 10)))
     out = []
     for _ in range(4):
-        s, p, pq = pq_pop_max(pq)
+        s, p, pq = pq_pop(pq)
         out.append(float(s))
     assert out == sorted(out, reverse=True)
     assert abs(out[0] - 0.9) < 1e-6
+    # queue now empty: sentinel pops
+    s, p, pq = pq_pop(pq)
+    assert not np.isfinite(float(s)) and int(p) == -1
 
 
-def test_pq_worst_tracks_kth():
-    pq = pq_make(3, max_heap=True)
-    assert not np.isfinite(float(pq_worst_max(pq)))
+def test_pq_pop_many_beam():
+    pq = pq_make(6)
+    for s in [0.1, 0.4, 0.9, 0.3, 0.8]:
+        pq = pq_insert(pq, jnp.float32(s), jnp.int32(int(s * 10)))
+    top_s, top_p, rest = pq_pop_many(pq, 3)
+    np.testing.assert_allclose(np.asarray(top_s), [0.9, 0.8, 0.4], rtol=1e-6)
+    assert list(np.asarray(top_p)) == [9, 8, 4]
+    # remaining entries shifted up, tail refilled with sentinels
+    np.testing.assert_allclose(np.asarray(rest.scores)[:2], [0.3, 0.1],
+                               rtol=1e-6)
+    assert not np.isfinite(np.asarray(rest.scores)[2:]).any()
+
+
+def test_pq_worst_tracks_eviction_threshold():
+    pq = pq_make(3)
+    assert not np.isfinite(float(pq_worst(pq)))     # not full: inserts free
     for s in [0.3, 0.6, 0.9]:
-        pq = pq_insert_max(pq, jnp.float32(s), jnp.int32(0))
-    assert abs(float(pq_worst_max(pq)) - 0.3) < 1e-6
+        pq = pq_insert(pq, jnp.float32(s), jnp.int32(0))
+    assert abs(float(pq_worst(pq)) - 0.3) < 1e-6    # full: worst retained
+    pq = pq_insert(pq, jnp.float32(0.5), jnp.int32(1))
+    assert abs(float(pq_worst(pq)) - 0.5) < 1e-6    # 0.3 evicted
