@@ -1,0 +1,147 @@
+"""Online-serving load benchmark: latency/QPS under mixed insert+query load.
+
+Drives a :class:`repro.serve.service.SearchService` (dynamic micro-batching,
+LSM-compacting mutable store) with deterministic workloads at configurable
+write ratios and emits ``experiments/bench/serve_load[_backend].json``:
+per-(engine, write_ratio) rows with p50/p99 request latency, QPS, scanned
+candidates, compaction counts — and ``compiles_in_window``, the number of
+pipeline compilations that happened inside the steady-state timed window.
+
+The warmup phase replays enough of the workload to touch every pipeline
+shape the steady state can need — all power-of-two batch buckets, every
+delta-bucket size below the compaction threshold (one full delta
+0 -> threshold cycle), and at least one compaction — so the timed window
+measures pure serving: ``compiles_in_window`` must be 0 (asserted by the CI
+smoke leg via the JSON).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.data.molecules import SyntheticConfig, synthetic_fingerprints, queries_from_db
+from repro.launch.search_serve import make_workload
+from repro.serve.service import SearchService
+from .common import emit
+
+WRITE_RATIOS = (0.0, 0.01, 0.1)
+
+
+def _capacities(svc):
+    return {name: eng.store.main.capacity
+            for name, eng in svc.engines.items() if hasattr(eng, "store")}
+
+
+def _run_ops(svc, ops, engine, k, flush_every):
+    since = 0
+    for op, payload in ops:
+        if op == "insert":
+            svc.insert(payload)
+        else:
+            svc.submit(payload, k=k, engine=engine)
+            since += 1
+            if since >= flush_every:
+                svc.flush()
+                since = 0
+    svc.flush()
+
+
+def run(n_db=20_000, n_ops=256, k=10, backend="jnp",
+        engines=("brute", "bitbound-folding"), write_ratios=WRITE_RATIOS,
+        compact_threshold=None, flush_every=8, suffix=None):
+    db = synthetic_fingerprints(SyntheticConfig(n=n_db, seed=0))
+    pool = synthetic_fingerprints(SyntheticConfig(n=max(4 * n_ops, 256),
+                                                  seed=7))
+    queries = queries_from_db(db, min(n_db, 256))
+    rows = []
+    for engine in engines:
+        for wr in write_ratios:
+            # threshold low enough that the warmup pass crosses >= 1
+            # compaction (and thereby visits every delta bucket) when the
+            # workload writes at all
+            expected_writes = max(int(n_ops * wr), 1)
+            ct = compact_threshold or max(2, expected_writes // 2)
+            svc = SearchService(db, engines=(engine,), backend=backend, k=k,
+                                compact_threshold=ct)
+            ops = make_workload(n_ops, wr, pool[:2 * n_ops], queries, seed=3)
+            warm_pool = pool[2 * n_ops:]
+            warm_ops = [("insert", warm_pool[i % len(warm_pool):][:1])
+                        if op == "insert" else (op, payload)
+                        for i, (op, payload) in enumerate(ops)]
+            # warmup: same op mix, different insert rows — compiles every
+            # (batch bucket, delta bucket, window bucket) shape and forces
+            # the first compaction outside the timed window
+            _run_ops(svc, warm_ops, engine, k, flush_every)
+            # pin the delta phase: the timed window then replays exactly the
+            # warmup's (batch bucket, delta bucket) shape trajectory
+            svc.compact_all()
+            warm_compactions = svc.compactions
+            # reset telemetry; keep the engines (and their compile caches)
+            svc.reset_telemetry()
+            compiled_before = svc.compiled_pipelines()
+            caps_before = _capacities(svc)
+            _run_ops(svc, ops, engine, k, flush_every)
+            compiled_after = svc.compiled_pipelines()
+            capacity_crossed = _capacities(svc) != caps_before
+            s = svc.summary()
+            rows.append({
+                "name": f"serve_{engine}_wr{wr}",
+                "engine": engine, "backend": backend,
+                "n_db": n_db, "k": k, "n_ops": n_ops,
+                "write_ratio": wr,
+                "compact_threshold": ct,
+                "p50_ms": s.get("p50_ms", 0.0),
+                "p99_ms": s.get("p99_ms", 0.0),
+                "qps": s["qps"],
+                "n_queries": s["n_queries"],
+                "n_inserts": s["n_inserts"],
+                "compactions": int(svc.compactions - warm_compactions),
+                "warmup_compactions": int(warm_compactions),
+                "batch_buckets": s["batch_buckets"],
+                "scanned": s["scanned"].get(engine, 0),
+                "compiles_in_window": int(compiled_after - compiled_before),
+                # a compaction crossing a main-capacity power-of-two inside
+                # the window legitimately recompiles (new array shapes) —
+                # reported so the hard no-recompile check can exempt it
+                "capacity_crossed": bool(capacity_crossed),
+            })
+    sfx = suffix if suffix is not None else (
+        "" if backend in (None, "jnp") else f"_{backend}")
+    emit(f"serve_load{sfx}", rows)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="jnp",
+                    choices=["numpy", "jnp", "tpu"])
+    ap.add_argument("--n-db", type=int, default=20_000)
+    ap.add_argument("--ops", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--engines", default="brute,bitbound-folding",
+                    help="comma-separated: brute,bitbound-folding,hnsw")
+    ap.add_argument("--write-ratio", type=float, default=None,
+                    help="run a single write ratio instead of the sweep "
+                         f"{WRITE_RATIOS}")
+    ap.add_argument("--compact-threshold", type=int, default=None)
+    ap.add_argument("--flush-every", type=int, default=8)
+    args = ap.parse_args()
+    ratios = (args.write_ratio,) if args.write_ratio is not None \
+        else WRITE_RATIOS
+    rows = run(n_db=args.n_db, n_ops=args.ops, k=args.k,
+               backend=args.backend,
+               engines=tuple(args.engines.split(",")),
+               write_ratios=ratios,
+               compact_threshold=args.compact_threshold,
+               flush_every=args.flush_every)
+    bad = [r for r in rows
+           if r["compiles_in_window"] and not r["capacity_crossed"]]
+    if bad:
+        raise SystemExit(
+            f"steady-state window recompiled: "
+            f"{[(r['name'], r['compiles_in_window']) for r in bad]}")
+
+
+if __name__ == "__main__":
+    main()

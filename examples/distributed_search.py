@@ -29,7 +29,8 @@ def main():
         db_s, cnt_s, n_valid = shard_database(mesh, db)
         print(f"DB sharded: {db_s.shape[0]} rows over {n_dev} devices "
               f"({db_s.sharding.spec})")
-        search, _, _ = make_sharded_search(mesh, db_s.shape[0], k=20)
+        search, _, _ = make_sharded_search(mesh, db_s.shape[0], k=20,
+                                           n_valid=n_valid)
         vals, ids = search(queries, db_s, cnt_s)
 
     _, expect = ref.tanimoto_topk_ref(queries, jnp.asarray(db), 20)

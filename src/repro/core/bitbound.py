@@ -59,6 +59,21 @@ def bound_range(index: BitBoundIndex, query_count: jax.Array, cutoff: float):
     return lo, hi
 
 
+def bound_counts_np(query_counts: np.ndarray, cutoff: float):
+    """Eq. 2 popcount bounds ``[ceil(a*Sc), floor(a/Sc)]`` in float64.
+
+    THE host-side bound formula: :func:`bound_range_np` (main-segment
+    windows) and the engines' delta-segment masks all call this one helper —
+    the insert-then-rebuild bit-parity contract requires the main window and
+    the delta mask to agree on every boundary popcount, so the clamp and
+    float width must never diverge between call sites.
+    """
+    a = np.asarray(query_counts, dtype=np.float64)
+    lo_cnt = np.ceil(a * cutoff)
+    hi_cnt = np.floor(a / max(cutoff, 1e-6))
+    return lo_cnt, hi_cnt
+
+
 def bound_range_np(counts_sorted: np.ndarray, query_counts: np.ndarray,
                    cutoff: float):
     """Host-side batched Eq. 2: windows [lo, hi) for a whole query batch.
@@ -70,9 +85,7 @@ def bound_range_np(counts_sorted: np.ndarray, query_counts: np.ndarray,
     value — both are valid Eq.2 windows, but don't cross-validate them
     expecting bit-equality.
     """
-    a = np.asarray(query_counts, dtype=np.float64)
-    lo_cnt = np.ceil(a * cutoff)
-    hi_cnt = np.floor(a / max(cutoff, 1e-6))
+    lo_cnt, hi_cnt = bound_counts_np(query_counts, cutoff)
     lo = np.searchsorted(counts_sorted, lo_cnt, side="left")
     hi = np.searchsorted(counts_sorted, hi_cnt, side="right")
     return lo.astype(np.int64), hi.astype(np.int64)

@@ -39,11 +39,19 @@ def _local_topk(queries, db_shard, cnt_shard, k: int, use_kernel: bool):
     return vals, ids
 
 
-def make_sharded_search(mesh, n_total: int, k: int, use_kernel: bool = False):
+def make_sharded_search(mesh, n_total: int, k: int, use_kernel: bool = False,
+                        n_valid: int | None = None):
     """Build a pjit-able sharded search fn.
 
     DB layout: fingerprints sharded over all DP axes (('pod','data') if
     present); queries replicated; result (Q, k) replicated.
+
+    ``n_valid`` is the unpadded database size (``shard_database`` returns
+    it): ids of the zero pad rows the sharder appends are masked to ``-1``
+    (sim 0) instead of leaking into the merged top-k — without the mask a
+    pad row's 0-score entry can displace a truncated real row whenever ``k``
+    approaches the shard size. Defaults to ``n_total`` (no masking) for
+    callers that pad externally.
     """
     dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
     db_spec = P(dp_axes, None)
@@ -52,12 +60,19 @@ def make_sharded_search(mesh, n_total: int, k: int, use_kernel: bool = False):
     for a in dp_axes:
         n_shards *= mesh.shape[a]
     shard_n = n_total // n_shards
+    if n_valid is None:
+        n_valid = n_total
 
     def local_fn(queries, db_shard, cnt_shard):
         vals, ids = _local_topk(queries, db_shard, cnt_shard, k, use_kernel)
         # global ids: offset by this shard's position along the DP axes
         idx = jax.lax.axis_index(dp_axes)
         ids = jnp.where(ids >= 0, ids + idx * shard_n, ids)
+        # pad rows out of every queue: id -1, score -inf (never beats a real
+        # row; restored to 0 after the merge)
+        pad = ids >= n_valid
+        ids = jnp.where(pad, -1, ids)
+        vals = jnp.where(pad, -jnp.inf, vals)
         # hierarchical merge: gather per-shard top-k along 'data' then 'pod'
         for ax in reversed(dp_axes):            # innermost (ICI) first
             av = jax.lax.all_gather(vals, ax)   # (D, Q, k)
@@ -67,6 +82,7 @@ def make_sharded_search(mesh, n_total: int, k: int, use_kernel: bool = False):
             ai = jnp.moveaxis(ai, 0, 1).reshape(ai.shape[1], d * k)
             vals, sel = jax.lax.top_k(av, k)
             ids = jnp.take_along_axis(ai, sel, axis=1)
+        vals = jnp.where(ids >= 0, vals, 0.0)
         return vals, ids
 
     fn = shard_map(local_fn, mesh=mesh,

@@ -29,6 +29,21 @@ Invalid names raise ``ValueError`` listing the engine's supported backends.
 The legacy ``use_kernel=True`` flag maps onto ``backend="tpu"`` when
 ``backend`` is unset.
 
+Online inserts (the serving write path)
+---------------------------------------
+``insert(fps) -> global ids`` appends fingerprints while the engine keeps
+serving. Brute/BitBound engines are backed by a
+:class:`repro.serve.store.MutableFingerprintStore` (immutable popcount-sorted
+main segment + append-only delta, LSM-style compaction): searches scan
+main + delta and rank-merge the two result runs with
+``core/topk.merge_sorted``; the delta is padded to power-of-two buckets so
+compiled pipelines are reused as it grows. :class:`HNSWEngine` routes inserts
+through :func:`repro.core.hnsw.insert_hnsw` (batched incremental graph
+construction). The contract — pinned by ``tests/test_insert_parity.py`` — is
+that after any interleaving of inserts and searches (including across a
+compaction) results are bit-identical to a from-scratch engine built on the
+concatenated database.
+
 Work accounting: ``scanned(n_queries)`` is the number of candidate
 fingerprints the engine scores for ``n_queries`` queries, extrapolated from
 the *most recent* ``search`` batch: ``last_batch_total * n_queries /
@@ -49,7 +64,7 @@ from . import bitbound as bb
 from . import folding as fl
 from . import hnsw as hn
 from .fingerprints import popcount, tanimoto_scores, batched_tanimoto_scores
-from .topk import streaming_topk
+from .topk import merge_sorted, streaming_topk
 
 
 def _kernels_available() -> bool:
@@ -60,6 +75,29 @@ def _kernels_available() -> bool:
         return False
 
 
+def _store_mod():
+    # Lazy: core must stay importable without triggering the serve package
+    # at module-import time (serve imports core back).
+    from ..serve import store
+    return store
+
+
+@jax.jit
+def _merge_main_delta(s_a, i_a, s_b, i_b, n_main):
+    """Rank-merge the main-segment and delta (scores, ids) runs, keeping the
+    best ``k = s_a.shape[1]`` per row. Ties keep run A (the main segment)
+    ahead — the same order a single stable scan over main⊕delta produces.
+
+    Main-run entries pointing at capacity-pad rows (``id >= n_main``) are
+    masked out first: their sim-0 entries would otherwise win cross-run ties
+    against real sim-0 delta rows (within the main run they always lose
+    index ties, but ``merge_sorted`` puts run A first on ties)."""
+    pad = i_a >= n_main
+    s_a = jnp.where(pad, -jnp.inf, s_a)
+    i_a = jnp.where(pad, -1, i_a)
+    return jax.vmap(merge_sorted)(s_a, i_a, s_b, i_b)
+
+
 class SearchEngine:
     """Shared engine plumbing: backend selection, compiled-function caching
     and the ``scanned`` work-counter contract (module docstring).
@@ -67,7 +105,8 @@ class SearchEngine:
     Subclasses declare ``BACKENDS`` / ``DEFAULT_BACKEND`` and call
     :meth:`_init_engine` from ``__post_init__``; per-batch work is recorded
     with :meth:`_record_batch` and jitted pipelines are memoised per static
-    key with :meth:`_cached`.
+    key with :meth:`_cached`. Online writes go through :meth:`insert`; each
+    engine implements :meth:`_apply_insert`.
     """
 
     BACKENDS: tuple = ("jnp", "tpu")
@@ -105,8 +144,26 @@ class SearchEngine:
             return 0
         return round(self._last_scanned * n_queries / self._last_n_queries)
 
+    @property
+    def n_total(self) -> int:
+        """Fingerprints currently searchable (base + online inserts)."""
+        raise NotImplementedError
+
     def search(self, queries, k: int):
         raise NotImplementedError
+
+    def insert(self, fps) -> np.ndarray:
+        """Append fingerprints online; returns their global ids (monotone,
+        stable across compactions). Results after an insert are identical to
+        a from-scratch engine on the concatenated database."""
+        fps = np.atleast_2d(np.asarray(fps, dtype=np.uint32))
+        if fps.shape[0] == 0:
+            return np.empty((0,), dtype=np.int64)
+        return self._apply_insert(fps)
+
+    def _apply_insert(self, fps: np.ndarray) -> np.ndarray:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support online insert()")
 
 
 def _brute_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array, k: int,
@@ -126,10 +183,19 @@ def _brute_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array, k: int,
 @dataclass
 class BruteForceEngine(SearchEngine):
     """Exhaustive scan. ``backend``: ``"tpu"`` = fused Pallas kernel
-    (interpret-mode off-TPU), ``"jnp"`` = streaming jnp path."""
+    (interpret-mode off-TPU), ``"jnp"`` = streaming jnp path.
+
+    Online inserts append to the store's delta segment; a search scans the
+    (capacity-padded, global-id-ordered) main segment with the compiled
+    pipeline, scans the power-of-two-padded delta with a bucketed jnp
+    pipeline, and rank-merges the two top-k runs (main capacity-pad entries
+    masked to -1 first — see :func:`_merge_main_delta`), so results match a
+    from-scratch scan exactly for ``k <= n_total``.
+    """
     db: jax.Array
     use_kernel: bool = False
     backend: str | None = None
+    compact_threshold: int = 4096
 
     BACKENDS = ("jnp", "tpu")
     DEFAULT_BACKEND = "jnp"
@@ -137,19 +203,85 @@ class BruteForceEngine(SearchEngine):
     def __post_init__(self):
         self._init_engine()
         self.use_kernel = self.backend == "tpu" and _kernels_available()
-        self.db = jnp.asarray(self.db)
-        self.db_cnt = popcount(self.db)
-        self._search = jax.jit(
-            lambda q, k: _brute_topk(q, self.db, self.db_cnt, k, self.use_kernel),
-            static_argnames="k")
+        self.store = _store_mod().MutableFingerprintStore(
+            np.asarray(self.db), sorted_main=False, fold_m=1,
+            compact_threshold=self.compact_threshold)
+        self._sync_gen = None
+        self._sync_delta = None
+        self._delta_dev = None
+        self._sync()
+
+    @property
+    def n_total(self) -> int:
+        return self.store.n_total
+
+    def _sync(self) -> None:
+        st = self.store
+        if self._sync_gen != st.generation:
+            self._sync_gen = st.generation
+            self.db = jnp.asarray(st.main.db)          # (capacity, W)
+            self.db_cnt = popcount(self.db)            # pad rows -> 0
+        if self._sync_delta != st.delta_version:
+            self._sync_delta = st.delta_version
+            if st.n_delta == 0:
+                self._delta_dev = None
+            else:
+                bucket = _store_mod().next_pow2(st.n_delta)
+                d = np.zeros((bucket, st.words), dtype=np.uint32)
+                d[:st.n_delta] = st.delta_db
+                d = jnp.asarray(d)
+                self._delta_dev = (d, popcount(d), bucket)
+
+    def _main_builder(self, k: int):
+        use_kernel = self.use_kernel
+
+        def build():
+            return jax.jit(
+                lambda q, db, db_cnt: _brute_topk(q, db, db_cnt, k, use_kernel))
+        return build
+
+    def _delta_builder(self, k: int, bucket: int):
+        def build():
+            dk = min(k, bucket)
+
+            def run(q, ddb, dcnt, n_delta):
+                s = batched_tanimoto_scores(q, ddb, dcnt)
+                slot = jnp.arange(bucket)[None, :]
+                s = jnp.where(slot < n_delta, s, -jnp.inf)
+                vals, slots = jax.lax.top_k(s, dk)
+                ids = jnp.where(jnp.isfinite(vals), slots, -1)
+                if dk < k:
+                    pad = ((0, 0), (0, k - dk))
+                    vals = jnp.pad(vals, pad, constant_values=-jnp.inf)
+                    ids = jnp.pad(ids, pad, constant_values=-1)
+                return ids, vals
+            return jax.jit(run)
+        return build
 
     def search(self, queries, k: int):
-        ids, sims = self._search(jnp.asarray(queries), k)
-        return np.asarray(ids), np.asarray(sims)
+        self._sync()
+        q = jnp.asarray(queries)
+        fn = self._cached(("main", int(k), self.db.shape[0]),
+                          self._main_builder(k))
+        ids, vals = fn(q, self.db, self.db_cnt)
+        if self._delta_dev is not None:
+            ddb, dcnt, bucket = self._delta_dev
+            dfn = self._cached(("delta", int(k), bucket),
+                               self._delta_builder(k, bucket))
+            dids, dvals = dfn(q, ddb, dcnt, jnp.int32(self.store.n_delta))
+            gids = jnp.where(dids >= 0,
+                             dids + jnp.int32(self.store.n_main), -1)
+            vals, ids = _merge_main_delta(vals, ids.astype(jnp.int32),
+                                          dvals, gids.astype(jnp.int32),
+                                          jnp.int32(self.store.n_main))
+        return np.asarray(ids), np.asarray(vals)
+
+    def _apply_insert(self, fps):
+        return self.store.insert(fps)   # compaction handled by the store
 
     def scanned(self, n_queries: int) -> int:
         # per-query work is the whole DB regardless of the query batch
-        return n_queries * self.db.shape[0]
+        return n_queries * self.store.n_total
 
 
 @dataclass
@@ -161,21 +293,30 @@ class BitBoundFoldingEngine(SearchEngine):
     resolution. ``cutoff`` is the similarity cutoff Sc; ``m=1`` disables
     folding (pure BitBound).
 
-    Two execution paths share the index:
+    The fingerprints live in a :class:`~repro.serve.store.MutableFingerprintStore`
+    (popcount-sorted capacity-padded main segment + append-only delta).
+    Searches scan the main segment through the Eq.2 window machinery and the
+    delta through a popcount mask computed with the *same* float64 bounds;
+    candidates from both segments are merged **in the global popcount-sorted
+    order a from-scratch rebuild would produce** (stable ties: ascending
+    (popcount, global id)), so results are bit-identical to a rebuilt engine
+    at every interleaving of inserts and searches.
+
+    Two execution paths share the store:
 
     * ``search_numpy`` — host-side reference with true variable-length Eq.2
       ranges (one python loop per query). Exact semantics, used as the parity
       oracle and for algorithmic speedup measurements.
     * ``search_tpu`` — device-resident fixed-shape path: stage 1 runs the
       scalar-prefetched row-window Pallas kernel over each query's Eq.2 tile
-      window of the folded DB (``kernels.ops.window_topk``), stage 2 gathers
-      the ``k_r1`` survivors and rescores at full resolution with a fused
-      top-k — one jitted function, no host round-trips, returning
-      ``(ids, sims, scanned)`` as device arrays. Window sizes are bucketed to
-      powers of two (``bitbound.bucket_tiles``) and one compiled function is
-      cached per ``(bucket, k)``, so recompilation is O(log n_tiles). When
-      Pallas is unavailable (or ``backend="jnp"``) stage 1 falls back to a
-      masked jnp scan with identical results.
+      window of the folded main segment (``kernels.ops.window_topk``) plus a
+      masked jnp scan of the folded delta; the merged stage-1 candidate set
+      (rank = virtual position in the merged sorted array, via two
+      searchsorteds) is rescored at full resolution with a fused top-k — one
+      jitted function per ``(window bucket, k, delta bucket, capacity)``, no
+      host round-trips, returning ``(ids, sims, scanned)`` device arrays.
+      When Pallas is unavailable (or ``backend="jnp"``) stage 1 falls back to
+      a masked jnp scan with identical results.
 
     ``backend`` selects what :meth:`search` runs: ``"numpy"`` (default,
     reference), ``"tpu"`` (Pallas device path) or ``"jnp"`` (device path
@@ -187,22 +328,64 @@ class BitBoundFoldingEngine(SearchEngine):
     scheme: int = 1
     use_kernel: bool = False
     backend: str | None = None
+    compact_threshold: int = 4096
 
     BACKENDS = ("numpy", "jnp", "tpu")
     DEFAULT_BACKEND = "numpy"
 
     def __post_init__(self):
         self._init_engine()
-        self.index = bb.build_index(jnp.asarray(self.db))
-        folded_np = fl.fold(np.asarray(self.index.db), self.m, self.scheme)
-        self.folded = jnp.asarray(folded_np)
-        self.folded_cnt = popcount(self.folded)
-        self.full = self.index.db
-        self.full_cnt = self.index.counts
-        self._counts_np = np.asarray(self.index.counts)
-        # device path: jitted two-stage search per (window-bucket, k)
+        self.store = _store_mod().MutableFingerprintStore(
+            np.asarray(self.db), sorted_main=True, fold_m=self.m,
+            fold_scheme=self.scheme, compact_threshold=self.compact_threshold)
         self._stage1_cache = self._jit_cache
+        self._sync_gen = None
+        self._sync_delta = None
+        self._delta_dev = None
         self._device_state: dict | None = None
+        self._sync()
+
+    @property
+    def n_total(self) -> int:
+        return self.store.n_total
+
+    def _sync(self) -> None:
+        st = self.store
+        if self._sync_gen != st.generation:
+            self._sync_gen = st.generation
+            self.full = jnp.asarray(st.main.db)
+            self.full_cnt = jnp.asarray(st.main.counts.astype(np.int32))
+            self.folded = jnp.asarray(st.main.folded)
+            self.folded_cnt = jnp.asarray(
+                st.main.folded_counts.astype(np.int32))
+            self.order = jnp.asarray(st.main.order.astype(np.int32))
+            self._counts_np = st.main.counts           # pads = PAD_COUNT
+        if self._sync_delta != st.delta_version:
+            self._sync_delta = st.delta_version
+            nd = st.n_delta
+            if nd == 0:
+                self._delta_dev = None
+            else:
+                sm = _store_mod()
+                bucket = sm.next_pow2(nd)
+                pad = bucket - nd
+                wf = st.delta_folded.shape[1]
+                d_full = np.concatenate(
+                    [st.delta_db, np.zeros((pad, st.words), np.uint32)])
+                d_folded = np.concatenate(
+                    [st.delta_folded, np.zeros((pad, wf), np.uint32)])
+                d_cnt = np.concatenate(
+                    [st.delta_counts,
+                     np.full((pad,), sm.PAD_COUNT, np.int64)])
+                d_fcnt = np.concatenate(
+                    [st.delta_folded_counts, np.zeros((pad,), np.int64)])
+                self._delta_dev = {
+                    "bucket": bucket,
+                    "full": jnp.asarray(d_full),
+                    "folded": jnp.asarray(d_folded),
+                    "cnt": jnp.asarray(d_cnt.astype(np.int32)),
+                    "folded_cnt": jnp.asarray(d_fcnt.astype(np.int32)),
+                }
 
     # -- dispatch -----------------------------------------------------------
     def search(self, queries, k: int):
@@ -211,6 +394,9 @@ class BitBoundFoldingEngine(SearchEngine):
             ids, sims, _ = self.search_tpu(queries, k)
             return np.asarray(ids), np.asarray(sims)
         return self.search_numpy(queries, k)
+
+    def _apply_insert(self, fps):
+        return self.store.insert(fps)   # compaction handled by the store
 
     # -- host-side (variable-shape) reference path --------------------------
     def _np_scores(self, q: np.ndarray, db: np.ndarray, db_cnt: np.ndarray):
@@ -221,43 +407,71 @@ class BitBoundFoldingEngine(SearchEngine):
     def search_numpy(self, queries, k: int):
         """Reference engine (numpy): true variable-range pruning, used for
         wall-clock algorithmic speedup measurements and as the parity oracle
-        for the fixed-shape device path (`search_tpu`)."""
+        for the fixed-shape device path (`search_tpu`).
+
+        The per-query candidate window is the main segment's Eq.2 range plus
+        the delta rows whose popcount falls inside the same bounds, stably
+        re-sorted by popcount (main first on ties) — exactly the window a
+        from-scratch rebuild on the concatenated database would scan.
+        """
+        self._sync()
+        st = self.store
         queries = np.asarray(queries)
-        full = np.asarray(self.full)
-        full_cnt = np.asarray(self.full_cnt)
-        folded = np.asarray(self.folded)
-        folded_cnt = np.asarray(self.folded_cnt)
-        order = np.asarray(self.index.order)
+        n_main_v = st.n_main
+        full = st.main.db
+        full_cnt = st.main.counts
+        folded = st.main.folded
+        folded_cnt = st.main.folded_counts
+        order = st.main.order
         kr1 = fl.kr1_for(k, self.m)
         ids_out = np.full((len(queries), k), -1, dtype=np.int64)
         sims_out = np.zeros((len(queries), k), dtype=np.float32)
         # one shared Eq.2 implementation with the device path — the m=1
         # bit-for-bit parity contract depends on identical windows
         a_all = np.bitwise_count(queries).sum(-1)
-        los, his = bb.bound_range_np(full_cnt, a_all, self.cutoff)
+        los, his = bb.bound_range_np(self._counts_np, a_all, self.cutoff)
+        # delta mask from the SAME float64 bounds as the main window
+        lo_cnt, hi_cnt = bb.bound_counts_np(a_all, self.cutoff)
+        d_cnt = st.delta_counts
         scanned = 0
         for qi, q in enumerate(queries):
             lo, hi = los[qi], his[qi]
-            if hi <= lo:
+            d_idx = np.where((d_cnt >= lo_cnt[qi]) & (d_cnt <= hi_cnt[qi]))[0]
+            n_win = (hi - lo) + len(d_idx)
+            if n_win <= 0:
                 continue
-            scanned += hi - lo
+            scanned += n_win
+            # merged window in the rebuilt sorted order: stable popcount
+            # sort with the (already sorted) main run first, so equal
+            # popcounts stay in ascending global-id order
+            cnt_w = np.concatenate([full_cnt[lo:hi], d_cnt[d_idx]])
+            mo = np.argsort(cnt_w, kind="stable")
+            fold_w = np.concatenate(
+                [folded[lo:hi], st.delta_folded[d_idx]])[mo]
+            fcnt_w = np.concatenate(
+                [folded_cnt[lo:hi], st.delta_folded_counts[d_idx]])[mo]
+            full_w = np.concatenate([full[lo:hi], st.delta_db[d_idx]])[mo]
+            cnt_w = cnt_w[mo]
+            gids_w = np.concatenate([order[lo:hi], n_main_v + d_idx])[mo]
             qf = fl.fold(q[None], self.m, self.scheme)[0]
-            s1 = self._np_scores(qf, folded[lo:hi], folded_cnt[lo:hi])
-            kr1_eff = min(kr1, hi - lo)
-            # stable sort, ties by ascending sorted-row index — the same
+            s1 = self._np_scores(qf, fold_w, fcnt_w)
+            kr1_eff = min(kr1, n_win)
+            # stable sort, ties by ascending merged-window index — the same
             # deterministic order the device path's top_k produces
-            cand = np.argsort(-s1, kind="stable")[:kr1_eff] + lo
-            s2 = self._np_scores(q, full[cand], full_cnt[cand])
+            cand = np.argsort(-s1, kind="stable")[:kr1_eff]
+            s2 = self._np_scores(q, full_w[cand], cnt_w[cand])
             k_eff = min(k, len(cand))
             best = np.argsort(-s2, kind="stable")[:k_eff]
-            ids_out[qi, :k_eff] = order[cand[best]]
+            ids_out[qi, :k_eff] = gids_w[cand[best]]
             sims_out[qi, :k_eff] = s2[best]
         self._record_batch(scanned, len(queries))
         return ids_out, sims_out
 
     # -- device-resident fixed-shape path -----------------------------------
-    def _ensure_device(self) -> dict:
-        if self._device_state is not None:
+    def _device_meta(self) -> dict:
+        cap = self.store.main.capacity
+        if self._device_state is not None and \
+                self._device_state["capacity"] == cap:
             return self._device_state
         kops = None
         if self.backend != "jnp":
@@ -266,79 +480,159 @@ class BitBoundFoldingEngine(SearchEngine):
                 kops = kops_mod
             except Exception:  # Pallas unavailable: fall back to jnp stage 1
                 kops = None
-        n = self.full.shape[0]
         if kops is not None:
-            tile = kops._pick_tile(n, None)
+            tile = kops._pick_tile(cap, None)
         else:
-            tile = min(2048, max(128, 1 << (max(n - 1, 1).bit_length() - 1)))
-        total_tiles = (n + tile - 1) // tile
+            tile = min(2048, max(128, 1 << (max(cap - 1, 1).bit_length() - 1)))
         self._device_state = {"kops": kops, "tile": tile,
-                              "total_tiles": total_tiles}
+                              "total_tiles": (cap + tile - 1) // tile,
+                              "capacity": cap}
         return self._device_state
 
-    def _build_device_search(self, bucket: int, k: int):
-        """One jitted two-stage pipeline for windows of <= ``bucket`` tiles."""
-        state = self._ensure_device()
-        kops, tile = state["kops"], state["tile"]
-        n = self.full.shape[0]
+    def _build_device_search(self, bucket: int, k: int, delta_bucket: int):
+        """One jitted two-stage pipeline for <= ``bucket``-tile main windows
+        and a ``delta_bucket``-row delta segment (0 = no delta). All segment
+        arrays are runtime arguments, so the compiled pipeline survives
+        compactions that keep the capacity (and so the shapes) unchanged."""
+        state = self._device_meta()
+        kops, tile, capacity = state["kops"], state["tile"], state["capacity"]
         m, scheme = self.m, self.scheme
-        k_stage1 = min(max(fl.kr1_for(k, m), k), n)
-        k_out = min(k, k_stage1)
-        folded, folded_cnt = self.folded, self.folded_cnt
-        full, full_cnt, order = self.full, self.full_cnt, self.index.order
+        kr1 = max(fl.kr1_for(k, m), k)
+        k1m = min(kr1, capacity)
 
-        def run(queries, lo_row, hi_row):
-            qf = fl.fold_jax(queries, m, scheme)
+        def stage1_main(qf, folded, folded_cnt, lo_row, hi_row):
             if kops is not None:
                 cand, s1 = kops.window_topk(qf, folded, folded_cnt, lo_row,
-                                            hi_row, k=k_stage1,
-                                            max_tiles=bucket, tile_n=tile)
+                                            hi_row, k=k1m, max_tiles=bucket,
+                                            tile_n=tile)
             else:
                 s = batched_tanimoto_scores(qf, folded, folded_cnt)
-                idx = jnp.arange(n)[None, :]
+                idx = jnp.arange(capacity)[None, :]
                 in_window = jnp.logical_and(idx >= lo_row[:, None],
                                             idx < hi_row[:, None])
                 s = jnp.where(in_window, s, -jnp.inf)
-                s1, cand = jax.lax.top_k(s, k_stage1)
+                s1, cand = jax.lax.top_k(s, k1m)
                 cand = jnp.where(jnp.isfinite(s1), cand, -1)
-            valid = cand >= 0
-            safe = jnp.clip(cand, 0, n - 1)
-            if m == 1:
-                # folded == full: stage-1 scores are already exact
-                vals, top = s1[:, :k_out], safe[:, :k_out]
-                ok = valid[:, :k_out]
-            else:
-                rows = full[safe]                       # (Q, k_r1, W) gather
-                q_cnt = popcount(queries)
-                inter = jnp.sum(jax.lax.population_count(
-                    queries[:, None, :] & rows).astype(jnp.int32), axis=-1)
-                union = q_cnt[:, None] + full_cnt[safe] - inter
-                s2 = jnp.where(union > 0,
-                               inter.astype(jnp.float32) /
-                               union.astype(jnp.float32), 0.0)
-                s2 = jnp.where(valid, s2, -jnp.inf)
-                vals, pos = jax.lax.top_k(s2, k_out)    # fused full-res top-k
-                top = jnp.take_along_axis(safe, pos, axis=1)
-                ok = jnp.isfinite(vals)
-            ids = jnp.where(ok, order[top], -1)
+            return cand, s1
+
+        def rescore(queries, rows, cnts, valid):
+            q_cnt = popcount(queries)
+            inter = jnp.sum(jax.lax.population_count(
+                queries[:, None, :] & rows).astype(jnp.int32), axis=-1)
+            union = q_cnt[:, None] + cnts - inter
+            s2 = jnp.where(union > 0,
+                           inter.astype(jnp.float32) /
+                           union.astype(jnp.float32), 0.0)
+            return jnp.where(valid, s2, -jnp.inf)
+
+        def finish(vals, gids, ok, lo_row, hi_row, extra_scanned):
+            k_out = vals.shape[1]
+            ids = jnp.where(ok, gids, -1)
             sims = jnp.where(ok, vals, 0.0).astype(jnp.float32)
             if k_out < k:                               # k > N degenerate pad
                 pad = ((0, 0), (0, k - k_out))
                 ids = jnp.pad(ids, pad, constant_values=-1)
                 sims = jnp.pad(sims, pad)
-            scanned = jnp.sum(jnp.maximum(hi_row - lo_row, 0))
+            scanned = jnp.sum(jnp.maximum(hi_row - lo_row, 0)) + extra_scanned
             return ids, sims, scanned
+
+        if delta_bucket == 0:
+            k_out = min(k, k1m)
+
+            def run(queries, lo_row, hi_row, folded, folded_cnt, full,
+                    full_cnt, order):
+                qf = fl.fold_jax(queries, m, scheme)
+                cand, s1 = stage1_main(qf, folded, folded_cnt, lo_row, hi_row)
+                valid = cand >= 0
+                safe = jnp.clip(cand, 0, capacity - 1)
+                if m == 1:
+                    # folded == full: stage-1 scores are already exact
+                    vals, ok = s1[:, :k_out], valid[:, :k_out]
+                    gids = order[safe[:, :k_out]]
+                else:
+                    s2 = rescore(queries, full[safe], full_cnt[safe], valid)
+                    vals, pos = jax.lax.top_k(s2, k_out)  # fused top-k
+                    top = jnp.take_along_axis(safe, pos, axis=1)
+                    ok = jnp.isfinite(vals)
+                    gids = order[top]
+                return finish(vals, gids, ok, lo_row, hi_row, jnp.int32(0))
+
+            return jax.jit(run)
+
+        # -- main + delta: merge stage-1 candidates in the *rebuilt* global
+        # popcount-sorted order before the kr1 truncation ------------------
+        k1c = min(kr1, k1m + delta_bucket)
+        k_out = min(k, k1c)
+        BIG = jnp.int32(2**30)
+
+        def run(queries, lo_row, hi_row, folded, folded_cnt, full, full_cnt,
+                order, d_full, d_folded, d_cnt, d_folded_cnt, d_ok, n_main):
+            qf = fl.fold_jax(queries, m, scheme)
+            cand, s1 = stage1_main(qf, folded, folded_cnt, lo_row, hi_row)
+            # delta stage-1: masked folded scan (same arithmetic as the
+            # kernel: int popcounts, one f32 divide)
+            qf_cnt = popcount(qf)
+            d_inter = jnp.sum(jax.lax.population_count(
+                qf[:, None, :] & d_folded).astype(jnp.int32), axis=-1)
+            d_union = qf_cnt[:, None] + d_folded_cnt[None, :] - d_inter
+            s1d = jnp.where(d_union > 0,
+                            d_inter.astype(jnp.float32) /
+                            d_union.astype(jnp.float32), 0.0)
+            s1d = jnp.where(d_ok, s1d, -jnp.inf)
+            # virtual position of every candidate in the merged popcount-
+            # sorted array (= the rebuilt sorted row): main row r keeps rank
+            # r + |delta with cnt < cnt[r]|; delta row d gets its stable
+            # (cnt, insertion-order) rank + |main with cnt <= cnt[d]|.
+            # Delta global-ids always exceed main ids, which makes these two
+            # searchsorted sides reproduce the rebuilt stable sort exactly.
+            d_sorted = jnp.sort(d_cnt)                   # pads: PAD_COUNT
+            d_rank = jnp.argsort(jnp.argsort(d_cnt, stable=True))
+            pos_d = (d_rank + jnp.searchsorted(full_cnt, d_cnt, side="right")
+                     ).astype(jnp.int32)
+            safe_c = jnp.clip(cand, 0, capacity - 1)
+            pos_m = cand + jnp.searchsorted(
+                d_sorted, full_cnt[safe_c], side="left").astype(jnp.int32)
+            pos_m = jnp.where(cand >= 0, pos_m, BIG)
+            s_all = jnp.concatenate([s1, s1d], axis=1)   # (Q, k1m + D)
+            pos_all = jnp.concatenate(
+                [pos_m, jnp.broadcast_to(pos_d[None, :], s1d.shape)], axis=1)
+            # stage-1 truncation in rebuilt order: score desc, position asc
+            sel = jnp.lexsort((pos_all, -s_all), axis=-1)[:, :k1c]
+            sel_s = jnp.take_along_axis(s_all, sel, axis=1)
+            valid = jnp.isfinite(sel_s)
+            is_d = sel >= k1m
+            cand_sel = jnp.take_along_axis(cand, jnp.clip(sel, 0, k1m - 1),
+                                           axis=1)
+            d_slot = jnp.clip(sel - k1m, 0, delta_bucket - 1)
+            safe_m = jnp.clip(cand_sel, 0, capacity - 1)
+            gids = jnp.where(is_d, n_main + d_slot, order[safe_m])
+            gids = jnp.where(valid, gids, -1)
+            if m == 1:
+                vals, ok = sel_s[:, :k_out], valid[:, :k_out]
+                top_g = gids[:, :k_out]
+            else:
+                rows = jnp.where(is_d[..., None], d_full[d_slot],
+                                 full[safe_m])
+                cnts = jnp.where(is_d, d_cnt[d_slot], full_cnt[safe_m])
+                s2 = rescore(queries, rows, cnts, valid)
+                vals, p = jax.lax.top_k(s2, k_out)
+                top_g = jnp.take_along_axis(gids, p, axis=1)
+                ok = jnp.isfinite(vals)
+            extra = jnp.sum(d_ok.astype(jnp.int32))
+            return finish(vals, top_g, ok, lo_row, hi_row, extra)
 
         return jax.jit(run)
 
     def search_tpu(self, queries, k: int):
         """Fixed-shape device path -> ``(ids, sims, scanned)`` jax arrays.
 
-        Host work is only window metadata (two searchsorteds per batch and
-        the power-of-two grid bucket); the folded scan, gather, rescore and
-        top-k all run inside one jitted function per ``(bucket, k)``.
+        Host work is only window metadata (two searchsorteds + the delta
+        popcount mask per batch and the power-of-two grid bucket); the folded
+        scans, merge, gather, rescore and top-k all run inside one jitted
+        function per ``(bucket, k, delta bucket, capacity)``.
         """
-        state = self._ensure_device()
+        self._sync()
+        state = self._device_meta()
         tile, total_tiles = state["tile"], state["total_tiles"]
         queries = jnp.asarray(queries)
         q_np = np.asarray(queries)
@@ -349,12 +643,50 @@ class BitBoundFoldingEngine(SearchEngine):
         bucket = bb.bucket_tiles(int(n_tiles.max(initial=0)), total_tiles)
         if state["kops"] is None:
             bucket = total_tiles  # jnp fallback scans full rows, one variant
-        fn = self._cached((bucket, int(k)),
-                          lambda: self._build_device_search(bucket, k))
-        ids, sims, scanned = fn(queries, jnp.asarray(lo, jnp.int32),
-                                jnp.asarray(hi, jnp.int32))
+        dd = self._delta_dev
+        delta_bucket = dd["bucket"] if dd is not None else 0
+        fn = self._cached(
+            (bucket, int(k), delta_bucket, state["capacity"]),
+            lambda: self._build_device_search(bucket, k, delta_bucket))
+        lo_j = jnp.asarray(lo, jnp.int32)
+        hi_j = jnp.asarray(hi, jnp.int32)
+        if dd is None:
+            ids, sims, scanned = fn(queries, lo_j, hi_j, self.folded,
+                                    self.folded_cnt, self.full, self.full_cnt,
+                                    self.order)
+        else:
+            lo_cnt, hi_cnt = bb.bound_counts_np(a, self.cutoff)
+            d_cnt_np = self.store.delta_counts
+            ok = np.zeros((q_np.shape[0], delta_bucket), dtype=bool)
+            ok[:, :d_cnt_np.shape[0]] = (
+                (d_cnt_np[None, :] >= lo_cnt[:, None]) &
+                (d_cnt_np[None, :] <= hi_cnt[:, None]))
+            ids, sims, scanned = fn(queries, lo_j, hi_j, self.folded,
+                                    self.folded_cnt, self.full, self.full_cnt,
+                                    self.order, dd["full"], dd["folded"],
+                                    dd["cnt"], dd["folded_cnt"],
+                                    jnp.asarray(ok),
+                                    jnp.int32(self.store.n_main))
         self._record_batch(scanned, queries.shape[0])
         return ids, sims, scanned
+
+
+def _gather_scorer_factory(db: np.ndarray, db_cnt: np.ndarray):
+    """Insert-frontier scorer routing neighbour batches through the Pallas
+    ``gather_tanimoto`` kernel (ROADMAP "device-side construction", first
+    cut: the graph walk stays host-side, the distance stage runs on device;
+    the full-db upload per insert batch is the documented cost to amortise
+    next). ``db_cnt`` is part of the scorer-factory protocol but unused
+    here — the kernel recomputes row popcounts in-register."""
+    from ..kernels import ops as kops
+    del db_cnt
+    dev = jnp.asarray(db)
+
+    def scorer(q: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        s = kops.gather_tanimoto(jnp.asarray(q)[None], dev,
+                                 jnp.asarray(ids, dtype=jnp.int32)[None])
+        return np.asarray(s[0])
+    return scorer
 
 
 @dataclass
@@ -372,8 +704,17 @@ class HNSWEngine(SearchEngine):
       is unavailable).
 
     ``beam`` is the number of candidates expanded per traversal iteration
-    (``beam * 2M`` neighbours scored per kernel launch); ``max_iters`` caps
-    the lock-step loop (default ``4*ef + 16``).
+    (``beam * 2M`` neighbours scored per kernel launch); ``beam=None`` (the
+    default) auto-tunes it from ``ef_search`` (:func:`repro.core.hnsw.auto_beam`,
+    the ROADMAP telemetry rule — equal recall, ~B× fewer lock-step
+    iterations). ``max_iters`` caps the lock-step loop (default
+    ``4*ef + 16``).
+
+    Online inserts go through :func:`repro.core.hnsw.insert_hnsw` (batched
+    incremental construction, rng-continuation levels), so an engine that
+    inserted online is graph-identical to one rebuilt from scratch on the
+    concatenated database. The device graph is padded to a power-of-two node
+    capacity: inserts below the capacity reuse every compiled traversal.
 
     After each ``search``, :attr:`stats` holds the batch's traversal
     telemetry: ``iters`` / ``expansions`` / ``neighbour_evals`` totals and,
@@ -388,7 +729,7 @@ class HNSWEngine(SearchEngine):
     index: hn.HNSWIndex = None
     _graph: hn.HNSWDeviceGraph = None
     backend: str | None = None
-    beam: int = 1
+    beam: int | None = None
     max_iters: int | None = None
 
     BACKENDS = ("numpy", "jnp", "tpu")
@@ -396,28 +737,59 @@ class HNSWEngine(SearchEngine):
 
     def __post_init__(self):
         self._init_engine()
+        if self.beam is None:
+            self.beam = hn.auto_beam(self.ef_search)
         if self.index is None:
             self.index = hn.build_hnsw(np.asarray(self.db), m=self.m,
                                        ef_construction=self.ef_construction,
                                        seed=self.seed)
-        # the numpy backend never touches the device — don't ship the graph
-        self._graph = (None if self.backend == "numpy"
-                       else hn.to_device_graph(self.index))
-        self._score_fn = None   # None -> jnp gather inside search_hnsw
-        if self.backend == "tpu" and _kernels_available():
-            from ..kernels import ops as kops
-            graph = self._graph
+        self._graph_dirty = False
+        self._refresh_graph()
 
-            def score_fn(qs, qc, ids):
-                return kops.gather_tanimoto(qs, graph.db, ids, q_cnt=qc)
-            self._score_fn = score_fn
+    @property
+    def n_total(self) -> int:
+        return self.index.n
+
+    def _refresh_graph(self) -> None:
+        # the numpy backend never touches the device — don't ship the graph
+        if self.backend == "numpy":
+            self._graph = None
+            return
+        cap = _store_mod().next_pow2(self.index.n)
+        self._graph = hn.to_device_graph(self.index, capacity=cap)
+        self._graph_dirty = False
+
+    def _apply_insert(self, fps):
+        factory = None
+        if self.backend == "tpu" and _kernels_available():
+            factory = _gather_scorer_factory
+        gids = hn.insert_hnsw(self.index, fps, scorer_factory=factory)
+        # lazy device refresh: N consecutive insert batches cost one graph
+        # densify+upload at the next search, not N
+        self._graph_dirty = True
+        return gids
 
     def _device_search(self, k: int, ef: int, beam: int):
+        use_kernel = self.backend == "tpu" and _kernels_available()
+        max_level = self._graph.max_level
+        max_iters = self.max_iters
+        key = (k, ef, beam, max_level, use_kernel)
+
         def build():
-            return jax.jit(lambda q: hn.search_hnsw(
-                self._graph, q, k, ef, max_iters=self.max_iters, beam=beam,
-                score_fn=self._score_fn))
-        return self._cached((k, ef, beam), build)
+            def run(q, db, db_cnt, base_adj, upper_adj, ep):
+                g = hn.HNSWDeviceGraph(db=db, db_popcount=db_cnt,
+                                       base_adj=base_adj, upper_adj=upper_adj,
+                                       entry_point=ep, max_level=max_level)
+                score_fn = None
+                if use_kernel:
+                    from ..kernels import ops as kops
+
+                    def score_fn(qs, qc, ids):
+                        return kops.gather_tanimoto(qs, db, ids, q_cnt=qc)
+                return hn.search_hnsw(g, q, k, ef, max_iters=max_iters,
+                                      beam=beam, score_fn=score_fn)
+            return jax.jit(run)
+        return self._cached(key, build)
 
     def search(self, queries, k: int, ef: int | None = None,
                beam: int | None = None):
@@ -432,8 +804,12 @@ class HNSWEngine(SearchEngine):
                           "expansions": ctr["iters"],
                           "neighbour_evals": ctr["evals"]}
             return ids, sims
+        if self._graph_dirty:
+            self._refresh_graph()
         fn = self._device_search(k, ef, beam)
-        ids, sims, tstats = fn(jnp.asarray(queries))
+        g = self._graph
+        ids, sims, tstats = fn(jnp.asarray(queries), g.db, g.db_popcount,
+                               g.base_adj, g.upper_adj, g.entry_point)
         iters = np.asarray(tstats.iters)
         expans = np.asarray(tstats.expansions)
         reason = np.asarray(tstats.reason)

@@ -68,6 +68,11 @@ class HNSWIndex:
     level_nodes: list = field(default_factory=list)   # [int32 array of global ids]
     level_adj: list = field(default_factory=list)     # [(n_l, M) int32 global ids]
     level_of: np.ndarray | None = None                # (N,) int8 max level per node
+    seed: int = 0                  # level-draw stream; insert_hnsw continues it
+    max_level_cap: int = 4
+    # construction-time upper layers (level -> {gid: int32 neighbour array});
+    # kept so insert_hnsw can continue building without re-deriving state
+    upper_dicts: list | None = field(default=None, repr=False)
 
     @property
     def n(self) -> int:
@@ -113,14 +118,20 @@ def _select_heuristic(cand_ids: np.ndarray, cand_sims: np.ndarray, m: int,
 
 
 def _search_layer_np(index_db, db_cnt, adj, q, entry_points, ef,
-                     counters: dict | None = None):
+                     counters: dict | None = None, scorer=None):
     """Host-side SEARCH-LAYER-BASE used during construction and by the
     ``numpy`` engine backend. adj: dict-like callable gid -> int32 array of
     neighbour gids. ``counters`` (optional) accumulates ``evals`` (scored
-    neighbours) and ``iters`` (queue pops) for the telemetry contract."""
+    neighbours) and ``iters`` (queue pops) for the telemetry contract.
+    ``scorer(q, ids) -> sims`` replaces the default numpy popcount-Tanimoto
+    for the frontier batches (e.g. the device gather kernel during online
+    inserts); it must be value-identical to keep graphs deterministic."""
+    if scorer is None:
+        def scorer(qq, ids):
+            return _np_tanimoto(qq, index_db[ids], db_cnt[ids])
     visited = set(int(e) for e in entry_points)
     ep = np.asarray(list(visited), dtype=np.int32)
-    sims = _np_tanimoto(q, index_db[ep], db_cnt[ep])
+    sims = scorer(q, ep)
     # candidates: max-first by similarity; results: bounded by ef
     cand = list(zip((-sims).tolist(), ep.tolist()))
     import heapq
@@ -139,7 +150,7 @@ def _search_layer_np(index_db, db_cnt, adj, q, entry_points, ef,
             continue
         visited.update(neigh)
         na = np.asarray(neigh, dtype=np.int32)
-        ns = _np_tanimoto(q, index_db[na], db_cnt[na])
+        ns = scorer(q, na)
         if counters is not None:
             counters["evals"] = counters.get("evals", 0) + len(neigh)
         for e, s in zip(neigh, ns.tolist()):
@@ -153,93 +164,195 @@ def _search_layer_np(index_db, db_cnt, adj, q, entry_points, ef,
             np.asarray([s for s, _ in rs], dtype=np.float32))
 
 
-def build_hnsw(db: np.ndarray, m: int = 16, ef_construction: int = 100,
-               seed: int = 0, max_level_cap: int = 4) -> HNSWIndex:
-    """Sequential insert construction (paper builds offline; search is the
-    accelerated path)."""
-    db = np.asarray(db, dtype=np.uint32)
-    n, _ = db.shape
-    db_cnt = _np_popcount(db)
-    rng = np.random.default_rng(seed)
-    ml = 1.0 / math.log(m)
-    levels = np.minimum(
-        np.floor(-np.log(np.maximum(rng.random(n), 1e-12)) * ml).astype(np.int32),
-        max_level_cap)
-    max_level = int(levels.max(initial=0))
-    m0 = 2 * m
-    base_adj = np.full((n, m0), -1, dtype=np.int32)
-    upper_adj = [dict() for _ in range(max_level + 1)]  # gid -> np.int32 array
+def _draw_levels(seed: int, n_total: int, n_skip: int, m: int,
+                 max_level_cap: int) -> np.ndarray:
+    """Levels for nodes ``n_skip..n_total-1`` from the seed's rng stream.
 
-    entry_point = 0
-    ep_level = int(levels[0])
+    ``default_rng(seed).random(n)`` fills the PCG64 stream sequentially, so
+    drawing ``n_total`` values and slicing off the first ``n_skip`` yields
+    exactly the levels a from-scratch build of ``n_total`` nodes would give
+    them — the property the insert-then-rebuild parity contract rests on.
+    """
+    ml = 1.0 / math.log(m)
+    u = np.random.default_rng(seed).random(n_total)[n_skip:]
+    return np.minimum(
+        np.floor(-np.log(np.maximum(u, 1e-12)) * ml).astype(np.int32),
+        max_level_cap)
+
+
+def _insert_node(db, db_cnt, base_adj, upper, levels, i, m, ef_construction,
+                 entry_point, ep_level, scorer=None):
+    """Insert node ``i`` into the half-built graph (Alg. 1 descent + Alg. 2
+    layer searches + Alg. 4 selection, with bidirectional link shrink).
+
+    One shared implementation drives both offline :func:`build_hnsw` and
+    online :func:`insert_hnsw` — graph determinism across the two paths is
+    what makes online engines bit-identical to a rebuild. ``upper`` is the
+    level -> {gid: neighbours} dict list; ``entry_point < 0`` means the graph
+    is still empty. Returns the updated ``(entry_point, ep_level)``.
+    """
+    m0 = base_adj.shape[1]
+    l_new = int(levels[i])
+    if entry_point < 0:                       # first node ever
+        for l in range(1, l_new + 1):
+            upper[l][i] = np.empty((0,), np.int32)
+        return i, l_new
 
     def adj_at(level):
         if level == 0:
             return lambda gid: base_adj[gid]
-        return lambda gid: upper_adj[level].get(gid, np.empty((0,), np.int32))
+        return lambda gid: upper[level].get(gid, np.empty((0,), np.int32))
 
-    for i in range(n):
-        if i == 0:
-            for l in range(1, int(levels[0]) + 1):
-                upper_adj[l][0] = np.empty((0,), np.int32)
-            continue
-        q = db[i]
-        l_new = int(levels[i])
-        ep = np.asarray([entry_point], dtype=np.int32)
-        # greedy descent through layers above l_new (Alg. 1)
-        for level in range(ep_level, l_new, -1):
-            ids, _ = _search_layer_np(db, db_cnt, adj_at(level), q, ep, 1)
-            ep = ids[:1]
-        # insert at layers min(ep_level, l_new) .. 0 (Alg. 2 + Alg. 4)
-        for level in range(min(ep_level, l_new), -1, -1):
-            ids, sims = _search_layer_np(db, db_cnt, adj_at(level), q, ep, ef_construction)
-            mmax = m0 if level == 0 else m
-            sel = _select_heuristic(ids, sims, min(m, len(ids)), db, db_cnt)
+    q = db[i]
+    ep = np.asarray([entry_point], dtype=np.int32)
+    # greedy descent through layers above l_new (Alg. 1)
+    for level in range(ep_level, l_new, -1):
+        ids, _ = _search_layer_np(db, db_cnt, adj_at(level), q, ep, 1,
+                                  scorer=scorer)
+        ep = ids[:1]
+    # insert at layers min(ep_level, l_new) .. 0 (Alg. 2 + Alg. 4)
+    for level in range(min(ep_level, l_new), -1, -1):
+        ids, sims = _search_layer_np(db, db_cnt, adj_at(level), q, ep,
+                                     ef_construction, scorer=scorer)
+        mmax = m0 if level == 0 else m
+        sel = _select_heuristic(ids, sims, min(m, len(ids)), db, db_cnt)
+        if level == 0:
+            base_adj[i, :len(sel)] = sel
+        else:
+            upper[level][i] = sel.copy()
+        # bidirectional links + shrink
+        for e in sel:
+            e = int(e)
             if level == 0:
-                base_adj[i, :len(sel)] = sel
-            else:
-                upper_adj[level][i] = sel.copy()
-            # bidirectional links + shrink
-            for e in sel:
-                e = int(e)
-                if level == 0:
-                    row = base_adj[e]
-                    free = np.where(row < 0)[0]
-                    if len(free):
-                        row[free[0]] = i
-                    else:
-                        cand = np.concatenate([row, [i]]).astype(np.int32)
-                        cs = _np_tanimoto(db[e], db[cand], db_cnt[cand])
-                        base_adj[e] = _select_heuristic(cand, cs, mmax, db, db_cnt)
+                row = base_adj[e]
+                free = np.where(row < 0)[0]
+                if len(free):
+                    row[free[0]] = i
                 else:
-                    row = upper_adj[level].get(e, np.empty((0,), np.int32))
-                    row = np.concatenate([row, [i]]).astype(np.int32)
-                    if len(row) > m:
-                        cs = _np_tanimoto(db[e], db[row], db_cnt[row])
-                        row = _select_heuristic(row, cs, m, db, db_cnt)
-                    upper_adj[level][e] = row
-            ep = ids
-        if l_new > ep_level:
-            entry_point, ep_level = i, l_new
-            for l in range(1, l_new + 1):
-                upper_adj[l].setdefault(i, np.empty((0,), np.int32))
+                    cand = np.concatenate([row, [i]]).astype(np.int32)
+                    cs = _np_tanimoto(db[e], db[cand], db_cnt[cand])
+                    base_adj[e] = _select_heuristic(cand, cs, mmax, db, db_cnt)
+            else:
+                row = upper[level].get(e, np.empty((0,), np.int32))
+                row = np.concatenate([row, [i]]).astype(np.int32)
+                if len(row) > m:
+                    cs = _np_tanimoto(db[e], db[row], db_cnt[row])
+                    row = _select_heuristic(row, cs, m, db, db_cnt)
+                upper[level][e] = row
+        ep = ids
+    if l_new > ep_level:
+        entry_point, ep_level = i, l_new
+        for l in range(1, l_new + 1):
+            upper[l].setdefault(i, np.empty((0,), np.int32))
+    return entry_point, ep_level
 
-    # densify upper layers into arrays
+
+def _densify(upper: list, max_level: int, m: int):
+    """Upper-layer dicts -> per-level (node ids, dense adjacency) arrays."""
     level_nodes, level_adj = [], []
     for l in range(1, max_level + 1):
-        gids = np.asarray(sorted(upper_adj[l].keys()), dtype=np.int32)
+        gids = np.asarray(sorted(upper[l].keys()), dtype=np.int32)
         adjm = np.full((len(gids), m), -1, dtype=np.int32)
         for r, g in enumerate(gids):
-            row = upper_adj[l][g][:m]
+            row = upper[l][g][:m]
             adjm[r, :len(row)] = row
         level_nodes.append(gids)
         level_adj.append(adjm)
+    return level_nodes, level_adj
 
+
+def _upper_dicts_from_dense(index: HNSWIndex) -> list:
+    """Rebuild the construction-time dict view from the dense per-level
+    arrays (for indexes that predate ``upper_dicts``, e.g. deserialized)."""
+    upper = [dict() for _ in range(index.max_level_cap + 1)]
+    for l in range(1, index.max_level + 1):
+        for g, row in zip(index.level_nodes[l - 1], index.level_adj[l - 1]):
+            upper[l][int(g)] = row[row >= 0].astype(np.int32).copy()
+    return upper
+
+
+def build_hnsw(db: np.ndarray, m: int = 16, ef_construction: int = 100,
+               seed: int = 0, max_level_cap: int = 4) -> HNSWIndex:
+    """Sequential insert construction (paper builds offline; search is the
+    accelerated path). The per-node insertion is :func:`_insert_node` — the
+    same code online :func:`insert_hnsw` runs, so incremental growth and
+    from-scratch builds produce identical graphs."""
+    db = np.asarray(db, dtype=np.uint32)
+    n, _ = db.shape
+    db_cnt = _np_popcount(db)
+    levels = _draw_levels(seed, n, 0, m, max_level_cap)
+    base_adj = np.full((n, 2 * m), -1, dtype=np.int32)
+    upper = [dict() for _ in range(max_level_cap + 1)]  # gid -> int32 array
+
+    entry_point, ep_level = -1, 0
+    for i in range(n):
+        entry_point, ep_level = _insert_node(
+            db, db_cnt, base_adj, upper, levels, i, m, ef_construction,
+            entry_point, ep_level)
+
+    max_level = int(levels.max(initial=0))
+    level_nodes, level_adj = _densify(upper, max_level, m)
     return HNSWIndex(db=db, db_popcount=db_cnt, m=m,
                      ef_construction=ef_construction, entry_point=entry_point,
                      max_level=max_level, base_adj=base_adj,
                      level_nodes=level_nodes, level_adj=level_adj,
-                     level_of=levels.astype(np.int8))
+                     level_of=levels.astype(np.int8), seed=seed,
+                     max_level_cap=max_level_cap, upper_dicts=upper)
+
+
+def insert_hnsw(index: HNSWIndex, new_fps: np.ndarray,
+                scorer_factory=None) -> np.ndarray:
+    """Batched incremental inserts: grow ``index`` in place by ``new_fps``.
+
+    Levels continue the seed's rng stream (:func:`_draw_levels`) and every
+    node runs the same :func:`_insert_node` the offline build uses, so after
+    any number of insert batches the index is **identical** to
+    ``build_hnsw(concatenated_db)`` — the engine parity contract.
+
+    ``scorer_factory(db, db_cnt) -> scorer(q, ids) -> sims`` swaps the
+    frontier distance stage; engines pass the Pallas ``gather_tanimoto``
+    wrapper to score insert frontiers on device (first cut of the ROADMAP
+    device-side-construction item — the kernel's f32 arithmetic is
+    value-identical to the host scorer for <=2048-bit prints, keeping the
+    graph deterministic). Returns the new nodes' global ids.
+    """
+    new_fps = np.atleast_2d(np.asarray(new_fps, dtype=np.uint32))
+    n_new = new_fps.shape[0]
+    n_old = index.n
+    if n_new == 0:
+        return np.empty((0,), dtype=np.int64)
+    levels_new = _draw_levels(index.seed, n_old + n_new, n_old, index.m,
+                              index.max_level_cap)
+    index.db = np.concatenate([index.db, new_fps])
+    index.db_popcount = np.concatenate(
+        [index.db_popcount, _np_popcount(new_fps)]).astype(np.int32)
+    index.base_adj = np.concatenate(
+        [index.base_adj,
+         np.full((n_new, index.base_adj.shape[1]), -1, np.int32)])
+    levels_all = np.concatenate(
+        [np.asarray(index.level_of, dtype=np.int32), levels_new])
+    if index.upper_dicts is None:
+        index.upper_dicts = _upper_dicts_from_dense(index)
+    upper = index.upper_dicts
+    scorer = (scorer_factory(index.db, index.db_popcount)
+              if scorer_factory is not None else None)
+    ep, epl = int(index.entry_point), int(index.max_level)
+    for i in range(n_old, n_old + n_new):
+        ep, epl = _insert_node(index.db, index.db_popcount, index.base_adj,
+                               upper, levels_all, i, index.m,
+                               index.ef_construction, ep, epl, scorer=scorer)
+    index.entry_point, index.max_level = int(ep), int(epl)
+    index.level_of = levels_all.astype(np.int8)
+    index.level_nodes, index.level_adj = _densify(upper, index.max_level,
+                                                  index.m)
+    return np.arange(n_old, n_old + n_new, dtype=np.int64)
+
+
+def auto_beam(ef_search: int) -> int:
+    """Beam width from ``ef_search`` (ROADMAP telemetry note: B=4 cuts
+    lock-step iterations ~3.7x at equal recall for ef=64). Scales B with ef
+    so small-ef searches don't waste expansions, clamped to [1, 8]."""
+    return max(1, min(8, int(ef_search) // 16))
 
 
 # ---------------------------------------------------------------------------
@@ -256,16 +369,28 @@ class HNSWDeviceGraph(NamedTuple):
     max_level: int
 
 
-def to_device_graph(index: HNSWIndex) -> HNSWDeviceGraph:
+def to_device_graph(index: HNSWIndex,
+                    capacity: int | None = None) -> HNSWDeviceGraph:
+    """Densify the index for the device engine. ``capacity`` (>= n) pads the
+    node dimension — pad rows are zero fingerprints with no edges, so they
+    are unreachable and the traversal is unaffected. Engines pad to a power
+    of two so online inserts below the capacity reuse compiled traversals."""
     L = max(index.max_level, 0)
     n, m = index.n, index.m
-    upper = np.full((max(L, 1), n, m), -1, dtype=np.int32)
+    cap = n if capacity is None else max(int(capacity), n)
+    upper = np.full((max(L, 1), cap, m), -1, dtype=np.int32)
     for l in range(1, L + 1):
         gids = index.level_nodes[l - 1]
         upper[l - 1, gids] = index.level_adj[l - 1]
+    db = np.zeros((cap, index.db.shape[1]), dtype=np.uint32)
+    db[:n] = index.db
+    cnt = np.zeros((cap,), dtype=np.int32)
+    cnt[:n] = index.db_popcount
+    base = np.full((cap, index.base_adj.shape[1]), -1, dtype=np.int32)
+    base[:n] = index.base_adj
     return HNSWDeviceGraph(
-        db=jnp.asarray(index.db), db_popcount=jnp.asarray(index.db_popcount),
-        base_adj=jnp.asarray(index.base_adj), upper_adj=jnp.asarray(upper),
+        db=jnp.asarray(db), db_popcount=jnp.asarray(cnt),
+        base_adj=jnp.asarray(base), upper_adj=jnp.asarray(upper),
         entry_point=jnp.int32(index.entry_point), max_level=L)
 
 

@@ -78,7 +78,16 @@ def synthetic_fingerprints(cfg: SyntheticConfig) -> np.ndarray:
 
 def queries_from_db(db: np.ndarray, n_queries: int, seed: int = 1) -> np.ndarray:
     """Paper-style query set: random database members (self-hit included in
-    ground truth, as in the ChEMBL benchmarks)."""
+    ground truth, as in the ChEMBL benchmarks). Asking for more queries than
+    the database holds falls back to sampling with replacement (and warns)
+    instead of crashing — small serve/CI configs hit this routinely."""
     rng = np.random.default_rng(seed)
-    idx = rng.choice(db.shape[0], size=n_queries, replace=False)
+    n = db.shape[0]
+    replace = n_queries > n
+    if replace:
+        import warnings
+        warnings.warn(
+            f"queries_from_db: {n_queries} queries requested from a database "
+            f"of {n}; sampling with replacement", stacklevel=2)
+    idx = rng.choice(n, size=n_queries, replace=replace)
     return np.asarray(db)[idx]

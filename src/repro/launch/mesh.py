@@ -17,22 +17,28 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def compat_make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions: pass explicit Auto axis_types
+    where supported (newer jax defaults shifted), plain call otherwise
+    (<= 0.4.x has neither the kwarg nor ``jax.sharding.AxisType``)."""
+    try:
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=axis_types)
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat_make_mesh(shape, axes)
 
 
 def make_local_mesh(model_axis: int = 1):
     """Whatever this host has — used by smoke tests and CPU examples."""
     n = len(jax.devices())
     assert n % model_axis == 0
-    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
-                         axis_types=_auto(2))
+    return compat_make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

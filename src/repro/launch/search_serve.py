@@ -1,9 +1,17 @@
 """Similarity-search serving: the paper's engine as a first-class service.
 
-Serves batched Tanimoto KNN queries over a mesh-sharded fingerprint DB —
-the paper's multi-engine FPGA deployment mapped onto a TPU pod
-(core/distributed.py). Request batching, engine selection and throughput
-accounting mirror launch/serve.py for tokens.
+Two serving shapes:
+
+* ``--engine sharded-brute|bitbound-folding|hnsw`` — frozen-database
+  benchmark loops (batched KNN over a mesh-sharded or single-chip engine),
+  the paper's offline-deployment measurement.
+* ``--engine service`` — the online deployment: a
+  :class:`repro.serve.service.SearchService` driven with a mixed
+  insert+query workload (``--write-ratio``), dynamic micro-batching into
+  power-of-two buckets, LSM-compacting mutable store underneath, and
+  per-request latency / QPS / compaction telemetry. This is the paper's
+  FPGA host loop (stream queries, append compounds without stalling the
+  scan) mapped onto the TPU engines.
 """
 from __future__ import annotations
 
@@ -38,7 +46,8 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
         with make_local_mesh() as mesh:
             db_s, cnt_s, n_valid = shard_database(mesh, db)
             search, _, _ = make_sharded_search(mesh, db_s.shape[0], k,
-                                               use_kernel=use_kernel)
+                                               use_kernel=use_kernel,
+                                               n_valid=n_valid)
             # warmup/compile
             q0 = jnp.asarray(queries[:n_queries])
             search(q0, db_s, cnt_s)
@@ -86,10 +95,70 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
     return qps
 
 
+def make_workload(n_ops: int, write_ratio: float,
+                  pool: np.ndarray, queries: np.ndarray, insert_batch: int = 1,
+                  seed: int = 2):
+    """Deterministic mixed op schedule: ``("query", fp)`` / ``("insert",
+    rows)`` tuples with an expected ``write_ratio`` fraction of inserts
+    (cycling through the insert pool / query set)."""
+    rng = np.random.default_rng(seed)
+    is_write = rng.random(n_ops) < write_ratio
+    ops = []
+    qi = wi = 0
+    for w in is_write:
+        if w and len(pool):
+            rows = pool[wi % len(pool):wi % len(pool) + insert_batch]
+            ops.append(("insert", rows))
+            wi += len(rows)
+        else:
+            ops.append(("query", queries[qi % len(queries)]))
+            qi += 1
+    return ops
+
+
+def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
+                  k: int = 10, n_ops: int = 256, write_ratio: float = 0.01,
+                  backend: str | None = None, compact_threshold: int = 2048,
+                  flush_every: int = 8, log=print):
+    """Drive a :class:`SearchService` with a mixed insert+query workload and
+    report the serving telemetry. Returns the service summary dict."""
+    from ..serve.service import SearchService
+
+    db = synthetic_fingerprints(SyntheticConfig(n=n_db))
+    pool = synthetic_fingerprints(SyntheticConfig(n=max(n_ops, 64), seed=7))
+    queries = queries_from_db(db, min(n_db, 512))
+    svc = SearchService(db, engines=engines, backend=backend, k=k,
+                        cutoff=CHEMBL_LIKE.cutoff, fold_m=CHEMBL_LIKE.folding_m,
+                        compact_threshold=compact_threshold)
+    ops = make_workload(n_ops, write_ratio, pool, queries)
+    enames = list(svc.engines)
+    since_flush = 0
+    for i, (op, payload) in enumerate(ops):
+        if op == "insert":
+            svc.insert(payload)            # broadcast to every engine
+        else:
+            # router: spread query traffic round-robin over the engines
+            svc.submit(payload, k=k, engine=enames[i % len(enames)])
+            since_flush += 1
+            if since_flush >= flush_every:
+                svc.flush()
+                since_flush = 0
+    svc.flush()
+    s = svc.summary()
+    log(f"[search-serve] service engines={','.join(svc.engines)} "
+        f"backend={backend or 'default'} db={n_db} k={k} "
+        f"write_ratio={write_ratio}: p50={s.get('p50_ms', 0)}ms "
+        f"p99={s.get('p99_ms', 0)}ms {s['qps']} QPS, "
+        f"{s['n_inserts']} inserts, {s['compactions']} compactions, "
+        f"buckets={s['batch_buckets']}")
+    return s
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", default="sharded-brute",
-                    choices=["sharded-brute", "bitbound-folding", "hnsw"])
+                    choices=["sharded-brute", "bitbound-folding", "hnsw",
+                             "service"])
     ap.add_argument("--n-db", type=int, default=100_000)
     ap.add_argument("--k", type=int, default=20)
     ap.add_argument("--n-queries", type=int, default=256)
@@ -97,10 +166,25 @@ def main():
     ap.add_argument("--backend", default=None,
                     choices=["numpy", "jnp", "tpu"],
                     help="engine execution path for bitbound-folding "
-                         "(default numpy) and hnsw (default jnp)")
+                         "(default numpy), hnsw (default jnp) and service")
+    ap.add_argument("--ops", type=int, default=256,
+                    help="service mode: number of workload operations")
+    ap.add_argument("--write-ratio", type=float, default=0.01,
+                    help="service mode: fraction of ops that are inserts")
+    ap.add_argument("--compact-threshold", type=int, default=2048,
+                    help="service mode: delta rows triggering compaction")
+    ap.add_argument("--service-engines", default="brute,bitbound-folding",
+                    help="service mode: comma-separated engine list")
     args = ap.parse_args()
-    serve(args.engine, n_db=args.n_db, k=args.k, n_queries=args.n_queries,
-          use_kernel=args.use_kernel, backend=args.backend)
+    if args.engine == "service":
+        serve_service(engines=tuple(args.service_engines.split(",")),
+                      n_db=args.n_db, k=args.k, n_ops=args.ops,
+                      write_ratio=args.write_ratio, backend=args.backend,
+                      compact_threshold=args.compact_threshold)
+    else:
+        serve(args.engine, n_db=args.n_db, k=args.k,
+              n_queries=args.n_queries, use_kernel=args.use_kernel,
+              backend=args.backend)
 
 
 if __name__ == "__main__":

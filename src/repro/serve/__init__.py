@@ -1,1 +1,3 @@
 from .knn_prefix_cache import KNNPrefixCache, simhash_sketch  # noqa: F401
+from .store import MutableFingerprintStore, next_pow2  # noqa: F401
+from .service import SearchService, ServiceConfig  # noqa: F401

@@ -1,0 +1,263 @@
+"""Online molecular-similarity search service (paper §V deployment shape).
+
+The paper's host streams queries into fixed-interval pipelines and appends
+new compounds without stalling the scan engines. :class:`SearchService` is
+that host for the TPU engines:
+
+* **request queue + dynamic micro-batcher** — :meth:`submit` enqueues
+  requests (any per-request ``k`` / engine); :meth:`flush` groups pending
+  requests by ``(engine, k)``, concatenates their queries and pads each
+  chunk to a **power-of-two batch bucket** (zero queries, results dropped)
+  so every flush replays one of O(log max_batch) compiled pipeline shapes —
+  steady-state serving never recompiles.
+* **engine router** — one service fronts any subset of the three engines
+  (``brute`` / ``bitbound-folding`` / ``hnsw``) over the same logical
+  database; requests pick their engine per call.
+* **online inserts** — :meth:`insert` broadcasts new fingerprints to every
+  engine (delta append + threshold-triggered LSM compaction in the store;
+  incremental graph inserts for HNSW) and checks the engines agree on the
+  assigned global ids. Search results at any interleaving are bit-identical
+  to engines rebuilt from scratch on the concatenated database
+  (``tests/test_insert_parity.py`` / ``tests/test_service.py``).
+* **telemetry** — per-request latency (submit -> flush completion),
+  p50/p99/QPS, batch-bucket histogram, per-engine scanned counters and
+  compaction counts (:meth:`summary`).
+
+The service is synchronous and deterministic by design (no threads): a
+driver loop decides when to flush, which keeps parity tests and benchmark
+replays exact. ``launch/search_serve.py --engine service`` and
+``benchmarks/serve_load.py`` drive it with mixed insert+query workloads.
+"""
+from __future__ import annotations
+
+import time
+from collections import Counter
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.engine import (BitBoundFoldingEngine, BruteForceEngine,
+                           HNSWEngine)
+from .store import next_pow2
+
+ENGINE_NAMES = ("brute", "bitbound-folding", "hnsw")
+
+
+@dataclass
+class _Request:
+    rid: int
+    queries: np.ndarray          # (n, W) uint32
+    k: int
+    engine: str
+    t_submit: float
+
+
+@dataclass
+class ServiceConfig:
+    """Engine-construction knobs shared by the service entry points."""
+    backend: str | None = None
+    k: int = 10
+    max_batch: int = 256
+    compact_threshold: int = 4096
+    cutoff: float = 0.6
+    fold_m: int = 4
+    fold_scheme: int = 1
+    hnsw_m: int = 8
+    hnsw_ef_construction: int = 40
+    hnsw_ef_search: int = 32
+    seed: int = 0
+
+
+class SearchService:
+    """Request-queue front end over the online-insertable search engines."""
+
+    #: completed-but-unredeemed results kept before FIFO eviction — bounds
+    #: memory for drivers that consume flush() returns and never result()
+    RESULT_BUFFER = 1024
+
+    def __init__(self, db, engines=("bitbound-folding",),
+                 config: ServiceConfig | None = None,
+                 clock=time.perf_counter, **overrides):
+        cfg = config or ServiceConfig(**overrides)
+        if overrides and config is not None:
+            raise ValueError("pass either config= or keyword overrides")
+        self.config = cfg
+        self.clock = clock
+        db = np.atleast_2d(np.asarray(db, dtype=np.uint32))
+        self.engines = {name: self._build_engine(name, db) for name in engines}
+        self.default_engine = engines[0]
+        self._pending: list[_Request] = []
+        self._results: dict[int, tuple] = {}
+        self._next_rid = 0
+        self.reset_telemetry()
+
+    def reset_telemetry(self) -> None:
+        """Zero the telemetry counters (engines and their compile caches are
+        untouched). Benchmarks call this between warmup and timed windows."""
+        self.latencies_ms: list[float] = []
+        self.batches: list[dict] = []
+        self.scanned_total: Counter = Counter()
+        self.n_queries = 0
+        self.n_inserts = 0
+        self.search_time = 0.0
+        self.insert_time = 0.0
+
+    def _build_engine(self, name: str, db: np.ndarray):
+        cfg = self.config
+        if name == "brute":
+            # brute has no host reference path; map "numpy" to the jnp path
+            be = cfg.backend if cfg.backend in ("jnp", "tpu") else None
+            return BruteForceEngine(db, backend=be,
+                                    compact_threshold=cfg.compact_threshold)
+        if name == "bitbound-folding":
+            return BitBoundFoldingEngine(
+                db, cutoff=cfg.cutoff, m=cfg.fold_m, scheme=cfg.fold_scheme,
+                backend=cfg.backend,
+                compact_threshold=cfg.compact_threshold)
+        if name == "hnsw":
+            return HNSWEngine(db, m=cfg.hnsw_m,
+                              ef_construction=cfg.hnsw_ef_construction,
+                              ef_search=cfg.hnsw_ef_search, seed=cfg.seed,
+                              backend=cfg.backend)
+        raise ValueError(
+            f"unknown engine {name!r}; expected one of {ENGINE_NAMES}")
+
+    # -- write path ---------------------------------------------------------
+    def insert(self, fps) -> np.ndarray:
+        """Append fingerprints online to every engine; returns the global
+        ids (engines must agree — one logical database)."""
+        t0 = self.clock()
+        fps = np.atleast_2d(np.asarray(fps, dtype=np.uint32))
+        gids = None
+        for name, eng in self.engines.items():
+            g = eng.insert(fps)
+            if gids is None:
+                gids = g
+            elif not np.array_equal(g, gids):
+                raise RuntimeError(
+                    f"engine {name} assigned ids {g}, expected {gids}")
+        self.n_inserts += fps.shape[0]
+        self.insert_time += self.clock() - t0
+        return gids
+
+    # -- read path ----------------------------------------------------------
+    def submit(self, queries, k: int | None = None,
+               engine: str | None = None) -> int:
+        """Enqueue a search request (single query row or a (n, W) batch);
+        returns a request id redeemed by :meth:`flush` / :meth:`result`."""
+        engine = engine or self.default_engine
+        if engine not in self.engines:
+            raise ValueError(f"engine {engine!r} not served "
+                             f"(have {tuple(self.engines)})")
+        queries = np.atleast_2d(np.asarray(queries, dtype=np.uint32))
+        req = _Request(self._next_rid, queries, int(k or self.config.k),
+                       engine, self.clock())
+        self._pending.append(req)
+        self._next_rid += 1
+        return req.rid
+
+    def flush(self) -> dict[int, tuple]:
+        """Run every pending request through its engine, micro-batched by
+        (engine, k) and padded to power-of-two batch buckets. Returns
+        {rid: (ids, sims)} for the requests completed by this flush."""
+        pending, self._pending = self._pending, []
+        done: dict[int, tuple] = {}
+        groups: dict[tuple, list[_Request]] = {}
+        for r in pending:
+            groups.setdefault((r.engine, r.k), []).append(r)
+        for (ename, k), reqs in groups.items():
+            eng = self.engines[ename]
+            qs = np.concatenate([r.queries for r in reqs])
+            n, w = qs.shape
+            ids_parts, sims_parts = [], []
+            t0 = self.clock()
+            off = 0
+            while off < n:
+                chunk = qs[off:off + self.config.max_batch]
+                bucket = next_pow2(chunk.shape[0])
+                padded = np.zeros((bucket, w), dtype=np.uint32)
+                padded[:chunk.shape[0]] = chunk
+                ids, sims = eng.search(padded, k)
+                ids_parts.append(np.asarray(ids)[:chunk.shape[0]])
+                sims_parts.append(np.asarray(sims)[:chunk.shape[0]])
+                self.batches.append({"engine": ename, "k": k,
+                                     "bucket": int(bucket),
+                                     "n": int(chunk.shape[0])})
+                self.scanned_total[ename] += eng.scanned(bucket)
+                off += chunk.shape[0]
+            self.search_time += self.clock() - t0
+            ids = np.concatenate(ids_parts)
+            sims = np.concatenate(sims_parts)
+            t_done = self.clock()
+            off = 0
+            for r in reqs:
+                nr = r.queries.shape[0]
+                done[r.rid] = (ids[off:off + nr], sims[off:off + nr])
+                off += nr
+                self.latencies_ms.append((t_done - r.t_submit) * 1e3)
+                self.n_queries += nr
+        self._results.update(done)
+        # FIFO-evict beyond the buffer bound: callers that consume flush()'s
+        # return and never result() must not leak arrays forever
+        while len(self._results) > self.RESULT_BUFFER:
+            self._results.pop(next(iter(self._results)))
+        return done
+
+    def result(self, rid: int):
+        """Redeem a completed request (pops it from the result buffer).
+        Raises ``KeyError`` for unknown rids, including results evicted past
+        :attr:`RESULT_BUFFER` unredeemed completions."""
+        return self._results.pop(rid)
+
+    def search(self, queries, k: int | None = None,
+               engine: str | None = None):
+        """Convenience synchronous path: submit + flush + redeem."""
+        rid = self.submit(queries, k, engine)
+        self.flush()
+        return self._results.pop(rid)
+
+    def compact_all(self) -> None:
+        """Force-compact every store-backed engine's delta (operational
+        hook: benchmarks use it to pin the delta phase before a measurement
+        window; a deployment would call it off-peak)."""
+        for eng in self.engines.values():
+            store = getattr(eng, "store", None)
+            if store is not None and store.n_delta:
+                store.compact()
+
+    # -- telemetry ----------------------------------------------------------
+    @property
+    def compactions(self) -> int:
+        return sum(eng.store.compactions for eng in self.engines.values()
+                   if hasattr(eng, "store"))
+
+    def compiled_pipelines(self) -> int:
+        """Total compiled-executable count across engine pipeline caches —
+        flat in steady state (the no-recompile acceptance criterion)."""
+        total = 0
+        for eng in self.engines.values():
+            for fn in eng._jit_cache.values():
+                size = getattr(fn, "_cache_size", None)
+                total += int(size()) if callable(size) else 1
+        return total
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.latencies_ms, dtype=np.float64)
+        out = {
+            "engines": {n: e.backend for n, e in self.engines.items()},
+            "n_queries": int(self.n_queries),
+            "n_inserts": int(self.n_inserts),
+            "compactions": int(self.compactions),
+            "search_time_s": round(self.search_time, 4),
+            "insert_time_s": round(self.insert_time, 4),
+            "qps": round(self.n_queries / self.search_time, 1)
+            if self.search_time > 0 else 0.0,
+            "batch_buckets": dict(Counter(b["bucket"] for b in self.batches)),
+            "scanned": {k: int(v) for k, v in self.scanned_total.items()},
+        }
+        if lat.size:
+            out.update(
+                p50_ms=round(float(np.percentile(lat, 50)), 3),
+                p99_ms=round(float(np.percentile(lat, 99)), 3),
+                mean_ms=round(float(lat.mean()), 3))
+        return out

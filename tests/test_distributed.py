@@ -27,8 +27,8 @@ def test_sharded_search_matches_oracle():
         from repro.core.distributed import make_sharded_search, shard_database
         from repro.kernels import ref
         from repro.data.molecules import SyntheticConfig, synthetic_fingerprints, queries_from_db
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((4, 2), ("data", "model"))
         db = synthetic_fingerprints(SyntheticConfig(n=4000, seed=0))
         q = jnp.asarray(queries_from_db(db, 8))
         with mesh:
@@ -51,8 +51,8 @@ def test_sharded_search_multipod_hierarchical_merge():
         from repro.core.distributed import make_sharded_search, shard_database
         from repro.kernels import ref
         from repro.data.molecules import SyntheticConfig, synthetic_fingerprints, queries_from_db
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2, 2, 2), ("pod", "data", "model"))
         db = synthetic_fingerprints(SyntheticConfig(n=2048, seed=1))
         q = jnp.asarray(queries_from_db(db, 4))
         with mesh:
@@ -66,6 +66,38 @@ def test_sharded_search_multipod_hierarchical_merge():
     assert "MULTIPOD_OK" in out
 
 
+def test_sharded_search_masks_pad_rows():
+    """Regression (ISSUE 3 satellite): `shard_database` pads the DB with
+    zero rows to the shard multiple; without masking their 0-score entries
+    surface in the merged top-k once k approaches the shard size. With
+    ``n_valid`` threaded through, pad ids come back as -1 / sim 0."""
+    out = _run_multi_device("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import make_sharded_search, shard_database
+        from repro.launch.mesh import compat_make_mesh
+        from repro.data.molecules import SyntheticConfig, synthetic_fingerprints
+        mesh = compat_make_mesh((4, 2), ("data", "model"))
+        db = synthetic_fingerprints(SyntheticConfig(n=10, seed=0))  # pads to 12
+        with mesh:
+            db_s, cnt_s, n_valid = shard_database(mesh, db)
+            assert db_s.shape[0] == 12 and n_valid == 10
+            # k == padded total: every row (incl. both pads) is a candidate
+            search, _, _ = make_sharded_search(mesh, db_s.shape[0], 12,
+                                               n_valid=n_valid)
+            q = jnp.asarray(db[:3])
+            vals, ids = search(q, db_s, cnt_s)
+        ids, vals = np.asarray(ids), np.asarray(vals)
+        assert (ids < n_valid).all(), ids          # no pad id ever surfaces
+        assert ((ids >= 0).sum(axis=1) == n_valid).all(), ids
+        assert (vals[ids < 0] == 0.0).all()
+        # the valid entries are exactly the 10 real rows
+        for row in ids:
+            assert set(int(i) for i in row if i >= 0) == set(range(10))
+        print("PAD_MASK_OK")
+    """)
+    assert "PAD_MASK_OK" in out
+
+
 def test_quantized_psum_close_to_exact():
     out = _run_multi_device("""
         import jax, jax.numpy as jnp, numpy as np
@@ -73,8 +105,8 @@ def test_quantized_psum_close_to_exact():
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import quantized_psum
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((8,), ("data",))
         x = jax.random.normal(jax.random.key(0), (8, 512))
         f_q = shard_map(lambda v: quantized_psum(v[0], "data"), mesh=mesh,
                         in_specs=P("data"), out_specs=P(), check_rep=False)

@@ -163,6 +163,29 @@ def test_beam_expansion_cuts_iterations(tiny_index):
     assert recs[4] >= recs[1] - 0.05, recs
 
 
+def test_beam_auto_tune_default(tiny_index):
+    """ISSUE 3 satellite: ``HNSWEngine(beam=None)`` picks the beam from
+    ``ef_search`` (ROADMAP telemetry rule), at equal recall vs ``beam=1``
+    with fewer lock-step iterations."""
+    db, idx = tiny_index
+    # the rule itself
+    assert hn.auto_beam(64) == 4 and hn.auto_beam(16) == 1
+    assert hn.auto_beam(128) == 8 and hn.auto_beam(1024) == 8  # clamped
+    assert HNSWEngine(db, index=idx, ef_search=64).beam == 4
+    assert HNSWEngine(db, index=idx, ef_search=16).beam == 1
+    # equal-recall pin vs beam=1 on the tiny grid
+    q = queries_from_db(db, 16, seed=13)
+    true = _truth(db, q, 10)
+    auto = HNSWEngine(db, index=idx, ef_search=64, backend="jnp")
+    ids_a, _ = auto.search(q, 10)
+    iters_auto = auto.stats["iters"]
+    one = HNSWEngine(db, index=idx, ef_search=64, backend="jnp", beam=1)
+    ids_1, _ = one.search(q, 10)
+    assert recall_at_k(ids_a, true) == recall_at_k(ids_1, true), \
+        (recall_at_k(ids_a, true), recall_at_k(ids_1, true))
+    assert iters_auto < one.stats["iters"]
+
+
 def test_recall_increases_with_ef(tiny_index):
     db, idx = tiny_index
     q = queries_from_db(db, 16, seed=6)

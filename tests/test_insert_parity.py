@@ -1,0 +1,133 @@
+"""ISSUE 3 acceptance: insert-then-search parity.
+
+After any interleaving of online inserts and searches — including across an
+LSM compaction boundary — every engine returns **bit-identical** (ids, sims)
+to an engine rebuilt from scratch on the concatenated database, on every
+backend. This pins the whole write path: store segment layout, the merged
+main+delta candidate ordering (stable (popcount, gid) ties), the device
+merge ranks, and HNSW's rng-continuation incremental construction.
+"""
+import numpy as np
+import pytest
+
+from repro.core import BruteForceEngine, BitBoundFoldingEngine, HNSWEngine
+from repro.core import hnsw as hn
+from repro.data.molecules import (SyntheticConfig, queries_from_db,
+                                  synthetic_fingerprints)
+
+
+@pytest.fixture(scope="module")
+def data():
+    base = synthetic_fingerprints(SyntheticConfig(n=700, seed=0))
+    extra = synthetic_fingerprints(SyntheticConfig(n=100, seed=9))
+    full = np.concatenate([base, extra])
+    q = queries_from_db(full, 10, seed=4)
+    return base, extra, full, q
+
+
+def _assert_equal(eng, reb, q, k, label):
+    ids, sims = eng.search(q, k)
+    rids, rsims = reb.search(q, k)
+    np.testing.assert_array_equal(ids, rids, err_msg=label)
+    np.testing.assert_array_equal(sims, rsims, err_msg=label)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "tpu"])
+def test_brute_insert_parity(data, backend):
+    base, extra, full, q = data
+    eng = BruteForceEngine(base, backend=backend, compact_threshold=64)
+    eng.insert(extra[:30])                     # delta only
+    assert eng.store.compactions == 0
+    _assert_equal(eng, BruteForceEngine(np.concatenate([base, extra[:30]]),
+                                        backend=backend), q, 15,
+                  f"brute/{backend} pre-compaction")
+    eng.insert(extra[30:])                     # 100 >= 64 -> compaction
+    assert eng.store.compactions == 1
+    _assert_equal(eng, BruteForceEngine(full, backend=backend), q, 15,
+                  f"brute/{backend} post-compaction")
+    assert eng.n_total == len(full)
+
+
+@pytest.mark.parametrize("backend,m,cutoff", [
+    ("numpy", 1, 0.6), ("numpy", 4, 0.2),
+    ("jnp", 2, 0.4), ("jnp", 1, 0.2),
+    ("tpu", 1, 0.6), ("tpu", 4, 0.2),
+])
+def test_bitbound_insert_parity(data, backend, m, cutoff):
+    base, extra, full, q = data
+    label = f"bitbound/{backend} m={m} Sc={cutoff}"
+    eng = BitBoundFoldingEngine(base, cutoff=cutoff, m=m, backend=backend,
+                                compact_threshold=64)
+    eng.insert(extra[:30])
+    mid = BitBoundFoldingEngine(np.concatenate([base, extra[:30]]),
+                                cutoff=cutoff, m=m, backend=backend)
+    _assert_equal(eng, mid, q, 15, label + " pre-compaction")
+    # scanned-work accounting matches the rebuild too (Eq.2 windows + delta)
+    assert eng.scanned(len(q)) == mid.scanned(len(q)), label
+    eng.insert(extra[30:])
+    assert eng.store.compactions == 1
+    reb = BitBoundFoldingEngine(full, cutoff=cutoff, m=m, backend=backend)
+    _assert_equal(eng, reb, q, 15, label + " post-compaction")
+    assert eng.scanned(len(q)) == reb.scanned(len(q)), label
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jnp", "tpu"])
+def test_hnsw_insert_parity(data, backend):
+    base, extra, full, q = data
+    eng = HNSWEngine(base[:600], m=6, ef_construction=24, ef_search=24,
+                     seed=3, backend=backend)
+    eng.insert(extra[:20])
+    eng.insert(extra[20:40])
+    reb_db = np.concatenate([base[:600], extra[:40]])
+    reb = HNSWEngine(reb_db, m=6, ef_construction=24, ef_search=24, seed=3,
+                     backend=backend)
+    _assert_equal(eng, reb, q, 10, f"hnsw/{backend}")
+    assert eng.n_total == 640
+
+
+def test_hnsw_incremental_graph_identical(data):
+    """The graph itself (not just search results) matches a from-scratch
+    build: same adjacency, entry point, levels — the rng-continuation +
+    shared _insert_node contract."""
+    base, extra, full, q = data
+    idx = hn.build_hnsw(base[:600], m=6, ef_construction=24, seed=3)
+    hn.insert_hnsw(idx, extra[:20])
+    hn.insert_hnsw(idx, extra[20:40])
+    ref = hn.build_hnsw(np.concatenate([base[:600], extra[:40]]),
+                        m=6, ef_construction=24, seed=3)
+    np.testing.assert_array_equal(idx.base_adj, ref.base_adj)
+    np.testing.assert_array_equal(idx.level_of, ref.level_of)
+    assert idx.entry_point == ref.entry_point
+    assert idx.max_level == ref.max_level
+    assert len(idx.level_nodes) == len(ref.level_nodes)
+    for a, b in zip(idx.level_nodes, ref.level_nodes):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(idx.level_adj, ref.level_adj):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "tpu"])
+def test_brute_delta_parity_when_k_spans_padding(backend):
+    """Regression (code-review find): with k > n_main the main scan's
+    capacity-pad rows (sim 0, raw row ids) used to win cross-run score-0
+    ties against real delta rows in the merge — ids must instead match the
+    rebuild exactly up to k = n_total."""
+    rows = synthetic_fingerprints(SyntheticConfig(n=8, seed=1))
+    eng = BruteForceEngine(rows[:5], backend=backend,   # capacity pads 5->8
+                           compact_threshold=100)
+    eng.insert(rows[5:])
+    reb = BruteForceEngine(rows, backend=backend)
+    q = rows[:2]
+    _assert_equal(eng, reb, q, 8, f"brute/{backend} k==n_total")
+    ids, _ = eng.search(q, 8)
+    assert (ids >= 0).all() and (ids < 8).all(), ids
+
+
+def test_insert_returns_global_ids(data):
+    base, extra, _, _ = data
+    eng = BruteForceEngine(base, compact_threshold=10_000)
+    g1 = eng.insert(extra[0])                  # single row broadcastable
+    g2 = eng.insert(extra[1:4])
+    np.testing.assert_array_equal(g1, [len(base)])
+    np.testing.assert_array_equal(g2, np.arange(len(base) + 1, len(base) + 4))
+    assert eng.insert(np.empty((0, base.shape[1]), np.uint32)).size == 0

@@ -1,0 +1,25 @@
+"""Synthetic data helpers (ISSUE 3 satellite: queries_from_db must not crash
+when asked for more queries than the database holds)."""
+import numpy as np
+import pytest
+
+from repro.data.molecules import (SyntheticConfig, queries_from_db,
+                                  synthetic_fingerprints)
+
+
+def test_queries_within_db_are_unique_members():
+    db = synthetic_fingerprints(SyntheticConfig(n=50, seed=0))
+    q = queries_from_db(db, 20, seed=1)
+    assert q.shape == (20, db.shape[1])
+    # without replacement below n: all rows distinct
+    assert len(np.unique(q, axis=0)) == 20
+
+
+def test_oversampling_falls_back_to_replacement():
+    db = synthetic_fingerprints(SyntheticConfig(n=10, seed=0))
+    with pytest.warns(UserWarning, match="replacement"):
+        q = queries_from_db(db, 25, seed=1)
+    assert q.shape == (25, db.shape[1])
+    # every sample is still a database member
+    dbset = {r.tobytes() for r in np.asarray(db)}
+    assert all(r.tobytes() in dbset for r in q)

@@ -1,0 +1,120 @@
+"""MutableFingerprintStore invariants: segment layout, LSM compaction,
+folded-array consistency, capacity padding (ISSUE 3 tentpole)."""
+import numpy as np
+import pytest
+
+from repro.core import folding as fl
+from repro.serve.store import MutableFingerprintStore, PAD_COUNT, next_pow2
+from repro.data.molecules import SyntheticConfig, synthetic_fingerprints
+
+
+@pytest.fixture(scope="module")
+def rows():
+    return synthetic_fingerprints(SyntheticConfig(n=300, seed=0))
+
+
+@pytest.fixture(scope="module")
+def extra():
+    return synthetic_fingerprints(SyntheticConfig(n=90, seed=8))
+
+
+def _cnt(a):
+    return np.bitwise_count(a).sum(-1).astype(np.int64)
+
+
+def test_next_pow2():
+    assert [next_pow2(n) for n in (0, 1, 2, 3, 4, 5, 1000)] == \
+        [1, 1, 2, 4, 4, 8, 1024]
+
+
+def test_sorted_main_invariants(rows):
+    st = MutableFingerprintStore(rows, sorted_main=True, fold_m=2)
+    seg = st.main
+    n = seg.n
+    assert n == 300 and seg.capacity == 512 == seg.db.shape[0]
+    # valid counts ascending, pad counts sentinel (Eq.2 windows never reach)
+    assert (np.diff(seg.counts[:n]) >= 0).all()
+    assert (seg.counts[n:] == PAD_COUNT).all()
+    assert (seg.db[n:] == 0).all() and (seg.order[n:] == -1).all()
+    # order is a permutation reproducing the input rows
+    assert sorted(seg.order[:n].tolist()) == list(range(n))
+    np.testing.assert_array_equal(st.rows_in_gid_order(), rows)
+    # stable sort: equal popcounts stay in ascending gid order
+    eq = seg.counts[:n - 1] == seg.counts[1:n]
+    assert (seg.order[:n - 1][eq] < seg.order[1:n][eq]).all()
+    # folded arrays match a fold of the sorted rows
+    np.testing.assert_array_equal(seg.folded[:n], fl.fold(seg.db[:n], 2, 1))
+    np.testing.assert_array_equal(seg.folded_counts[:n],
+                                  _cnt(seg.folded[:n]))
+
+
+def test_unsorted_main_identity_order(rows):
+    st = MutableFingerprintStore(rows, sorted_main=False, fold_m=1)
+    n = st.main.n
+    np.testing.assert_array_equal(st.main.db[:n], rows)
+    np.testing.assert_array_equal(st.main.order[:n], np.arange(n))
+    assert (st.main.counts[n:] == 0).all()     # brute pads score 0, lose ties
+
+
+def test_insert_assigns_monotone_gids(rows, extra):
+    st = MutableFingerprintStore(rows, compact_threshold=1000)
+    g1 = st.insert(extra[:10])
+    g2 = st.insert(extra[10:25])
+    np.testing.assert_array_equal(g1, np.arange(300, 310))
+    np.testing.assert_array_equal(g2, np.arange(310, 325))
+    assert st.n_total == 325 and st.n_delta == 25 and st.n_main == 300
+    np.testing.assert_array_equal(st.delta_db, extra[:25])
+    np.testing.assert_array_equal(st.delta_counts, _cnt(extra[:25]))
+    # folded delta maintained eagerly for stage-1 scans
+    np.testing.assert_array_equal(st.delta_folded,
+                                  fl.fold(extra[:25], st.fold_m, 1))
+
+
+def test_threshold_triggers_compaction(rows, extra):
+    st = MutableFingerprintStore(rows, fold_m=2, compact_threshold=40)
+    st.insert(extra[:30])
+    assert st.compactions == 0 and st.n_delta == 30 and st.generation == 0
+    st.insert(extra[30:50])                     # 50 >= 40 -> compact
+    assert st.compactions == 1 and st.generation == 1
+    assert st.n_delta == 0 and st.n_main == 350 == st.n_total
+    # the fresh main is exactly a from-scratch build on the concatenation
+    ref = MutableFingerprintStore(np.concatenate([rows, extra[:50]]),
+                                  fold_m=2)
+    for f in ("db", "counts", "order", "folded", "folded_counts"):
+        np.testing.assert_array_equal(getattr(st.main, f),
+                                      getattr(ref.main, f), err_msg=f)
+    # gids keep continuing after the compaction
+    g = st.insert(extra[50:55])
+    np.testing.assert_array_equal(g, np.arange(350, 355))
+    np.testing.assert_array_equal(st.rows_in_gid_order(),
+                                  np.concatenate([rows, extra[:55]]))
+
+
+def test_capacity_padding_is_stable_across_compaction(rows, extra):
+    """Compactions below the capacity keep array shapes — the property that
+    lets device pipelines (keyed on shapes) survive compaction."""
+    st = MutableFingerprintStore(rows, compact_threshold=10)
+    shape0 = st.main.db.shape
+    st.insert(extra[:10])                       # compacts at threshold
+    assert st.compactions == 1
+    assert st.main.db.shape == shape0 == (512, rows.shape[1])
+    # ... and grows by doubling once the capacity is crossed
+    st2 = MutableFingerprintStore(extra[:60], compact_threshold=8)
+    assert st2.main.capacity == 64
+    st2.insert(rows[:8])
+    assert st2.main.capacity == 128
+
+
+def test_delta_version_counters(rows, extra):
+    st = MutableFingerprintStore(rows, compact_threshold=40)
+    v0 = st.delta_version
+    st.insert(extra[:5])
+    assert st.delta_version == v0 + 1
+    st.compact()
+    assert st.generation == 1 and st.n_delta == 0
+
+
+def test_width_mismatch_rejected(rows):
+    st = MutableFingerprintStore(rows)
+    with pytest.raises(ValueError, match="width"):
+        st.insert(np.zeros((2, rows.shape[1] + 1), np.uint32))
