@@ -1,0 +1,120 @@
+"""Bench-regression guard: fail if committed HNSW-grid QPS regressed.
+
+Compares every ``experiments/bench/fig8_hnsw_grid*.json`` in the working
+tree against the most recent *git-committed version with different
+content* (so on a clean checkout it compares HEAD's artifact with the last
+commit that changed it). Rows are matched by ``name`` and only compared
+when they came from the same measurement shape (``n_db`` / ``n_queries`` /
+``beam`` match — a committed re-run at a different scale is a new baseline,
+not a regression). A matched row fails when ``host_qps`` drops by more than
+``--threshold`` (default 20%).
+
+Run it from CI *before* the tiny-mode benchmark smoke legs overwrite the
+artifacts:
+
+    python -m benchmarks.check_bench_regression
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+BENCH_REL = "experiments/bench"
+SHAPE_KEYS = ("n_db", "n_queries", "beam")
+
+
+def _git(*args: str) -> subprocess.CompletedProcess:
+    return subprocess.run(["git", *args], cwd=REPO, capture_output=True,
+                          text=True)
+
+
+def previous_versions(rel_path: str, current_text: str):
+    """Committed versions of ``rel_path`` with content differing from
+    ``current_text``, newest first (a shape-changed re-baseline is skipped
+    by the caller in favour of an older, comparable version)."""
+    log = _git("log", "--format=%H", "--", rel_path)
+    if log.returncode != 0:
+        return
+    for commit in log.stdout.split():
+        show = _git("show", f"{commit}:{rel_path}")
+        if show.returncode == 0 and show.stdout != current_text:
+            try:
+                yield json.loads(show.stdout)
+            except json.JSONDecodeError:
+                continue
+
+
+def compare(old_rows: list, new_rows: list, threshold: float):
+    """(regressions, n_compared): matched-by-name rows whose QPS dropped."""
+    old_by_name = {r["name"]: r for r in old_rows if "name" in r}
+    regressions, compared = [], 0
+    for r in new_rows:
+        o = old_by_name.get(r.get("name"))
+        if o is None or "host_qps" not in o or "host_qps" not in r:
+            continue
+        if any(o.get(k) != r.get(k) for k in SHAPE_KEYS):
+            continue                       # re-measured at a different shape
+        compared += 1
+        if r["host_qps"] < (1.0 - threshold) * o["host_qps"]:
+            regressions.append(
+                (r["name"], o["host_qps"], r["host_qps"]))
+    return regressions, compared
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="allowed fractional QPS drop (default 0.20)")
+    ap.add_argument("--glob", default="fig8_hnsw_grid*.json",
+                    help="benchmark artifacts to guard")
+    args = ap.parse_args(argv)
+
+    bench_dir = REPO / BENCH_REL
+    failed = False
+    checked = 0
+    for path in sorted(bench_dir.glob(args.glob)):
+        rel = f"{BENCH_REL}/{path.name}"
+        text = path.read_text()
+        new_rows = json.loads(text)
+        regs = compared = None
+        n_versions = 0
+        # walk back to the most recent *comparable* baseline: a version
+        # re-measured at a different shape (n_db/...) guards nothing, but an
+        # older same-shape version still can
+        for old in previous_versions(rel, text):
+            n_versions += 1
+            regs, compared = compare(old, new_rows, args.threshold)
+            if compared:
+                break
+        if n_versions == 0:
+            print(f"[bench-guard] {path.name}: no prior committed version "
+                  f"with different content — skipped")
+            continue
+        if not compared:
+            # loud: a guarded artifact with history but no comparable rows
+            # is effectively unguarded (e.g. every prior version was a
+            # different measurement shape)
+            print(f"[bench-guard] WARNING {path.name}: {n_versions} prior "
+                  f"version(s) but 0 comparable rows — artifact is "
+                  f"UNGUARDED; commit a same-shape baseline")
+            continue
+        checked += compared
+        if regs:
+            failed = True
+            for name, was, now in regs:
+                print(f"[bench-guard] REGRESSION {path.name}:{name} "
+                      f"host_qps {was} -> {now} "
+                      f"(> {args.threshold:.0%} drop)")
+        else:
+            print(f"[bench-guard] {path.name}: {compared} comparable rows, "
+                  f"no regression > {args.threshold:.0%}")
+    print(f"[bench-guard] {checked} rows compared across artifacts")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

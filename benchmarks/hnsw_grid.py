@@ -20,21 +20,23 @@ from .common import K, brute_truth, emit, get_db, get_queries, timeit
 
 
 def run(n_db=8_000, n_queries=32, ms=(5, 10, 20), efs=(20, 60, 120, 200),
-        backend="jnp", beam=1, ef_construction=100):
+        backend="jnp", beam=1, ef_construction=100, layout="rows"):
     db = get_db(n_db, seed=7)
     queries = get_queries(db, n_queries, seed=8)
     true_ids, _ = brute_truth(db, queries, K)
     rows = []
+    lsuf = "" if layout == "rows" else f"_{layout}"
     for m in ms:
         index = hn.build_hnsw(np.asarray(db), m=m,
                               ef_construction=ef_construction, seed=0)
-        eng = HNSWEngine(db, index=index, backend=backend, beam=beam)
+        eng = HNSWEngine(db, index=index, backend=backend, beam=beam,
+                         layout=layout)
         for ef in efs:
             dt = timeit(lambda: eng.search(queries, K, ef=ef), repeats=2)
             ids, _ = eng.search(queries, K, ef=ef)
             rows.append({
-                "name": f"hnsw_m{m}_ef{ef}_{backend}", "m": m, "ef": ef,
-                "backend": backend, "beam": beam,
+                "name": f"hnsw_m{m}_ef{ef}_{backend}{lsuf}", "m": m, "ef": ef,
+                "backend": backend, "beam": beam, "layout": layout,
                 "n_db": n_db, "n_queries": n_queries,
                 "us_per_call": round(dt / n_queries * 1e6, 1),
                 "host_qps": round(n_queries / dt, 1),
@@ -44,7 +46,7 @@ def run(n_db=8_000, n_queries=32, ms=(5, 10, 20), efs=(20, 60, 120, 200),
                 "max_iters_hit": eng.stats.get("max_iters_hit", 0),
             })
     suffix = "" if backend == "jnp" else f"_{backend}"
-    emit(f"fig8_hnsw_grid{suffix}", rows)
+    emit(f"fig8_hnsw_grid{suffix}{lsuf}", rows)
     return rows
 
 
@@ -62,6 +64,9 @@ def main():
                     help="ef_search values to sweep")
     ap.add_argument("--beam", type=int, default=1,
                     help="candidates expanded per traversal iteration")
+    ap.add_argument("--layout", default="rows", choices=["rows", "blocked"],
+                    help="fine-grained distance layout (row gather vs "
+                         "neighbour-blocked streaming; bit-exact results)")
     ap.add_argument("--ef-construction", type=int, default=None)
     args = ap.parse_args()
     # interpret-mode Pallas (off-TPU) walks the gather grid in python:
@@ -72,7 +77,7 @@ def main():
         ms=tuple(args.ms) if args.ms else ((8,) if tiny else (5, 10, 20)),
         efs=tuple(args.efs) if args.efs else ((20, 60) if tiny
                                               else (20, 60, 120, 200)),
-        backend=args.backend, beam=args.beam,
+        backend=args.backend, beam=args.beam, layout=args.layout,
         ef_construction=args.ef_construction or (40 if tiny else 100))
 
 

@@ -26,9 +26,16 @@ from pathlib import Path
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
+# Per-DMA-descriptor issue cost for the gather-stage model (order of
+# magnitude for the v5e DMA engine; what makes 128-byte row fetches
+# latency-bound long before they are bandwidth-bound).
+DMA_SETUP_S = 1e-6
 
 DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
 OUT = Path(__file__).resolve().parent.parent / "experiments" / "roofline.json"
+BENCH_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+OUT_GATHER = (Path(__file__).resolve().parent.parent / "experiments"
+              / "roofline_gather.json")
 
 
 def param_counts(arch: str):
@@ -125,5 +132,51 @@ def run(pattern: str = "*.json", tag: str = ""):
     return rows
 
 
+def gather_stage(bench_path: Path = BENCH_DIR / "BENCH_gather.json"):
+    """Roofline terms for the HNSW fine-grained distance stage (ISSUE 4).
+
+    Reads ``BENCH_gather.json`` (``benchmarks/gather_bench.py``) and models
+    one beam-expansion query-iteration on v5e constants: both layouts move
+    the same HBM bytes, so the streaming term ``t_stream = bytes / 819e9``
+    is shared; the layouts differ in DMA *descriptor* count —
+    ``beam * 2M`` 128-byte row fetches (row layout) vs ``beam`` contiguous
+    ``2M*W*4``-byte streams (blocked). With ~1 us per descriptor the row
+    layout is descriptor-issue-bound (effective bandwidth ~W*4 bytes/us ~=
+    0.1 GB/s per engine), the blocked layout is stream-bound — the model
+    behind the layout change, reported as effective-bandwidth fractions.
+    """
+    rows = json.loads(Path(bench_path).read_text())
+    out = []
+    for r in rows:
+        bytes_iter = r["bytes_hbm_per_query_iter"] * r["q"]
+        t_stream = bytes_iter / HBM_BW
+        t_row = r["q"] * r["dma_streams_row"] * DMA_SETUP_S + t_stream
+        t_blk = r["q"] * r["dma_streams_blocked"] * DMA_SETUP_S + t_stream
+        out.append({
+            "name": r["name"], "q": r["q"], "m": r["m"], "beam": r["beam"],
+            "bytes_per_iter": bytes_iter,
+            "t_stream_s": t_stream,
+            "t_row_model_s": t_row, "t_blocked_model_s": t_blk,
+            "model_speedup": t_row / t_blk,
+            "bw_frac_row": t_stream / t_row,
+            "bw_frac_blocked": t_stream / t_blk,
+            "measured_speedup_jnp": r.get("speedup_jnp"),
+            "measured_speedup_vs_row_kernel": r.get("speedup_vs_row_kernel"),
+        })
+    OUT_GATHER.write_text(json.dumps(out, indent=1))
+    print(f"{'name':18s} {'bytes/iter':>10s} {'t_row':>10s} {'t_blk':>10s} "
+          f"{'model_x':>8s} {'bw%row':>7s} {'bw%blk':>7s}")
+    for r in out:
+        print(f"{r['name']:18s} {r['bytes_per_iter']:10d} "
+              f"{r['t_row_model_s']:10.2e} {r['t_blocked_model_s']:10.2e} "
+              f"{r['model_speedup']:8.1f} {100*r['bw_frac_row']:6.1f}% "
+              f"{100*r['bw_frac_blocked']:6.1f}%")
+    return out
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+    if "--gather" in sys.argv:
+        gather_stage()
+    else:
+        run()

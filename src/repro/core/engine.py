@@ -83,6 +83,17 @@ def _store_mod():
 
 
 @jax.jit
+def _gather_score_frontier(q, dev_db, ids):
+    """Jitted single-query gather-distance launch for the insert-frontier
+    scorer. Module-level so the compile cache is keyed purely on shapes:
+    with the capacity-stable cached device db, repeated frontier widths
+    across insert batches (and engines) replay compiled launches instead of
+    re-tracing the Pallas call per frontier."""
+    from ..kernels import ops as kops
+    return kops.gather_tanimoto(q[None], dev_db, ids[None])[0]
+
+
+@jax.jit
 def _merge_main_delta(s_a, i_a, s_b, i_b, n_main):
     """Rank-merge the main-segment and delta (scores, ids) runs, keeping the
     best ``k = s_a.shape[1]`` per row. Ties keep run A (the main segment)
@@ -111,6 +122,10 @@ class SearchEngine:
 
     BACKENDS: tuple = ("jnp", "tpu")
     DEFAULT_BACKEND: str = "jnp"
+    #: memory layouts the engine's device path can run on; engines with a
+    #: ``layout`` field (HNSW: "rows" row-gather / "blocked"
+    #: neighbour-blocked streaming) extend this
+    LAYOUTS: tuple = ("rows",)
 
     def _init_engine(self) -> None:
         if self.backend is None:
@@ -121,6 +136,12 @@ class SearchEngine:
                 f"{type(self).__name__} backend must be one of "
                 f"{'/'.join(repr(b) for b in self.BACKENDS)}, "
                 f"got {self.backend!r}")
+        layout = getattr(self, "layout", None)
+        if layout is not None and layout not in self.LAYOUTS:
+            raise ValueError(
+                f"{type(self).__name__} layout must be one of "
+                f"{'/'.join(repr(x) for x in self.LAYOUTS)}, "
+                f"got {layout!r}")
         self._last_scanned = 0
         self._last_n_queries = 0
         self._jit_cache: dict = {}
@@ -671,24 +692,6 @@ class BitBoundFoldingEngine(SearchEngine):
         return ids, sims, scanned
 
 
-def _gather_scorer_factory(db: np.ndarray, db_cnt: np.ndarray):
-    """Insert-frontier scorer routing neighbour batches through the Pallas
-    ``gather_tanimoto`` kernel (ROADMAP "device-side construction", first
-    cut: the graph walk stays host-side, the distance stage runs on device;
-    the full-db upload per insert batch is the documented cost to amortise
-    next). ``db_cnt`` is part of the scorer-factory protocol but unused
-    here — the kernel recomputes row popcounts in-register."""
-    from ..kernels import ops as kops
-    del db_cnt
-    dev = jnp.asarray(db)
-
-    def scorer(q: np.ndarray, ids: np.ndarray) -> np.ndarray:
-        s = kops.gather_tanimoto(jnp.asarray(q)[None], dev,
-                                 jnp.asarray(ids, dtype=jnp.int32)[None])
-        return np.asarray(s[0])
-    return scorer
-
-
 @dataclass
 class HNSWEngine(SearchEngine):
     """Approximate graph search (paper §III-C / §IV-B).
@@ -703,6 +706,19 @@ class HNSWEngine(SearchEngine):
       kernel as the fine-grained distance stage (jnp fallback when Pallas
       is unavailable).
 
+    ``layout`` selects the fine-grained distance stage's memory layout
+    (bit-exact results either way):
+
+    * ``"rows"``    — scattered row gather per neighbour id (the ``(Q, E)``
+      kernel / jnp twin). One 128-byte fetch per neighbour.
+    * ``"blocked"`` — neighbour-blocked base layer (``nbr_fps (N, 2M, W)``):
+      one contiguous stream per popped node through the fused
+      gather/score/sort expand kernel (``kernels/expand.py``) or its jnp
+      twin — ``beam`` DMA streams per query-iteration instead of
+      ``beam*2M`` row fetches, at the HBM cost of one extra ``2M*W``-word
+      copy of the base layer. Upper layers and entry-point scoring keep the
+      row kernel (tiny, adjacency is M-wide).
+
     ``beam`` is the number of candidates expanded per traversal iteration
     (``beam * 2M`` neighbours scored per kernel launch); ``beam=None`` (the
     default) auto-tunes it from ``ef_search`` (:func:`repro.core.hnsw.auto_beam`,
@@ -714,7 +730,14 @@ class HNSWEngine(SearchEngine):
     incremental construction, rng-continuation levels), so an engine that
     inserted online is graph-identical to one rebuilt from scratch on the
     concatenated database. The device graph is padded to a power-of-two node
-    capacity: inserts below the capacity reuse every compiled traversal.
+    capacity: inserts below the capacity reuse every compiled traversal, and
+    the post-insert refresh is **incremental** — only new fingerprint rows
+    and the base-adjacency / neighbour-block rows the batch touched
+    (``index.dirty_log``) are scattered into the device arrays; a full
+    re-upload happens only when the capacity doubles. The ``tpu`` backend's
+    insert-frontier scorer likewise keeps a capacity-padded device copy of
+    the database and appends new rows in place instead of re-uploading the
+    full database every batch.
 
     After each ``search``, :attr:`stats` holds the batch's traversal
     telemetry: ``iters`` / ``expansions`` / ``neighbour_evals`` totals and,
@@ -729,11 +752,13 @@ class HNSWEngine(SearchEngine):
     index: hn.HNSWIndex = None
     _graph: hn.HNSWDeviceGraph = None
     backend: str | None = None
+    layout: str = "rows"
     beam: int | None = None
     max_iters: int | None = None
 
     BACKENDS = ("numpy", "jnp", "tpu")
     DEFAULT_BACKEND = "jnp"
+    LAYOUTS = hn.LAYOUTS
 
     def __post_init__(self):
         self._init_engine()
@@ -744,6 +769,11 @@ class HNSWEngine(SearchEngine):
                                        ef_construction=self.ef_construction,
                                        seed=self.seed)
         self._graph_dirty = False
+        self._graph_n = 0          # index.n the device graph was built for
+        self._dirty_pos = 0        # consumed prefix of index.dirty_log
+        self._dirty_epoch = 0      # dirty_log epoch the prefix belongs to
+        self._upper_version = 0    # index.upper_version the graph carries
+        self._insert_db_cache = None  # (device db (cap, W), rows filled)
         self._refresh_graph()
 
     @property
@@ -755,39 +785,130 @@ class HNSWEngine(SearchEngine):
         if self.backend == "numpy":
             self._graph = None
             return
-        cap = _store_mod().next_pow2(self.index.n)
-        self._graph = hn.to_device_graph(self.index, capacity=cap)
+        idx = self.index
+        cap = _store_mod().next_pow2(idx.n)
+        g = self._graph
+        log = idx.dirty_log
+        if (g is None or g.db.shape[0] != cap or log is None
+                or self._graph_n > idx.n
+                or self._dirty_epoch != idx.dirty_epoch):
+            self._graph = hn.to_device_graph(idx, capacity=cap,
+                                             layout=self.layout)
+        else:
+            # incremental refresh: scatter only the rows the insert batches
+            # touched (new fingerprints + dirty base-adjacency rows and, on
+            # the blocked layout, their neighbour blocks) into the device
+            # arrays — the full re-upload only ever happens on a capacity
+            # doubling. tests/test_hnsw_backends.py pins this equal to a
+            # fresh to_device_graph.
+            rows = sorted(set(log[self._dirty_pos:])
+                          | set(range(self._graph_n, idx.n)))
+            db_dev, cnt_dev = g.db, g.db_popcount
+            base_dev, nbr_fps, nbr_cnt = g.base_adj, g.nbr_fps, g.nbr_cnt
+            if rows:
+                rows = np.asarray(rows, dtype=np.int64)
+                adj_rows = idx.base_adj[rows]
+                db_dev = db_dev.at[rows].set(jnp.asarray(idx.db[rows]))
+                cnt_dev = cnt_dev.at[rows].set(
+                    jnp.asarray(idx.db_popcount[rows].astype(np.int32)))
+                base_dev = base_dev.at[rows].set(jnp.asarray(adj_rows))
+                if self.layout == "blocked":
+                    fps_np, cnt_np = hn._blocked_rows(
+                        idx.db, idx.db_popcount, adj_rows)
+                    nbr_fps = nbr_fps.at[rows].set(jnp.asarray(fps_np))
+                    nbr_cnt = nbr_cnt.at[rows].set(jnp.asarray(cnt_np))
+            # upper layers only change when a batch inserted a level>0 node
+            # (index.upper_version) — level-0-only batches skip the O(cap)
+            # densify+upload entirely
+            upper_dev = g.upper_adj
+            if self._upper_version != idx.upper_version:
+                upper_dev = jnp.asarray(hn._dense_upper(idx, cap))
+            self._graph = hn.HNSWDeviceGraph(
+                db=db_dev, db_popcount=cnt_dev, base_adj=base_dev,
+                upper_adj=upper_dev, entry_point=jnp.int32(idx.entry_point),
+                max_level=max(idx.max_level, 0),
+                nbr_fps=nbr_fps, nbr_cnt=nbr_cnt)
+        self._graph_n = idx.n
+        self._dirty_pos = len(idx.dirty_log) if idx.dirty_log is not None \
+            else 0
+        self._dirty_epoch = idx.dirty_epoch
+        self._upper_version = idx.upper_version
         self._graph_dirty = False
+
+    def _insert_scorer_factory(self, db: np.ndarray, db_cnt: np.ndarray):
+        """Insert-frontier scorer routing neighbour batches through the
+        Pallas ``gather_tanimoto`` kernel (ROADMAP "device-side
+        construction": the graph walk stays host-side, the distance stage
+        runs on device). The device database is cached capacity-padded
+        across insert batches — new rows are appended in place (one scatter
+        per batch) and a full upload only happens when the capacity doubles,
+        instead of the old full-db re-upload per batch. Existing rows are
+        immutable, so the cache key is just (capacity, rows filled).
+        ``db_cnt`` is part of the scorer-factory protocol but unused here —
+        the kernel recomputes row popcounts in-register."""
+        del db_cnt
+        n, w = db.shape
+        cached = self._insert_db_cache
+        if (cached is not None and cached[0].shape[0] >= n
+                and cached[0].shape[1] == w):
+            dev, filled = cached
+            if n > filled:
+                dev = dev.at[filled:n].set(jnp.asarray(db[filled:n]))
+        else:
+            cap = _store_mod().next_pow2(n)
+            dev = jnp.zeros((cap, w), jnp.uint32).at[:n].set(jnp.asarray(db))
+        self._insert_db_cache = (dev, n)
+
+        def scorer(q: np.ndarray, ids: np.ndarray) -> np.ndarray:
+            s = _gather_score_frontier(jnp.asarray(q), dev,
+                                       jnp.asarray(ids, dtype=jnp.int32))
+            return np.asarray(s)
+        return scorer
 
     def _apply_insert(self, fps):
         factory = None
         if self.backend == "tpu" and _kernels_available():
-            factory = _gather_scorer_factory
+            factory = self._insert_scorer_factory
         gids = hn.insert_hnsw(self.index, fps, scorer_factory=factory)
-        # lazy device refresh: N consecutive insert batches cost one graph
-        # densify+upload at the next search, not N
+        # lazy device refresh: N consecutive insert batches cost one
+        # (incremental) graph update at the next search, not N
         self._graph_dirty = True
         return gids
 
     def _device_search(self, k: int, ef: int, beam: int):
         use_kernel = self.backend == "tpu" and _kernels_available()
+        layout = self.layout
         max_level = self._graph.max_level
         max_iters = self.max_iters
-        key = (k, ef, beam, max_level, use_kernel)
+        key = (k, ef, beam, max_level, use_kernel, layout)
 
         def build():
-            def run(q, db, db_cnt, base_adj, upper_adj, ep):
+            def run(q, db, db_cnt, base_adj, upper_adj, ep, nbr_fps, nbr_cnt):
                 g = hn.HNSWDeviceGraph(db=db, db_popcount=db_cnt,
                                        base_adj=base_adj, upper_adj=upper_adj,
-                                       entry_point=ep, max_level=max_level)
+                                       entry_point=ep, max_level=max_level,
+                                       nbr_fps=nbr_fps, nbr_cnt=nbr_cnt)
                 score_fn = None
+                expand_fn = None
                 if use_kernel:
                     from ..kernels import ops as kops
 
                     def score_fn(qs, qc, ids):
                         return kops.gather_tanimoto(qs, db, ids, q_cnt=qc)
+                if layout == "blocked":
+                    if use_kernel:
+                        def expand_fn(qs, qc, pop, flat, worst, kk):
+                            return kops.expand_tanimoto_sorted(
+                                qs, nbr_fps, nbr_cnt, pop, flat, worst, kk,
+                                q_cnt=qc)
+                    else:
+                        def expand_fn(qs, qc, pop, flat, worst, kk):
+                            return hn.expand_scores_jnp(
+                                qs, qc, nbr_fps, nbr_cnt, pop, flat, worst,
+                                kk)
                 return hn.search_hnsw(g, q, k, ef, max_iters=max_iters,
-                                      beam=beam, score_fn=score_fn)
+                                      beam=beam, score_fn=score_fn,
+                                      expand_fn=expand_fn)
             return jax.jit(run)
         return self._cached(key, build)
 
@@ -809,7 +930,8 @@ class HNSWEngine(SearchEngine):
         fn = self._device_search(k, ef, beam)
         g = self._graph
         ids, sims, tstats = fn(jnp.asarray(queries), g.db, g.db_popcount,
-                               g.base_adj, g.upper_adj, g.entry_point)
+                               g.base_adj, g.upper_adj, g.entry_point,
+                               g.nbr_fps, g.nbr_cnt)
         iters = np.asarray(tstats.iters)
         expans = np.asarray(tstats.expansions)
         reason = np.asarray(tstats.reason)
@@ -817,6 +939,7 @@ class HNSWEngine(SearchEngine):
         self._record_batch(int(expans.sum()) * m2, iters.shape[0])
         self.stats = {
             "backend": self.backend,
+            "layout": self.layout,
             "iters": int(iters.sum()),
             "expansions": int(expans.sum()),
             "neighbour_evals": int(expans.sum()) * m2,

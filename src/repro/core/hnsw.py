@@ -13,9 +13,15 @@
     C, results M) from ``core/topk.py`` — compare-and-shift / rank-merge
     semantics, the paper's Fig. 9 structure;
   - a **fine-grained gather-distance stage** scoring one whole beam
-    expansion (``beam * 2M`` neighbour ids per query) per launch — either
-    the Pallas scalar-prefetch kernel ``kernels.ops.gather_tanimoto`` or its
-    jnp twin :func:`score_ids_jnp`;
+    expansion (``beam * 2M`` neighbour ids per query) per launch, on one of
+    two memory layouts (bit-exact results): ``rows`` — per-neighbour row
+    gather (Pallas scalar-prefetch kernel ``kernels.ops.gather_tanimoto`` or
+    its jnp twin :func:`score_ids_jnp`) — or ``blocked`` — a neighbour-packed
+    copy of the base layer (``nbr_fps (N, 2M, W)``) streamed one contiguous
+    block per popped node through the fused gather/score/sort kernel
+    ``kernels.ops.expand_tanimoto_sorted`` (jnp twin
+    :func:`expand_scores_jnp`), ``beam`` DMA streams per query-iteration
+    instead of ``beam*2M`` scattered row fetches;
   - per-query **termination** (Alg. 2 bound) with a global ``max_iters``
     budget; per-query telemetry (iterations, expansions, stop reason) comes
     back as :class:`TraversalStats`.
@@ -73,6 +79,30 @@ class HNSWIndex:
     # construction-time upper layers (level -> {gid: int32 neighbour array});
     # kept so insert_hnsw can continue building without re-deriving state
     upper_dicts: list | None = field(default=None, repr=False)
+    # persisted level-draw Generator: continuing it yields exactly the values
+    # a from-scratch _draw_levels(seed, n_total) stream would, without the
+    # O(n_total) re-draw per insert batch (rebuilt from ``seed`` when absent)
+    rng: np.random.Generator | None = field(default=None, repr=False)
+    # log of nodes whose base_adj row changed (inserted nodes +
+    # bidirectional-link updates); engines consume suffixes of it to update
+    # device copies (incl. the neighbour-blocked layout) incrementally.
+    # Bounded: when it outgrows ~2n entries it is cleared and ``dirty_epoch``
+    # bumps, forcing stale consumers to full-rebuild instead of leaking host
+    # memory under sustained insert streams.
+    dirty_log: list | None = field(default=None, repr=False)
+    dirty_epoch: int = 0
+    # bumped whenever an insert batch can have touched the upper layers
+    # (some inserted node drew level > 0); lets engines skip the O(cap)
+    # upper-layer densify entirely on level-0-only batches (the ~(m-1)/m
+    # common case)
+    upper_version: int = 0
+    # amortized-doubling backing arrays; db/db_popcount/base_adj/level_of are
+    # views of their prefixes once insert_hnsw has run (O(1) amortized growth
+    # instead of an O(n_total) concatenate per batch)
+    _db_cap: np.ndarray | None = field(default=None, repr=False)
+    _cnt_cap: np.ndarray | None = field(default=None, repr=False)
+    _adj_cap: np.ndarray | None = field(default=None, repr=False)
+    _lvl_cap: np.ndarray | None = field(default=None, repr=False)
 
     @property
     def n(self) -> int:
@@ -164,24 +194,35 @@ def _search_layer_np(index_db, db_cnt, adj, q, entry_points, ef,
             np.asarray([s for s, _ in rs], dtype=np.float32))
 
 
-def _draw_levels(seed: int, n_total: int, n_skip: int, m: int,
+def _draw_levels(rng: np.random.Generator, n: int, m: int,
                  max_level_cap: int) -> np.ndarray:
-    """Levels for nodes ``n_skip..n_total-1`` from the seed's rng stream.
+    """Draw the next ``n`` node levels from the persisted rng stream.
 
-    ``default_rng(seed).random(n)`` fills the PCG64 stream sequentially, so
-    drawing ``n_total`` values and slicing off the first ``n_skip`` yields
-    exactly the levels a from-scratch build of ``n_total`` nodes would give
-    them — the property the insert-then-rebuild parity contract rests on.
+    ``Generator.random(n)`` consumes the PCG64 stream sequentially, so
+    drawing ``n_old`` values at build time and ``n_new`` more per insert
+    batch yields exactly the levels one ``random(n_old + n_new)`` call of a
+    from-scratch build would — the property the insert-then-rebuild parity
+    contract rests on, now without the O(n_total) re-draw per batch.
     """
     ml = 1.0 / math.log(m)
-    u = np.random.default_rng(seed).random(n_total)[n_skip:]
+    u = rng.random(n)
     return np.minimum(
         np.floor(-np.log(np.maximum(u, 1e-12)) * ml).astype(np.int32),
         max_level_cap)
 
 
+def _level_rng(index: HNSWIndex) -> np.random.Generator:
+    """The index's persisted level-draw Generator; indexes that predate the
+    field (deserialized) rebuild it by fast-forwarding ``seed``'s stream
+    past the ``n`` draws the existing nodes consumed."""
+    if index.rng is None:
+        index.rng = np.random.default_rng(index.seed)
+        index.rng.random(index.n)
+    return index.rng
+
+
 def _insert_node(db, db_cnt, base_adj, upper, levels, i, m, ef_construction,
-                 entry_point, ep_level, scorer=None):
+                 entry_point, ep_level, scorer=None, dirty=None):
     """Insert node ``i`` into the half-built graph (Alg. 1 descent + Alg. 2
     layer searches + Alg. 4 selection, with bidirectional link shrink).
 
@@ -190,6 +231,10 @@ def _insert_node(db, db_cnt, base_adj, upper, levels, i, m, ef_construction,
     what makes online engines bit-identical to a rebuild. ``upper`` is the
     level -> {gid: neighbours} dict list; ``entry_point < 0`` means the graph
     is still empty. Returns the updated ``(entry_point, ep_level)``.
+
+    ``dirty`` (optional list) collects every node whose *base-layer* row is
+    written — the inserted node plus its bidirectionally-linked neighbours —
+    so engines can refresh device adjacency copies incrementally.
     """
     m0 = base_adj.shape[1]
     l_new = int(levels[i])
@@ -218,12 +263,16 @@ def _insert_node(db, db_cnt, base_adj, upper, levels, i, m, ef_construction,
         sel = _select_heuristic(ids, sims, min(m, len(ids)), db, db_cnt)
         if level == 0:
             base_adj[i, :len(sel)] = sel
+            if dirty is not None:
+                dirty.append(i)
         else:
             upper[level][i] = sel.copy()
         # bidirectional links + shrink
         for e in sel:
             e = int(e)
             if level == 0:
+                if dirty is not None:
+                    dirty.append(e)
                 row = base_adj[e]
                 free = np.where(row < 0)[0]
                 if len(free):
@@ -280,7 +329,8 @@ def build_hnsw(db: np.ndarray, m: int = 16, ef_construction: int = 100,
     db = np.asarray(db, dtype=np.uint32)
     n, _ = db.shape
     db_cnt = _np_popcount(db)
-    levels = _draw_levels(seed, n, 0, m, max_level_cap)
+    rng = np.random.default_rng(seed)
+    levels = _draw_levels(rng, n, m, max_level_cap)
     base_adj = np.full((n, 2 * m), -1, dtype=np.int32)
     upper = [dict() for _ in range(max_level_cap + 1)]  # gid -> int32 array
 
@@ -297,55 +347,97 @@ def build_hnsw(db: np.ndarray, m: int = 16, ef_construction: int = 100,
                      max_level=max_level, base_adj=base_adj,
                      level_nodes=level_nodes, level_adj=level_adj,
                      level_of=levels.astype(np.int8), seed=seed,
-                     max_level_cap=max_level_cap, upper_dicts=upper)
+                     max_level_cap=max_level_cap, upper_dicts=upper, rng=rng)
+
+
+def _ensure_capacity(index: HNSWIndex, n_total: int) -> None:
+    """Amortized-doubling growth: make db / db_popcount / base_adj / level_of
+    views into power-of-two backing arrays with room for ``n_total`` rows.
+
+    One copy per doubling instead of an O(n_total) ``np.concatenate`` per
+    insert batch (the ROADMAP known cost). Values are untouched, so parity
+    with a from-scratch rebuild is preserved bit-for-bit. The check against
+    ``.base`` re-seeds the backing arrays whenever the caller swapped the
+    public arrays out from under us (fresh build, deserialized index).
+    """
+    cap_arr = index._db_cap
+    if (cap_arr is not None and cap_arr.shape[0] >= n_total
+            and index.db.base is cap_arr):
+        return
+    cap = 1 << max(int(n_total - 1).bit_length(), 4)
+    n, w = index.db.shape
+    m2 = index.base_adj.shape[1]
+    index._db_cap = np.zeros((cap, w), dtype=np.uint32)
+    index._db_cap[:n] = index.db
+    index._cnt_cap = np.zeros((cap,), dtype=np.int32)
+    index._cnt_cap[:n] = index.db_popcount
+    index._adj_cap = np.full((cap, m2), -1, dtype=np.int32)
+    index._adj_cap[:n] = index.base_adj
+    index._lvl_cap = np.zeros((cap,), dtype=np.int8)
+    index._lvl_cap[:n] = index.level_of
 
 
 def insert_hnsw(index: HNSWIndex, new_fps: np.ndarray,
                 scorer_factory=None) -> np.ndarray:
     """Batched incremental inserts: grow ``index`` in place by ``new_fps``.
 
-    Levels continue the seed's rng stream (:func:`_draw_levels`) and every
-    node runs the same :func:`_insert_node` the offline build uses, so after
-    any number of insert batches the index is **identical** to
-    ``build_hnsw(concatenated_db)`` — the engine parity contract.
+    Levels continue the seed's rng stream (the persisted Generator,
+    :func:`_draw_levels`) and every node runs the same :func:`_insert_node`
+    the offline build uses, so after any number of insert batches the index
+    is **identical** to ``build_hnsw(concatenated_db)`` — the engine parity
+    contract. Array growth is amortized-doubling (:func:`_ensure_capacity`):
+    appending a batch costs O(batch), not O(n_total).
 
     ``scorer_factory(db, db_cnt) -> scorer(q, ids) -> sims`` swaps the
     frontier distance stage; engines pass the Pallas ``gather_tanimoto``
     wrapper to score insert frontiers on device (first cut of the ROADMAP
     device-side-construction item — the kernel's f32 arithmetic is
     value-identical to the host scorer for <=2048-bit prints, keeping the
-    graph deterministic). Returns the new nodes' global ids.
+    graph deterministic). Base-layer rows touched by the batch are appended
+    to ``index.dirty_log`` for incremental device-copy refresh (engines
+    track their own consumed offset). Returns the new nodes' global ids.
     """
     new_fps = np.atleast_2d(np.asarray(new_fps, dtype=np.uint32))
     n_new = new_fps.shape[0]
     n_old = index.n
     if n_new == 0:
         return np.empty((0,), dtype=np.int64)
-    levels_new = _draw_levels(index.seed, n_old + n_new, n_old, index.m,
+    n_total = n_old + n_new
+    _ensure_capacity(index, n_total)
+    index._db_cap[n_old:n_total] = new_fps
+    index._cnt_cap[n_old:n_total] = _np_popcount(new_fps)
+    index._adj_cap[n_old:n_total] = -1
+    levels_new = _draw_levels(_level_rng(index), n_new, index.m,
                               index.max_level_cap)
-    index.db = np.concatenate([index.db, new_fps])
-    index.db_popcount = np.concatenate(
-        [index.db_popcount, _np_popcount(new_fps)]).astype(np.int32)
-    index.base_adj = np.concatenate(
-        [index.base_adj,
-         np.full((n_new, index.base_adj.shape[1]), -1, np.int32)])
-    levels_all = np.concatenate(
-        [np.asarray(index.level_of, dtype=np.int32), levels_new])
+    index._lvl_cap[n_old:n_total] = levels_new
+    index.db = index._db_cap[:n_total]
+    index.db_popcount = index._cnt_cap[:n_total]
+    index.base_adj = index._adj_cap[:n_total]
+    index.level_of = index._lvl_cap[:n_total]
     if index.upper_dicts is None:
         index.upper_dicts = _upper_dicts_from_dense(index)
+    if index.dirty_log is None:
+        index.dirty_log = []
     upper = index.upper_dicts
     scorer = (scorer_factory(index.db, index.db_popcount)
               if scorer_factory is not None else None)
     ep, epl = int(index.entry_point), int(index.max_level)
-    for i in range(n_old, n_old + n_new):
+    for i in range(n_old, n_total):
         ep, epl = _insert_node(index.db, index.db_popcount, index.base_adj,
-                               upper, levels_all, i, index.m,
-                               index.ef_construction, ep, epl, scorer=scorer)
+                               upper, index.level_of, i, index.m,
+                               index.ef_construction, ep, epl, scorer=scorer,
+                               dirty=index.dirty_log)
     index.entry_point, index.max_level = int(ep), int(epl)
-    index.level_of = levels_all.astype(np.int8)
     index.level_nodes, index.level_adj = _densify(upper, index.max_level,
                                                   index.m)
-    return np.arange(n_old, n_old + n_new, dtype=np.int64)
+    if bool((levels_new > 0).any()):
+        # only a level>0 node can write upper-layer rows (_insert_node's
+        # upper mutations all sit under ``level >= 1`` of the new node)
+        index.upper_version += 1
+    if len(index.dirty_log) > max(1024, 2 * n_total):
+        index.dirty_log = []
+        index.dirty_epoch += 1
+    return np.arange(n_old, n_total, dtype=np.int64)
 
 
 def auto_beam(ef_search: int) -> int:
@@ -360,38 +452,79 @@ def auto_beam(ef_search: int) -> int:
 # ---------------------------------------------------------------------------
 
 class HNSWDeviceGraph(NamedTuple):
-    """Device-resident, constant-shape view of the index for the JAX engine."""
+    """Device-resident, constant-shape view of the index for the JAX engine.
+
+    ``layout="blocked"`` additionally carries the **neighbour-blocked copy of
+    the base layer** (ISSUE 4): ``nbr_fps[v] = db[base_adj[v]]`` with zero
+    rows for ``-1`` slots, plus the matching popcounts — one popped node's
+    whole expansion is a single contiguous ``2M*W``-word HBM stream for the
+    fused expand kernel, at the HBM cost of one extra ``2M*W``-word copy of
+    the base layer per node.
+    """
     db: jax.Array             # (N, W) uint32
     db_popcount: jax.Array    # (N,) int32
     base_adj: jax.Array       # (N, 2M) int32
     upper_adj: jax.Array      # (L, N, M) int32 — dense per-level adjacency (-1 pad)
     entry_point: jax.Array    # () int32
     max_level: int
+    nbr_fps: jax.Array | None = None   # (N, 2M, W) uint32 — blocked layout only
+    nbr_cnt: jax.Array | None = None   # (N, 2M) int32
 
 
-def to_device_graph(index: HNSWIndex,
-                    capacity: int | None = None) -> HNSWDeviceGraph:
-    """Densify the index for the device engine. ``capacity`` (>= n) pads the
-    node dimension — pad rows are zero fingerprints with no edges, so they
-    are unreachable and the traversal is unaffected. Engines pad to a power
-    of two so online inserts below the capacity reuse compiled traversals."""
+LAYOUTS = ("rows", "blocked")
+
+
+def _dense_upper(index: HNSWIndex, cap: int) -> np.ndarray:
+    """Dense (L, cap, M) upper-layer adjacency (-1 padded)."""
     L = max(index.max_level, 0)
-    n, m = index.n, index.m
-    cap = n if capacity is None else max(int(capacity), n)
-    upper = np.full((max(L, 1), cap, m), -1, dtype=np.int32)
+    upper = np.full((max(L, 1), cap, index.m), -1, dtype=np.int32)
     for l in range(1, L + 1):
         gids = index.level_nodes[l - 1]
         upper[l - 1, gids] = index.level_adj[l - 1]
+    return upper
+
+
+def _blocked_rows(db: np.ndarray, db_cnt: np.ndarray, adj: np.ndarray):
+    """Neighbour-blocked rows for ``adj`` (any (R, 2M) id slice): gathers the
+    referenced fingerprints/popcounts, zeroing ``-1`` slots."""
+    safe = np.maximum(adj, 0)
+    fps = db[safe].copy()                              # (R, 2M, W)
+    fps[adj < 0] = 0
+    cnt = db_cnt[safe].astype(np.int32)
+    cnt[adj < 0] = 0
+    return fps, cnt
+
+
+def to_device_graph(index: HNSWIndex, capacity: int | None = None,
+                    layout: str = "rows") -> HNSWDeviceGraph:
+    """Densify the index for the device engine. ``capacity`` (>= n) pads the
+    node dimension — pad rows are zero fingerprints with no edges, so they
+    are unreachable and the traversal is unaffected. Engines pad to a power
+    of two so online inserts below the capacity reuse compiled traversals.
+    ``layout="blocked"`` also builds the neighbour-blocked base-layer copy
+    (:class:`HNSWDeviceGraph` docstring)."""
+    if layout not in LAYOUTS:
+        raise ValueError(f"layout must be one of {LAYOUTS}, got {layout!r}")
+    L = max(index.max_level, 0)
+    n = index.n
+    cap = n if capacity is None else max(int(capacity), n)
+    upper = _dense_upper(index, cap)
     db = np.zeros((cap, index.db.shape[1]), dtype=np.uint32)
     db[:n] = index.db
     cnt = np.zeros((cap,), dtype=np.int32)
     cnt[:n] = index.db_popcount
     base = np.full((cap, index.base_adj.shape[1]), -1, dtype=np.int32)
     base[:n] = index.base_adj
+    nbr_fps = nbr_cnt = None
+    if layout == "blocked":
+        nbr_fps_np, nbr_cnt_np = _blocked_rows(db, cnt, base)
+        nbr_fps = jnp.asarray(nbr_fps_np)
+        nbr_cnt = jnp.asarray(nbr_cnt_np)
     return HNSWDeviceGraph(
         db=jnp.asarray(db), db_popcount=jnp.asarray(cnt),
         base_adj=jnp.asarray(base), upper_adj=jnp.asarray(upper),
-        entry_point=jnp.int32(index.entry_point), max_level=L)
+        entry_point=jnp.int32(index.entry_point), max_level=L,
+        nbr_fps=nbr_fps, nbr_cnt=nbr_cnt)
 
 
 def _sims(q: jax.Array, q_cnt: jax.Array, g: HNSWDeviceGraph, ids: jax.Array) -> jax.Array:
@@ -415,6 +548,33 @@ def score_ids_jnp(queries: jax.Array, q_cnt: jax.Array, g: HNSWDeviceGraph,
     s = jnp.where(union > 0,
                   inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
     return jnp.where(ids >= 0, s, NEG_INF)
+
+
+def expand_scores_jnp(queries: jax.Array, q_cnt: jax.Array,
+                      nbr_fps: jax.Array, nbr_cnt: jax.Array,
+                      pop_ids: jax.Array, flat_ids: jax.Array,
+                      worst: jax.Array, kk: int):
+    """Plain-jnp twin of the fused expand kernel (``kernels/expand.py``):
+    gather ``beam`` contiguous neighbour blocks per query from the blocked
+    layout, score, mask ``-1``/sub-threshold slots, return the top-``kk``
+    sorted run. Identical arithmetic to the kernel and to the row path's
+    gather -> score -> filter -> sort chain — the bit-exactness contract
+    between ``layout="blocked"`` and ``layout="rows"``.
+    """
+    q_n = queries.shape[0]
+    safe = jnp.maximum(pop_ids, 0)
+    blk = nbr_fps[safe]                                 # (Q, B, 2M, W)
+    inter = jnp.sum(jax.lax.population_count(
+        queries[:, None, None, :] & blk).astype(jnp.int32), axis=-1)
+    union = q_cnt[:, None, None] + nbr_cnt[safe] - inter
+    s = jnp.where(union > 0,
+                  inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
+    s = s.reshape(q_n, -1)
+    s = jnp.where(flat_ids >= 0, s, NEG_INF)
+    s = jnp.where(s > worst[:, None], s, NEG_INF)
+    ids = jnp.where(s > NEG_INF, flat_ids, -1)
+    s_srt, pos = jax.lax.top_k(s, kk)
+    return s_srt, jnp.take_along_axis(ids, pos, axis=1)
 
 
 def _greedy_descent(q, q_cnt, g: HNSWDeviceGraph, level: int,
@@ -453,7 +613,8 @@ class TraversalStats(NamedTuple):
 
 
 def search_hnsw(g: HNSWDeviceGraph, queries: jax.Array, k: int, ef: int,
-                max_iters: int | None = None, beam: int = 1, score_fn=None):
+                max_iters: int | None = None, beam: int = 1, score_fn=None,
+                expand_fn=None):
     """Batched device-resident KNN search over the base layer.
 
     The whole query batch traverses in lock-step inside one
@@ -472,8 +633,20 @@ def search_hnsw(g: HNSWDeviceGraph, queries: jax.Array, k: int, ef: int,
     device arrays.
 
     ``score_fn(queries, q_cnt, ids) -> sims`` is the fine-grained distance
-    stage; default is the jnp gather (:func:`score_ids_jnp`), engines pass
-    the Pallas ``gather_tanimoto`` kernel for the ``tpu`` backend.
+    stage for the entry-point scoring and the ``rows``-layout expansion;
+    default is the jnp gather (:func:`score_ids_jnp`), engines pass the
+    Pallas ``gather_tanimoto`` kernel for the ``tpu`` backend.
+
+    ``expand_fn(queries, q_cnt, pop_ids, flat_ids, worst, kk) ->
+    (scores (Q, kk) desc, ids (Q, kk))`` replaces the whole
+    gather -> score -> evict-filter -> sort stage of one beam expansion
+    (``pop_ids (Q, beam)`` are the popped node ids, ``flat_ids (Q, beam*2M)``
+    their adjacency with -1 for pad/visited slots, ``worst (Q,)`` the result
+    queues' eviction bounds). Engines pass the fused blocked-layout kernel
+    (``kernels.ops.expand_tanimoto_sorted``) or its jnp twin
+    (:func:`expand_scores_jnp`) for ``layout="blocked"``; the default is the
+    row-gather chain over ``score_fn``. Either way the emitted run is sorted,
+    so the queues merge it directly (one launch per iteration).
     """
     ef = max(ef, k)
     beam = max(1, min(beam, ef))
@@ -487,6 +660,19 @@ def search_hnsw(g: HNSWDeviceGraph, queries: jax.Array, k: int, ef: int,
     n = g.db.shape[0]
     m2 = g.base_adj.shape[1]
     n_exp = beam * m2                                   # neighbours per launch
+    kk = min(n_exp, ef)                                 # sorted-run width
+    if expand_fn is None:
+        def expand_fn(qs, qc, pop_ids, flat, worst, kk):
+            # rows layout: scattered row gather + score, then evict-filter
+            # and one sort (the run feeds BOTH queues — pq_insert_batch
+            # would sort twice)
+            s = score_fn(qs, qc, flat)
+            keep = s > worst[:, None]                    # evict-worst filter
+            s = jnp.where(keep, s, NEG_INF)
+            fl = jnp.where(keep, flat, -1)
+            s_srt, pos = jax.lax.top_k(s, kk)
+            return s_srt, jnp.take_along_axis(fl, pos, axis=1)
+
     vwords = (n + 31) // 32
     q_cnt = jnp.sum(jax.lax.population_count(queries).astype(jnp.int32), -1)
 
@@ -563,17 +749,10 @@ def search_hnsw(g: HNSWDeviceGraph, queries: jax.Array, k: int, ef: int,
         fresh = jnp.stack(fresh_slots, axis=1).reshape(q_n, n_exp)
         flat = jnp.where(fresh, nb.reshape(q_n, n_exp), -1)
 
-        # fine-grained distance stage: B*2M neighbours per query, one launch
-        s = score_fn(queries, q_cnt, flat)
-        keep = s > worst[:, None]                        # evict-worst filter
-        s = jnp.where(keep, s, NEG_INF)
-        flat = jnp.where(keep, flat, -1)
-
-        # sort the expansion once (it feeds BOTH queues — pq_insert_batch
-        # would sort twice), then rank-merge into each queue (Fig. 9)
-        kk = min(n_exp, ef)
-        s_srt, pos = jax.lax.top_k(s, kk)
-        i_srt = jnp.take_along_axis(flat, pos, axis=1)
+        # fused expansion stage: gather + score + evict-filter + sort for
+        # all B*2M neighbours per query in one launch; the sorted run
+        # rank-merges into both queues (Fig. 9)
+        s_srt, i_srt = expand_fn(queries, q_cnt, pop_i, flat, worst, kk)
         vmerge = jax.vmap(
             lambda pq, ms, mi: PQ(*merge_sorted(pq.scores, pq.payload,
                                                 ms, mi)))

@@ -1,0 +1,141 @@
+"""Fused beam-expansion kernel over the neighbour-blocked fingerprint layout
+— the streaming fine-grained distance engine of the HNSW hot path (ISSUE 4).
+
+The DMA-granularity problem (ROADMAP #1): the row-gather kernel
+(``kernels/gather.py``) walks a ``(Q, E)`` grid and issues one 128-byte
+HBM fetch per *neighbour id* — a beam expansion of ``B`` popped nodes costs
+``B * 2M`` scattered row DMAs per query. The paper's FPGA engine instead
+streams each popped vertex's whole adjacency list through the distance unit
+at initiation interval 1 (§III-C); FPScreen makes the same move explicit:
+pack the fingerprints a scan will touch contiguously and the gather-bound
+stage becomes a streaming one.
+
+This kernel is that layout change plus the fused compute:
+
+* The device graph keeps a **neighbour-blocked copy of the base layer**:
+  ``nbr_fps[v] = db[base_adj[v]]`` of shape ``(N, 2M, W)`` (invalid ``-1``
+  slots hold zero rows), with ``nbr_cnt[v]`` the matching popcounts. One
+  popped node's entire expansion is one contiguous ``2M * W``-word block.
+* The grid is ``(Q, beam)`` — *beam* steps per query, not ``beam * 2M``.
+  The popped node ids are a **scalar-prefetch** operand; the BlockSpec
+  ``index_map`` reads ``pop_ids[q, b]`` and DMAs that node's whole block
+  HBM->VMEM in a single stream, double-buffered across grid steps by the
+  Pallas pipeline. DMA streams per query-iteration: ``beam`` (vs
+  ``beam * 2M`` row fetches), same total bytes.
+* Per step the body computes popcount-Tanimoto for all ``2M`` neighbours
+  in-register, masks invalid / visited slots (id ``-1`` in the flattened
+  candidate ids) and sub-threshold scores (``<= worst[q]``, the result
+  queue's eviction bound), and accumulates into a per-query VMEM score row.
+* On the last beam step the row is **sorted in-kernel** (``lax.top_k`` to
+  width ``kk``) and emitted with the matching ids — the traversal's
+  gather -> score -> sort -> merge chain collapses into one launch per
+  iteration; ``pq_insert_batch``/``merge_sorted`` downstream consume a
+  single pre-sorted run.
+
+Arithmetic is bit-identical to the row path (integer popcounts, one f32
+divide), so ``layout="blocked"`` engines match ``layout="rows"`` exactly.
+Validated with ``interpret=True`` on CPU against ``ref.expand_sorted_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = float("-inf")  # python scalar: must not be a captured jnp constant
+
+
+def _expand_body(pop_ref, q_ref, qcnt_ref, ids_ref, worst_ref, nbr_ref,
+                 cnt_ref, s_out, i_out, s_buf, *, beam: int, m2: int,
+                 kk: int, n_exp: int):
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _init():
+        s_buf[...] = jnp.full((1, n_exp), NEG, jnp.float32)
+
+    q = q_ref[0, :]                                    # (W,) uint32
+    blk = nbr_ref[0]                                   # (2M, W) streamed block
+    inter = jnp.sum(jax.lax.population_count(
+        q[None, :] & blk).astype(jnp.int32), axis=-1)  # (2M,)
+    union = qcnt_ref[0] + cnt_ref[0] - inter
+    s = jnp.where(union > 0,
+                  inter.astype(jnp.float32) / union.astype(jnp.float32),
+                  jnp.float32(0.0))
+    ids_b = ids_ref[0, pl.ds(b * m2, m2)]              # this slot's flat ids
+    s = jnp.where(ids_b >= 0, s, NEG)                  # -1 = pad/visited/dup
+    s = jnp.where(s > worst_ref[0], s, NEG)            # evict-worst filter
+    s_buf[0, pl.ds(b * m2, m2)] = s
+
+    @pl.when(b == beam - 1)
+    def _emit():
+        all_s = s_buf[0, :]
+        all_i = jnp.where(all_s > NEG, ids_ref[0, :], -1)
+        new_s, pos = jax.lax.top_k(all_s, kk)          # in-kernel sort stage
+        s_out[0, :] = new_s
+        i_out[0, :] = jnp.take(all_i, pos)
+
+
+def expand_sorted_scores(queries: jax.Array, q_cnt: jax.Array,
+                         nbr_fps: jax.Array, nbr_cnt: jax.Array,
+                         pop_ids: jax.Array, flat_ids: jax.Array,
+                         worst: jax.Array, kk: int,
+                         interpret: bool = True):
+    """queries (Q, W) u32, q_cnt (Q,) i32, nbr_fps (N, 2M, W) u32,
+    nbr_cnt (N, 2M) i32, pop_ids (Q, beam) i32 (popped node ids, -1 = empty
+    pop), flat_ids (Q, beam*2M) i32 (adjacency of the popped beam, -1 for
+    pad / visited / duplicate slots), worst (Q,) f32 (per-query eviction
+    threshold; scores must be strictly greater to survive).
+
+    Returns ``(scores (Q, kk) f32 descending, ids (Q, kk) i32)`` — the
+    expansion's top-``kk`` survivors, -inf / -1 in the empty tail. One
+    contiguous ``nbr_fps`` block DMA per (query, beam slot) grid step.
+    """
+    q_n, w = queries.shape
+    n, m2, _ = nbr_fps.shape
+    beam = pop_ids.shape[1]
+    n_exp = beam * m2
+    assert flat_ids.shape == (q_n, n_exp), (flat_ids.shape, q_n, n_exp)
+    assert 0 < kk <= n_exp, (kk, n_exp)
+
+    def nbr_index(q, b, pop_ref):
+        # clamp invalid (-1) pops to an addressable block; their flat ids are
+        # already -1 so the body masks every score from the fetched block
+        return (jnp.clip(pop_ref[q, b], 0, n - 1), 0, 0)
+
+    def cnt_index(q, b, pop_ref):
+        return (jnp.clip(pop_ref[q, b], 0, n - 1), 0)
+
+    body = functools.partial(_expand_body, beam=beam, m2=m2, kk=kk,
+                             n_exp=n_exp)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q_n, beam),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda q, b, pop: (q, 0)),      # query row
+            pl.BlockSpec((1,), lambda q, b, pop: (q,)),          # query count
+            pl.BlockSpec((1, n_exp), lambda q, b, pop: (q, 0)),  # flat ids
+            pl.BlockSpec((1,), lambda q, b, pop: (q,)),          # worst bound
+            pl.BlockSpec((1, m2, w), nbr_index),                 # nbr block
+            pl.BlockSpec((1, m2), cnt_index),                    # nbr counts
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kk), lambda q, b, pop: (q, 0)),
+            pl.BlockSpec((1, kk), lambda q, b, pop: (q, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, n_exp), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((q_n, kk), jnp.float32),
+            jax.ShapeDtypeStruct((q_n, kk), jnp.int32),
+        ],
+        interpret=interpret,
+    )(pop_ids.astype(jnp.int32), queries, q_cnt, flat_ids.astype(jnp.int32),
+      worst.astype(jnp.float32), nbr_fps, nbr_cnt)
+    return out[0], out[1]

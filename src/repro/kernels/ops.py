@@ -166,6 +166,31 @@ def gather_tanimoto(queries: jax.Array, db: jax.Array, ids: jax.Array,
                                      interpret=_interpret())
 
 
+def expand_tanimoto_sorted(queries: jax.Array, nbr_fps: jax.Array,
+                           nbr_cnt: jax.Array, pop_ids: jax.Array,
+                           flat_ids: jax.Array, worst: jax.Array, kk: int,
+                           q_cnt: jax.Array | None = None):
+    """Fused beam-expansion stage over the neighbour-blocked layout.
+
+    queries (Q, W) u32, nbr_fps (N, 2M, W) u32, nbr_cnt (N, 2M) i32,
+    pop_ids (Q, beam) i32, flat_ids (Q, beam*2M) i32, worst (Q,) f32 ->
+    (scores (Q, kk) desc, ids (Q, kk)). One contiguous block DMA per popped
+    node (``beam`` streams per query-iteration vs the row kernel's
+    ``beam*2M`` fetches), scores sorted in-kernel so the traversal merges a
+    single run. Jit-compatible — the HNSW ``lax.while_loop`` launches it
+    once per iteration.
+    """
+    from . import expand as ke
+    queries = jnp.asarray(queries)
+    if q_cnt is None:
+        q_cnt = popcount(queries)
+    return ke.expand_sorted_scores(
+        queries, q_cnt, jnp.asarray(nbr_fps), jnp.asarray(nbr_cnt),
+        jnp.asarray(pop_ids, dtype=jnp.int32),
+        jnp.asarray(flat_ids, dtype=jnp.int32),
+        jnp.asarray(worst), kk, interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("k", "qb", "tile_n"))
 def _blocked_topk_impl(queries, db, db_cnt, k: int, qb: int, tile_n: int):
     n = db.shape[0]

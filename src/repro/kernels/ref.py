@@ -73,5 +73,29 @@ def gather_tanimoto_ref(queries: jax.Array, db: jax.Array,
     return jnp.where(ids >= 0, s, -jnp.inf)
 
 
+def expand_sorted_ref(queries: jax.Array, nbr_fps: jax.Array,
+                      nbr_cnt: jax.Array, pop_ids: jax.Array,
+                      flat_ids: jax.Array, worst: jax.Array, kk: int):
+    """Oracle for the fused beam-expansion kernel (``kernels/expand.py``):
+    score every neighbour block of the popped beam, mask ``-1`` flat ids and
+    scores ``<= worst``, return the top-``kk`` per query sorted descending
+    (-inf / -1 in the empty tail)."""
+    q_n = queries.shape[0]
+    safe = jnp.clip(pop_ids, 0, nbr_fps.shape[0] - 1)
+    blk = nbr_fps[safe]                                 # (Q, B, 2M, W)
+    q_cnt = popcount(queries)
+    inter = jnp.sum(jax.lax.population_count(
+        queries[:, None, None, :] & blk).astype(jnp.int32), axis=-1)
+    union = q_cnt[:, None, None] + nbr_cnt[safe] - inter
+    s = jnp.where(union > 0,
+                  inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
+    s = s.reshape(q_n, -1)
+    s = jnp.where(flat_ids >= 0, s, -jnp.inf)
+    s = jnp.where(s > worst[:, None], s, -jnp.inf)
+    ids = jnp.where(s > -jnp.inf, flat_ids, -1)
+    s_srt, pos = jax.lax.top_k(s, kk)
+    return s_srt, jnp.take_along_axis(ids, pos, axis=1)
+
+
 def bitcount_ref(words: jax.Array) -> jax.Array:
     return popcount(words)

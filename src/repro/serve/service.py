@@ -65,6 +65,7 @@ class ServiceConfig:
     hnsw_m: int = 8
     hnsw_ef_construction: int = 40
     hnsw_ef_search: int = 32
+    hnsw_layout: str = "rows"    # "blocked" = neighbour-blocked expand stage
     seed: int = 0
 
 
@@ -118,7 +119,7 @@ class SearchService:
             return HNSWEngine(db, m=cfg.hnsw_m,
                               ef_construction=cfg.hnsw_ef_construction,
                               ef_search=cfg.hnsw_ef_search, seed=cfg.seed,
-                              backend=cfg.backend)
+                              backend=cfg.backend, layout=cfg.hnsw_layout)
         raise ValueError(
             f"unknown engine {name!r}; expected one of {ENGINE_NAMES}")
 

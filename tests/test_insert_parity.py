@@ -71,18 +71,51 @@ def test_bitbound_insert_parity(data, backend, m, cutoff):
     assert eng.scanned(len(q)) == reb.scanned(len(q)), label
 
 
-@pytest.mark.parametrize("backend", ["numpy", "jnp", "tpu"])
-def test_hnsw_insert_parity(data, backend):
+@pytest.mark.parametrize("backend,layout", [
+    ("numpy", "rows"), ("jnp", "rows"), ("jnp", "blocked"),
+    ("tpu", "rows"), ("tpu", "blocked"),
+])
+def test_hnsw_insert_parity(data, backend, layout):
     base, extra, full, q = data
     eng = HNSWEngine(base[:600], m=6, ef_construction=24, ef_search=24,
-                     seed=3, backend=backend)
-    eng.insert(extra[:20])
+                     seed=3, backend=backend, layout=layout)
+    eng.search(q, 10)       # build the device graph at n=600 so the insert
+    eng.insert(extra[:20])  # refresh below exercises the incremental path
     eng.insert(extra[20:40])
     reb_db = np.concatenate([base[:600], extra[:40]])
     reb = HNSWEngine(reb_db, m=6, ef_construction=24, ef_search=24, seed=3,
-                     backend=backend)
-    _assert_equal(eng, reb, q, 10, f"hnsw/{backend}")
+                     backend=backend, layout=layout)
+    _assert_equal(eng, reb, q, 10, f"hnsw/{backend}/{layout}")
     assert eng.n_total == 640
+    if backend != "numpy":
+        # the incrementally-refreshed device graph (dirty_log scatter) is
+        # identical to a from-scratch to_device_graph densify+upload
+        g_inc = eng._graph
+        g_new = hn.to_device_graph(eng.index, capacity=g_inc.db.shape[0],
+                                   layout=layout)
+        for field in ("db", "db_popcount", "base_adj", "upper_adj",
+                      "nbr_fps", "nbr_cnt"):
+            a, b = getattr(g_inc, field), getattr(g_new, field)
+            if a is None:
+                assert b is None, field
+                continue
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{backend}/{layout}/"
+                                                  f"{field}")
+
+
+def test_hnsw_cross_layout_results_identical(data):
+    """ISSUE 4 acceptance: after online inserts, the blocked layout returns
+    bit-identical results to the rows layout (jnp backend)."""
+    base, extra, full, q = data
+    res = {}
+    for layout in ("rows", "blocked"):
+        eng = HNSWEngine(base[:600], m=6, ef_construction=24, ef_search=24,
+                         seed=3, backend="jnp", layout=layout)
+        eng.insert(extra[:40])
+        res[layout] = eng.search(q, 10)
+    np.testing.assert_array_equal(res["rows"][0], res["blocked"][0])
+    np.testing.assert_array_equal(res["rows"][1], res["blocked"][1])
 
 
 def test_hnsw_incremental_graph_identical(data):
@@ -121,6 +154,76 @@ def test_brute_delta_parity_when_k_spans_padding(backend):
     _assert_equal(eng, reb, q, 8, f"brute/{backend} k==n_total")
     ids, _ = eng.search(q, 8)
     assert (ids >= 0).all() and (ids < 8).all(), ids
+
+
+def test_hnsw_amortized_growth_and_persisted_rng(data):
+    """ISSUE 4 satellites: insert_hnsw grows through doubling backing arrays
+    (views, no O(n_total) concatenate per batch) and continues a persisted
+    rng Generator instead of re-drawing the whole level stream."""
+    base, extra, _, _ = data
+    idx = hn.build_hnsw(base[:200], m=4, ef_construction=12, seed=3)
+    assert idx.rng is not None                    # persisted at build time
+    hn.insert_hnsw(idx, extra[:8])
+    cap_arr = idx._db_cap
+    assert cap_arr is not None and cap_arr.shape[0] >= 208
+    assert idx.db.base is cap_arr                 # view, not a copy
+    assert idx.base_adj.base is idx._adj_cap
+    hn.insert_hnsw(idx, extra[8:16])
+    assert idx._db_cap is cap_arr                 # no reallocation below cap
+    assert idx.n == 216
+    # the dirty log accumulated the touched base rows, incl. all new nodes
+    assert set(range(200, 216)) <= set(idx.dirty_log)
+    # a legacy index (no persisted rng) fast-forwards the seed stream and
+    # still matches the rebuild exactly
+    legacy = hn.build_hnsw(base[:200], m=4, ef_construction=12, seed=3)
+    legacy.rng = None
+    hn.insert_hnsw(legacy, extra[:16])
+    np.testing.assert_array_equal(legacy.level_of, idx.level_of)
+    np.testing.assert_array_equal(legacy.base_adj, idx.base_adj)
+
+
+def test_hnsw_dirty_log_bounded(data):
+    """The dirty log is bounded: once it outgrows ~2n entries it is cleared
+    and the epoch bumps, and engines holding a stale epoch full-rebuild
+    instead of consuming lost entries — no unbounded host growth under
+    sustained insert streams, no stale device graphs."""
+    base, extra, _, q = data
+    eng = HNSWEngine(base[:300], m=4, ef_construction=12, ef_search=16,
+                     seed=3, backend="jnp", layout="blocked")
+    eng.search(q, 5)
+    idx = eng.index
+    idx.dirty_log = [0] * (2 * idx.n + 1025)   # long-consumed service log
+    eng.insert(extra[:8])
+    assert idx.dirty_epoch == 1
+    assert len(idx.dirty_log) <= 2 * idx.n + 1024
+    reb = HNSWEngine(np.concatenate([base[:300], extra[:8]]), m=4,
+                     ef_construction=12, ef_search=16, seed=3,
+                     backend="jnp", layout="blocked")
+    _assert_equal(eng, reb, q, 5, "hnsw dirty-log epoch rebuild")
+    assert eng._dirty_epoch == idx.dirty_epoch
+
+
+def test_hnsw_tpu_insert_scorer_db_cache(data):
+    """ISSUE 4 satellite: the tpu insert-frontier scorer appends new rows
+    into a cached capacity-padded device db instead of re-uploading the
+    full database every insert batch."""
+    base, extra, _, q = data
+    eng = HNSWEngine(base[:200], m=4, ef_construction=12, ef_search=16,
+                     seed=3, backend="tpu")
+    assert eng._insert_db_cache is None
+    eng.insert(extra[:4])
+    dev, filled = eng._insert_db_cache
+    assert filled == 204 and dev.shape[0] >= 204
+    cap0 = dev.shape[0]
+    eng.insert(extra[4:8])
+    dev2, filled2 = eng._insert_db_cache
+    assert filled2 == 208 and dev2.shape[0] == cap0   # appended in place
+    # cached rows are exactly the index's fingerprints
+    np.testing.assert_array_equal(np.asarray(dev2[:208]),
+                                  np.asarray(eng.index.db))
+    reb = HNSWEngine(np.concatenate([base[:200], extra[:8]]), m=4,
+                     ef_construction=12, ef_search=16, seed=3, backend="tpu")
+    _assert_equal(eng, reb, q, 5, "hnsw/tpu scorer cache")
 
 
 def test_insert_returns_global_ids(data):
