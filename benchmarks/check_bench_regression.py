@@ -24,7 +24,10 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 BENCH_REL = "experiments/bench"
-SHAPE_KEYS = ("n_db", "n_queries", "beam")
+# rows are only comparable at the same measurement shape; "shards" guards
+# the fig8_hnsw_grid_sharded.json artifact (a re-run at a different shard
+# count is a new baseline, not a regression)
+SHAPE_KEYS = ("n_db", "n_queries", "beam", "shards")
 
 
 def _git(*args: str) -> subprocess.CompletedProcess:

@@ -1,0 +1,97 @@
+"""Docs-reference guard: fail CI when a path referenced from the top-level
+docs does not exist in the working tree.
+
+Scans the backtick-quoted spans of README.md, EXPERIMENTS.md and
+docs/ARCHITECTURE.md for tokens that look like repository paths (contain a
+``/`` or end in a known file suffix) and checks each resolves — either from
+the repo root or from ``src/repro`` (module docs name ``core/engine.py``
+style paths). Spans with globby/schematic characters (``*``, ``[``, ``{``,
+``<``, ``...``) are skipped: they are patterns, not paths. Command lines
+(``python -m benchmarks.foo``) are covered via their module files by the
+``benchmarks.``/``repro.`` dotted forms.
+
+    python -m benchmarks.check_docs
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = ("README.md", "EXPERIMENTS.md", "docs/ARCHITECTURE.md")
+SUFFIXES = (".py", ".md", ".json", ".txt", ".yml")
+SKIP_CHARS = ("*", "[", "{", "<", "...")
+# bare dir-name references whose trailing slash docs often drop
+ROOTS = ("src", "tests", "benchmarks", "examples", "experiments", "docs")
+
+
+def candidate_paths(text: str):
+    for span in re.findall(r"`([^`\n]+)`", text):
+        tok = span.strip().rstrip("/").rstrip(":")
+        if not tok or any(c in tok for c in SKIP_CHARS):
+            continue
+        if re.match(r"^(PYTHONPATH|XLA_FLAGS|JAX_PLATFORMS)?[=\S]*\s*"
+                    r"(python|pip|pytest|git)\b", tok) and " " in tok:
+            # command lines: check path-looking and dotted-module words
+            for word in tok.split():
+                if word.startswith("-"):
+                    continue
+                if re.fullmatch(r"(benchmarks|repro)(\.[\w]+)+", word):
+                    yield word.replace(".", "/") + ".py"
+                elif "/" in word and "=" not in word:
+                    yield word.rstrip("/")
+            continue
+        if " " in tok or "=" in tok or tok.startswith("-"):
+            continue
+        if re.fullmatch(r"(benchmarks|repro)(\.[\w]+)+", tok):
+            yield tok.replace(".", "/") + ".py"
+            continue
+        if "/" in tok or tok.endswith(SUFFIXES) or tok in ROOTS:
+            # the first path segment must look like a directory/module name
+            # (filters prose fractions like `W/m` or `Q/ef`)
+            head = tok.split("/")[0]
+            if "/" in tok and not re.fullmatch(r"[a-z_][a-z0-9_.-]+", head):
+                continue
+            # strip `path::symbol` / `path#anchor` decorations
+            yield re.split(r"::|#", tok)[0]
+
+
+def resolves(path: str) -> bool:
+    bases = (REPO, REPO / "src" / "repro", REPO / "src",
+             REPO / "experiments" / "bench", REPO / "experiments")
+    for base in bases:
+        if (base / path).exists():
+            return True
+        # module-path variants: `core/topk.merge_sorted` -> core/topk.py,
+        # `repro/serve.py` (from dotted `repro.serve`) -> package dir
+        head, _, tail = path.rpartition("/")
+        if "." in tail:
+            mod = f"{head}/{tail.split('.')[0]}" if head else \
+                tail.split(".")[0]
+            if (base / (mod + ".py")).exists() or (base / mod).is_dir():
+                return True
+    return False
+
+
+def main() -> int:
+    missing = []
+    checked = 0
+    for doc in DOC_FILES:
+        f = REPO / doc
+        if not f.exists():
+            missing.append((doc, "(the doc file itself)"))
+            continue
+        for tok in set(candidate_paths(f.read_text())):
+            checked += 1
+            if not resolves(tok):
+                missing.append((doc, tok))
+    for doc, tok in sorted(missing):
+        print(f"[docs-check] MISSING {doc}: `{tok}` does not resolve")
+    print(f"[docs-check] {checked} path references checked across "
+          f"{len(DOC_FILES)} docs, {len(missing)} missing")
+    return 1 if missing else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,6 +7,12 @@ so the paper's Fig. 12 recall-vs-QPS operating point is directly trackable
 per backend. Rows land in the ``experiments/bench`` JSON schema with
 ``backend``/``beam`` columns plus the traversal telemetry
 (iterations, expansions, budget terminations) from ``HNSWEngine.stats``.
+
+``--shards N`` sweeps the sharded fan-out engine instead
+(``HNSWEngine(shards=N)``: per-shard traversals + rank-merge, §IV Fig. 8's
+parallel pipelines) and lands in ``fig8_hnsw_grid..._sharded.json``; run it
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to give the
+shards distinct host devices (EXPERIMENTS.md §Sharded HNSW).
 """
 from __future__ import annotations
 
@@ -20,23 +26,32 @@ from .common import K, brute_truth, emit, get_db, get_queries, timeit
 
 
 def run(n_db=8_000, n_queries=32, ms=(5, 10, 20), efs=(20, 60, 120, 200),
-        backend="jnp", beam=1, ef_construction=100, layout="rows"):
+        backend="jnp", beam=1, ef_construction=100, layout="rows",
+        shards=None):
     db = get_db(n_db, seed=7)
     queries = get_queries(db, n_queries, seed=8)
     true_ids, _ = brute_truth(db, queries, K)
     rows = []
     lsuf = "" if layout == "rows" else f"_{layout}"
+    ssuf = "" if shards is None else f"_s{shards}"
     for m in ms:
-        index = hn.build_hnsw(np.asarray(db), m=m,
-                              ef_construction=ef_construction, seed=0)
-        eng = HNSWEngine(db, index=index, backend=backend, beam=beam,
-                         layout=layout)
+        if shards is None:
+            index = hn.build_hnsw(np.asarray(db), m=m,
+                                  ef_construction=ef_construction, seed=0)
+            eng = HNSWEngine(db, index=index, backend=backend, beam=beam,
+                             layout=layout)
+        else:
+            eng = HNSWEngine(db, m=m, ef_construction=ef_construction,
+                             seed=0, backend=backend, beam=beam,
+                             layout=layout, shards=shards)
         for ef in efs:
             dt = timeit(lambda: eng.search(queries, K, ef=ef), repeats=2)
             ids, _ = eng.search(queries, K, ef=ef)
             rows.append({
-                "name": f"hnsw_m{m}_ef{ef}_{backend}{lsuf}", "m": m, "ef": ef,
+                "name": f"hnsw_m{m}_ef{ef}_{backend}{lsuf}{ssuf}",
+                "m": m, "ef": ef,
                 "backend": backend, "beam": beam, "layout": layout,
+                "shards": shards,
                 "n_db": n_db, "n_queries": n_queries,
                 "us_per_call": round(dt / n_queries * 1e6, 1),
                 "host_qps": round(n_queries / dt, 1),
@@ -46,7 +61,8 @@ def run(n_db=8_000, n_queries=32, ms=(5, 10, 20), efs=(20, 60, 120, 200),
                 "max_iters_hit": eng.stats.get("max_iters_hit", 0),
             })
     suffix = "" if backend == "jnp" else f"_{backend}"
-    emit(f"fig8_hnsw_grid{suffix}{lsuf}", rows)
+    shard_suffix = "" if shards is None else "_sharded"
+    emit(f"fig8_hnsw_grid{suffix}{lsuf}{shard_suffix}", rows)
     return rows
 
 
@@ -67,6 +83,9 @@ def main():
     ap.add_argument("--layout", default="rows", choices=["rows", "blocked"],
                     help="fine-grained distance layout (row gather vs "
                          "neighbour-blocked streaming; bit-exact results)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="fan-out over N per-device database shards "
+                         "(emits the _sharded artifact)")
     ap.add_argument("--ef-construction", type=int, default=None)
     args = ap.parse_args()
     # interpret-mode Pallas (off-TPU) walks the gather grid in python:
@@ -78,6 +97,7 @@ def main():
         efs=tuple(args.efs) if args.efs else ((20, 60) if tiny
                                               else (20, 60, 120, 200)),
         backend=args.backend, beam=args.beam, layout=args.layout,
+        shards=args.shards,
         ef_construction=args.ef_construction or (40 if tiny else 100))
 
 

@@ -132,6 +132,10 @@ def run(pattern: str = "*.json", tag: str = ""):
     return rows
 
 
+SHARD_COUNTS = (1, 2, 4, 8)        # per-shard HBM budget columns
+REFERENCE_LIBRARY_NODES = 1_000_000
+
+
 def gather_stage(bench_path: Path = BENCH_DIR / "BENCH_gather.json"):
     """Roofline terms for the HNSW fine-grained distance stage (ISSUE 4).
 
@@ -144,6 +148,15 @@ def gather_stage(bench_path: Path = BENCH_DIR / "BENCH_gather.json"):
     layout is descriptor-issue-bound (effective bandwidth ~W*4 bytes/us ~=
     0.1 GB/s per engine), the blocked layout is stream-bound — the model
     behind the layout change, reported as effective-bandwidth fractions.
+
+    The **sharded fan-out** (ISSUE 5) changes the HBM *capacity* budget,
+    not the per-stream terms: each of S shards packs only its own N/S
+    nodes' neighbour blocks, so the blocked layout's extra ``2M*W``-word
+    per-node copy divides S ways. ``hbm_blocked_copy_bytes_per_node`` is
+    that per-node cost (= one stream) and
+    ``hbm_blocked_copy_gib_per_shard`` budgets it per device for a 1M-node
+    library at S in {1, 2, 4, 8} — the number that decides whether the
+    blocked layout fits a device's HBM at a given shard count.
     """
     rows = json.loads(Path(bench_path).read_text())
     out = []
@@ -152,6 +165,7 @@ def gather_stage(bench_path: Path = BENCH_DIR / "BENCH_gather.json"):
         t_stream = bytes_iter / HBM_BW
         t_row = r["q"] * r["dma_streams_row"] * DMA_SETUP_S + t_stream
         t_blk = r["q"] * r["dma_streams_blocked"] * DMA_SETUP_S + t_stream
+        copy_per_node = r["stream_bytes_blocked"]      # 2M*W*4 bytes
         out.append({
             "name": r["name"], "q": r["q"], "m": r["m"], "beam": r["beam"],
             "bytes_per_iter": bytes_iter,
@@ -160,17 +174,25 @@ def gather_stage(bench_path: Path = BENCH_DIR / "BENCH_gather.json"):
             "model_speedup": t_row / t_blk,
             "bw_frac_row": t_stream / t_row,
             "bw_frac_blocked": t_stream / t_blk,
+            "hbm_blocked_copy_bytes_per_node": copy_per_node,
+            "hbm_blocked_copy_gib_per_shard": {
+                str(s): round(REFERENCE_LIBRARY_NODES / s * copy_per_node
+                              / 2**30, 3)
+                for s in SHARD_COUNTS},
             "measured_speedup_jnp": r.get("speedup_jnp"),
             "measured_speedup_vs_row_kernel": r.get("speedup_vs_row_kernel"),
         })
     OUT_GATHER.write_text(json.dumps(out, indent=1))
     print(f"{'name':18s} {'bytes/iter':>10s} {'t_row':>10s} {'t_blk':>10s} "
-          f"{'model_x':>8s} {'bw%row':>7s} {'bw%blk':>7s}")
+          f"{'model_x':>8s} {'bw%row':>7s} {'bw%blk':>7s} "
+          f"{'GiB/shard@1M S=1/8':>18s}")
     for r in out:
+        gib = r["hbm_blocked_copy_gib_per_shard"]
         print(f"{r['name']:18s} {r['bytes_per_iter']:10d} "
               f"{r['t_row_model_s']:10.2e} {r['t_blocked_model_s']:10.2e} "
               f"{r['model_speedup']:8.1f} {100*r['bw_frac_row']:6.1f}% "
-              f"{100*r['bw_frac_blocked']:6.1f}%")
+              f"{100*r['bw_frac_blocked']:6.1f}% "
+              f"{gib['1']:>8.2f}/{gib['8']:<8.2f}")
     return out
 
 

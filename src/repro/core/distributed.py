@@ -1,15 +1,25 @@
 """Distributed similarity search: DB sharded over the mesh, hierarchical
 top-k merge — the paper's multi-engine scaling mapped onto collectives
-(DESIGN.md §2, last row).
+(DESIGN.md §2, last row; data layouts in docs/ARCHITECTURE.md).
 
-Each device scans its DB shard with the fused on-the-fly engine (Pallas
-kernel or the streaming-jnp equivalent), producing a local (Q, k) top-k.
-Local results are then merged: ``all_gather`` over ``data`` (intra-pod ring
-on ICI), merge-sort; for multi-pod meshes a second all_gather over ``pod``
-(cross-pod DCN) merges pod winners. This is a log-depth distributed version
-of the paper's top-k merge unit. Wire bytes per query: data_axis·k·8 —
-independent of DB size, which is what makes the design scale to thousands
-of nodes.
+Two scaling recipes share the merge primitives in ``core/topk.py``:
+
+* **Exhaustive** (:func:`make_sharded_search`): each device scans its DB
+  shard with the fused on-the-fly engine (Pallas kernel or the
+  streaming-jnp equivalent), producing a local (Q, k) top-k. Local results
+  are then merged: ``all_gather`` over ``data`` (intra-pod ring on ICI),
+  merge-sort; for multi-pod meshes a second all_gather over ``pod``
+  (cross-pod DCN) merges pod winners. This is a log-depth distributed
+  version of the paper's top-k merge unit.
+* **HNSW fan-out** (:func:`merge_shard_topk` + :func:`shard_devices`): the
+  sharded graph engine (``core/hnsw.py`` / ``HNSWEngine(shards=N)``) runs
+  one independent lock-step traversal per database shard — each with its
+  own entry point, visited bitset and PQ queues, placed on its own device —
+  and this module's rank-merge tree (``core/topk.merge_sorted_many``)
+  combines the per-shard result runs into one global top-k.
+
+Either way the wire bytes per query are shards·k·8 — independent of DB
+size, which is what makes both designs scale to thousands of nodes.
 """
 from __future__ import annotations
 
@@ -21,7 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .fingerprints import popcount, tanimoto_scores
-from .topk import streaming_topk
+from .topk import NEG_INF, merge_sorted_many, streaming_topk
 
 
 def _local_topk(queries, db_shard, cnt_shard, k: int, use_kernel: bool):
@@ -90,6 +100,41 @@ def make_sharded_search(mesh, n_total: int, k: int, use_kernel: bool = False,
                    out_specs=(P(), P()),
                    check_rep=False)
     return jax.jit(fn), db_spec, cnt_spec
+
+
+def shard_devices(n_shards: int) -> list:
+    """Device placement for a shard fan-out: shard ``s`` lives on local
+    device ``s % n_devices``. With fewer devices than shards the assignment
+    wraps (several logical shards per device — same results, serialized);
+    on a single-device host every shard is local and the fan-out degrades
+    to a loop. The forced-host recipe in EXPERIMENTS.md §Sharded HNSW gives
+    a laptop 8 devices to place on."""
+    devs = jax.devices()
+    return [devs[s % len(devs)] for s in range(n_shards)]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_shard_topk(sims: jax.Array, gids: jax.Array, k: int):
+    """Combine per-shard top-k runs into the global top-k.
+
+    ``sims (S, Q, kk)`` / ``gids (S, Q, kk)`` are the fan-out's per-shard
+    result runs (descending scores, global ids, ``-1`` pads). Pad rows are
+    masked to ``NEG_INF`` so a real 0-similarity entry always beats them,
+    the rank-merge tree (``core/topk.merge_sorted_many``) reduces the S
+    runs per query, and pad similarities are restored to 0 after — the same
+    conventions as the single-shard traversal's output. Ties across shards
+    come back ordered by shard index (the tree is left-leaning).
+
+    Returns ``(ids (Q, k), sims (Q, k))``. With ``S == 1`` the merge is the
+    identity, which is what makes a 1-shard engine bit-identical to the
+    unsharded path.
+    """
+    s = jnp.where(gids >= 0, sims, NEG_INF)
+    s_q = jnp.moveaxis(s, 0, 1)                    # (Q, S, kk)
+    i_q = jnp.moveaxis(gids, 0, 1)
+    ms, mi = jax.vmap(merge_sorted_many)(s_q, i_q)
+    ms, mi = ms[:, :k], mi[:, :k]
+    return mi, jnp.where(mi >= 0, ms, 0.0)
 
 
 def shard_database(mesh, db, counts=None):

@@ -51,6 +51,9 @@ last_batch_n_queries``. Before any search it is 0 for data-dependent
 engines; engines whose per-query work is input-independent compute it in
 closed form. Per-batch traversal telemetry beyond that single number lives
 in the engine's ``stats`` dict (see :attr:`HNSWEngine.stats`).
+
+The engine x backend x layout matrix is summarised in README.md; data
+layouts and the request path are documented in docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
@@ -63,6 +66,7 @@ import numpy as np
 from . import bitbound as bb
 from . import folding as fl
 from . import hnsw as hn
+from .distributed import merge_shard_topk, shard_devices
 from .fingerprints import popcount, tanimoto_scores, batched_tanimoto_scores
 from .topk import merge_sorted, streaming_topk
 
@@ -726,6 +730,24 @@ class HNSWEngine(SearchEngine):
     iterations). ``max_iters`` caps the lock-step loop (default
     ``4*ef + 16``).
 
+    ``shards`` (ISSUE 5) splits the database round-robin into N independent
+    per-shard graphs, one per mesh device (FPScreen-style partition-then-
+    merge — the paper's replicated traversal pipelines): a search fans out
+    one lock-step traversal per shard — per-shard entry points, visited
+    bitsets and PQ queues, each on its own device so launches overlap under
+    async dispatch — and rank-merges the per-shard result runs into one
+    global top-k (``core/distributed.merge_shard_topk`` over
+    ``core/topk.merge_sorted_many``). ``shards=1`` is bit-identical to the
+    unsharded path (same build seed, identity merge); ``shards=None`` (the
+    default) skips the fan-out machinery entirely. Inserts route rows to
+    their shard (``gid % N``) and only touched shards refresh their device
+    graphs (a full per-shard rebuild at the padded capacity — compiled
+    traversals are reused; the unsharded path's finer dirty-row scatter is
+    not yet wired through the fan-out). The blocked layout shards
+    naturally: each shard packs only its own nodes' ``nbr_fps``, so the
+    extra ``2M*W``-word HBM copy is split N ways (the roofline budget in
+    ``benchmarks/roofline.py --gather``).
+
     Online inserts go through :func:`repro.core.hnsw.insert_hnsw` (batched
     incremental construction, rng-continuation levels), so an engine that
     inserted online is graph-identical to one rebuilt from scratch on the
@@ -755,6 +777,7 @@ class HNSWEngine(SearchEngine):
     layout: str = "rows"
     beam: int | None = None
     max_iters: int | None = None
+    shards: int | None = None
 
     BACKENDS = ("numpy", "jnp", "tpu")
     DEFAULT_BACKEND = "jnp"
@@ -764,6 +787,21 @@ class HNSWEngine(SearchEngine):
         self._init_engine()
         if self.beam is None:
             self.beam = hn.auto_beam(self.ef_search)
+        if self.shards is not None:
+            if self.index is not None:
+                raise ValueError("pass either index= or shards=, not both")
+            self.shards = int(self.shards)
+            self._shard_indexes = hn.build_hnsw_sharded(
+                np.asarray(self.db), self.shards, m=self.m,
+                ef_construction=self.ef_construction, seed=self.seed)
+            # the numpy backend never touches a device — don't init jax
+            self._shard_devices = (None if self.backend == "numpy"
+                                   else shard_devices(self.shards))
+            self._shard_graphs = [None] * self.shards
+            self._shard_dirty = [True] * self.shards
+            self._graph = None
+            self._refresh_shard_graphs()
+            return
         if self.index is None:
             self.index = hn.build_hnsw(np.asarray(self.db), m=self.m,
                                        ef_construction=self.ef_construction,
@@ -778,7 +816,27 @@ class HNSWEngine(SearchEngine):
 
     @property
     def n_total(self) -> int:
+        if self.shards is not None:
+            return sum(ix.n for ix in self._shard_indexes)
         return self.index.n
+
+    def _refresh_shard_graphs(self) -> None:
+        """(Re)build the device graphs of shards whose index grew or whose
+        padded capacity doubled; untouched shards keep their device copy."""
+        if self.backend == "numpy":
+            self._shard_dirty = [False] * self.shards
+            return
+        np2 = _store_mod().next_pow2
+        for s, idx in enumerate(self._shard_indexes):
+            g = self._shard_graphs[s]
+            cap = np2(idx.n)
+            if g is not None and not self._shard_dirty[s] \
+                    and g.db.shape[0] == cap:
+                continue
+            self._shard_graphs[s] = hn.place_graph(
+                hn.to_device_graph(idx, capacity=cap, layout=self.layout),
+                self._shard_devices[s])
+            self._shard_dirty[s] = False
 
     def _refresh_graph(self) -> None:
         # the numpy backend never touches the device — don't ship the graph
@@ -866,6 +924,16 @@ class HNSWEngine(SearchEngine):
         return scorer
 
     def _apply_insert(self, fps):
+        if self.shards is not None:
+            # per-shard incremental construction in global-id order; only
+            # the shards the batch landed on refresh at the next search.
+            # (The device frontier scorer caches one db — per-shard dbs
+            # differ, so sharded inserts keep the value-identical host
+            # scorer.)
+            gids, touched = hn.insert_hnsw_sharded(self._shard_indexes, fps)
+            for s in touched:
+                self._shard_dirty[s] = True
+            return gids
         factory = None
         if self.backend == "tpu" and _kernels_available():
             factory = self._insert_scorer_factory
@@ -875,10 +943,9 @@ class HNSWEngine(SearchEngine):
         self._graph_dirty = True
         return gids
 
-    def _device_search(self, k: int, ef: int, beam: int):
+    def _device_search(self, k: int, ef: int, beam: int, max_level: int):
         use_kernel = self.backend == "tpu" and _kernels_available()
         layout = self.layout
-        max_level = self._graph.max_level
         max_iters = self.max_iters
         key = (k, ef, beam, max_level, use_kernel, layout)
 
@@ -912,10 +979,79 @@ class HNSWEngine(SearchEngine):
             return jax.jit(run)
         return self._cached(key, build)
 
+    def _search_sharded(self, queries, k: int, ef: int, beam: int):
+        """Fan-out: one traversal per shard, rank-merge into global top-k."""
+        n_shards = self.shards
+        queries = np.asarray(queries)
+        q_n = queries.shape[0]
+        m2 = self._shard_indexes[0].base_adj.shape[1]
+        if self.backend == "numpy":
+            runs_i = np.full((n_shards, q_n, k), -1, dtype=np.int64)
+            runs_s = np.zeros((n_shards, q_n, k), dtype=np.float32)
+            evals = iters = 0
+            for s, idx in enumerate(self._shard_indexes):
+                ids, sims, ctr = hn.search_hnsw_numpy(idx, queries, k, ef)
+                runs_i[s] = hn.sharded_global_ids(ids, s, n_shards)
+                runs_s[s] = sims
+                evals += ctr["evals"]
+                iters += ctr["iters"]
+            # host merge, same semantics as the device tree: pads lose to
+            # every real entry, ties keep shard order (stable sort over the
+            # shard-major concatenation)
+            alli = runs_i.transpose(1, 0, 2).reshape(q_n, n_shards * k)
+            alls = runs_s.transpose(1, 0, 2).reshape(q_n, n_shards * k)
+            alls = np.where(alli >= 0, alls, -np.inf)
+            order = np.argsort(-alls, axis=1, kind="stable")[:, :k]
+            ids = np.take_along_axis(alli, order, axis=1)
+            sims = np.take_along_axis(alls, order, axis=1)
+            sims = np.where(ids >= 0, sims, 0.0).astype(np.float32)
+            self._record_batch(evals, q_n)
+            self.stats = {"backend": "numpy", "shards": n_shards,
+                          "iters": iters, "expansions": iters,
+                          "neighbour_evals": evals}
+            return ids, sims
+        if any(self._shard_dirty):
+            self._refresh_shard_graphs()
+        runs_s, runs_i, shard_stats = [], [], []
+        dev0 = self._shard_devices[0]
+        q_dev = jnp.asarray(queries)
+        for s, g in enumerate(self._shard_graphs):
+            fn = self._device_search(k, ef, beam, g.max_level)
+            q_s = jax.device_put(q_dev, self._shard_devices[s])
+            ids, sims, tstats = fn(q_s, g.db, g.db_popcount, g.base_adj,
+                                   g.upper_adj, g.entry_point, g.nbr_fps,
+                                   g.nbr_cnt)
+            runs_i.append(jax.device_put(ids, dev0))
+            runs_s.append(jax.device_put(sims, dev0))
+            shard_stats.append(tstats)
+        gids = hn.globalize_shard_ids(jnp.stack(runs_i))
+        ids, sims = merge_shard_topk(jnp.stack(runs_s), gids, k)
+        iters = np.stack([np.asarray(st.iters) for st in shard_stats])
+        expans = np.stack([np.asarray(st.expansions) for st in shard_stats])
+        reason = np.stack([np.asarray(st.reason) for st in shard_stats])
+        self._record_batch(int(expans.sum()) * m2, q_n)
+        self.stats = {
+            "backend": self.backend,
+            "layout": self.layout,
+            "shards": n_shards,
+            "iters": int(iters.sum()),
+            "expansions": int(expans.sum()),
+            "neighbour_evals": int(expans.sum()) * m2,
+            "converged": int((reason == hn.REASON_CONVERGED).sum()),
+            "max_iters_hit": int((reason == hn.REASON_MAX_ITERS).sum()),
+            "iters_per_query": iters.sum(axis=0),
+            "expansions_per_query": expans.sum(axis=0),
+            "per_shard": [{"iters": int(i.sum()), "expansions": int(e.sum())}
+                          for i, e in zip(iters, expans)],
+        }
+        return np.asarray(ids), np.asarray(sims)
+
     def search(self, queries, k: int, ef: int | None = None,
                beam: int | None = None):
         ef = ef or self.ef_search
         beam = beam or self.beam
+        if self.shards is not None:
+            return self._search_sharded(queries, k, ef, beam)
         m2 = self.index.base_adj.shape[1]
         if self.backend == "numpy":
             ids, sims, ctr = hn.search_hnsw_numpy(self.index,
@@ -927,7 +1063,7 @@ class HNSWEngine(SearchEngine):
             return ids, sims
         if self._graph_dirty:
             self._refresh_graph()
-        fn = self._device_search(k, ef, beam)
+        fn = self._device_search(k, ef, beam, self._graph.max_level)
         g = self._graph
         ids, sims, tstats = fn(jnp.asarray(queries), g.db, g.db_popcount,
                                g.base_adj, g.upper_adj, g.entry_point,

@@ -29,6 +29,12 @@
 Distances: we work directly in *similarity* space (maximise Tanimoto), so the
 candidate queue pops the most-similar element and the result queue evicts the
 least-similar — sign-flipped but otherwise identical to Alg. 1/2.
+
+Scaling past one device: the §"sharded fan-out" helpers below partition the
+database round-robin into independent per-shard graphs, fan queries out to
+one traversal per shard device and rank-merge the per-shard runs
+(``core/distributed.merge_shard_topk``). Schemas and control flow for all of
+this are documented in docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
@@ -769,6 +775,164 @@ def search_hnsw(g: HNSWDeviceGraph, queries: jax.Array, k: int, ef: int,
     sims = jnp.where(ids >= 0, res.scores[:, :k], 0.0)
     return ids, sims, TraversalStats(iters=iters, expansions=expans,
                                      reason=reason.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# sharded fan-out (ISSUE 5) — partition-then-merge across the device mesh
+# ---------------------------------------------------------------------------
+#
+# The paper scales its HNSW engine by replicating traversal/distance engines
+# and splitting the database across parallel pipelines (§IV, Fig. 8); the
+# same recipe here is FPScreen-style partition-then-merge: the database rows
+# are **round-robin partitioned** into S shards (global row g lives in shard
+# ``g % S`` at local row ``g // S``), each shard builds its own independent
+# HNSW graph, queries fan out to one lock-step traversal per shard (each
+# with its own entry point, visited bitset and PQ queues, placed on its own
+# device), and the per-shard result runs rank-merge into one global top-k
+# (``core/topk.merge_sorted_many`` via ``core/distributed.merge_shard_topk``).
+# Round-robin keeps shards balanced under online inserts and makes the
+# local<->global id map a closed form — no translation table on device.
+
+
+def sharded_global_ids(local_ids: np.ndarray, shard: int,
+                       n_shards: int) -> np.ndarray:
+    """Map one shard's local result ids to global ids (``-1`` pads kept) —
+    host-side twin of :func:`globalize_shard_ids` for the numpy backend."""
+    return np.where(local_ids >= 0, local_ids * n_shards + shard, -1)
+
+
+@jax.jit
+def globalize_shard_ids(local_ids: jax.Array) -> jax.Array:
+    """(S, ..., k) stacked per-shard local ids -> global ids under the
+    round-robin partition (``gid = local * S + shard``; ``-1`` pads kept).
+    The single device-side implementation of the id map — the engine's
+    fan-out and :func:`search_hnsw_sharded` both go through it."""
+    n_shards = local_ids.shape[0]
+    shard = jnp.arange(n_shards, dtype=local_ids.dtype).reshape(
+        (n_shards,) + (1,) * (local_ids.ndim - 1))
+    return jnp.where(local_ids >= 0, local_ids * n_shards + shard, -1)
+
+
+def build_hnsw_sharded(db: np.ndarray, n_shards: int, m: int = 16,
+                       ef_construction: int = 100, seed: int = 0,
+                       max_level_cap: int = 4) -> list:
+    """Build S independent per-shard indexes over the round-robin partition.
+
+    Shard ``s`` is ``build_hnsw(db[s::S], seed=seed + s)`` — with
+    ``n_shards == 1`` this is exactly the unsharded build (same rows, same
+    seed), the base of the 1-shard bit-parity contract. Each shard draws its
+    levels from its own seed stream so per-shard graphs stay deterministic
+    under :func:`insert_hnsw_sharded` growth.
+    """
+    db = np.asarray(db, dtype=np.uint32)
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if db.shape[0] < n_shards:
+        raise ValueError(f"cannot split {db.shape[0]} rows into "
+                         f"{n_shards} shards")
+    return [build_hnsw(db[s::n_shards], m=m, ef_construction=ef_construction,
+                       seed=seed + s, max_level_cap=max_level_cap)
+            for s in range(n_shards)]
+
+
+def insert_hnsw_sharded(indexes: list, new_fps: np.ndarray,
+                        scorer_factory=None):
+    """Route an insert batch to its shards (``gid % S``) in global-id order.
+
+    New rows get the next global ids ``n_total..``; because the ids are
+    contiguous, the sub-batch landing on shard ``s`` appends at exactly the
+    local rows ``gid // S`` — the round-robin invariant is self-maintaining
+    and an engine grown online stays graph-identical to
+    :func:`build_hnsw_sharded` on the concatenated database (the per-shard
+    :func:`insert_hnsw` parity contract). Returns ``(gids, touched)`` where
+    ``touched`` lists the shards whose device copies need refreshing.
+
+    ``scorer_factory`` is per-shard (called with each shard's db); callers
+    that cache device state per database must key it per shard.
+    """
+    new_fps = np.atleast_2d(np.asarray(new_fps, dtype=np.uint32))
+    n_shards = len(indexes)
+    n_total = sum(ix.n for ix in indexes)
+    for s, ix in enumerate(indexes):            # round-robin invariant
+        expect = len(range(s, n_total, n_shards))
+        if ix.n != expect:
+            raise ValueError(f"shard {s} holds {ix.n} rows, round-robin of "
+                             f"{n_total} total expects {expect}")
+    gids = np.arange(n_total, n_total + new_fps.shape[0], dtype=np.int64)
+    touched = []
+    for s in range(n_shards):
+        rows = new_fps[(gids % n_shards) == s]
+        if rows.shape[0]:
+            insert_hnsw(indexes[s], rows, scorer_factory=scorer_factory)
+            touched.append(s)
+    return gids, touched
+
+
+def place_graph(g: HNSWDeviceGraph, device) -> HNSWDeviceGraph:
+    """Commit a device graph's arrays to ``device`` (static fields kept)."""
+    return HNSWDeviceGraph(**{
+        f: (jax.device_put(v, device) if isinstance(v, jax.Array) else v)
+        for f, v in g._asdict().items()})
+
+
+def to_device_graph_sharded(indexes: list, layout: str = "rows",
+                            capacities: list | None = None,
+                            devices: list | None = None) -> list:
+    """Per-shard device graphs for the fan-out traversal.
+
+    Each shard's graph is an ordinary :func:`to_device_graph` (padded to its
+    own power-of-two capacity unless ``capacities`` overrides it — per-shard
+    ``nbr_fps`` blocks included on ``layout="blocked"``), committed to its
+    own device (``devices``, default
+    :func:`repro.core.distributed.shard_devices`) so the S traversals run
+    in parallel across the mesh.
+    """
+    from .distributed import shard_devices
+    from ..serve.store import next_pow2
+    if devices is None:
+        devices = shard_devices(len(indexes))
+    if capacities is None:
+        capacities = [next_pow2(ix.n) for ix in indexes]
+    return [place_graph(to_device_graph(ix, capacity=cap, layout=layout), dev)
+            for ix, cap, dev in zip(indexes, capacities, devices)]
+
+
+def search_hnsw_sharded(graphs: list, queries, k: int, ef: int,
+                        max_iters: int | None = None, beam: int = 1,
+                        score_fn_for=None, expand_fn_for=None):
+    """Fan-out KNN over per-shard device graphs + rank-merge.
+
+    Runs one :func:`search_hnsw` lock-step traversal per shard (queries are
+    committed to each shard's device, so launches overlap across the mesh
+    under JAX's async dispatch), maps local ids to global ids
+    (:func:`globalize_shard_ids`) and rank-merges the per-shard runs with
+    ``core/distributed.merge_shard_topk``. ``score_fn_for(g)`` /
+    ``expand_fn_for(g)`` build optional per-shard kernel stages; ``None``
+    uses the jnp defaults. Returns ``(gids (Q, k), sims (Q, k),
+    stats_list)``.
+
+    This is the uncached module-level form of the fan-out — one eager
+    traversal per call. ``HNSWEngine(shards=N)`` runs the same loop with
+    per-shape jit-compiled traversals (``engine.py::_search_sharded``);
+    ``tests/test_sharded_hnsw.py`` pins the two paths equal. With one
+    shard the merge is the identity, so results are bit-identical to the
+    unsharded traversal — ``HNSWEngine(shards=1)``'s contract.
+    """
+    from .distributed import merge_shard_topk
+    dev0 = next(iter(graphs[0].db.devices()))
+    runs_s, runs_i, stats = [], [], []
+    for g in graphs:
+        q = jax.device_put(jnp.asarray(queries), next(iter(g.db.devices())))
+        ids, sims, st = search_hnsw(
+            g, q, k, ef, max_iters=max_iters, beam=beam,
+            score_fn=score_fn_for(g) if score_fn_for else None,
+            expand_fn=expand_fn_for(g) if expand_fn_for else None)
+        runs_s.append(jax.device_put(sims, dev0))
+        runs_i.append(jax.device_put(ids, dev0))
+        stats.append(st)
+    gids = globalize_shard_ids(jnp.stack(runs_i))
+    gids, sims = merge_shard_topk(jnp.stack(runs_s), gids, k)
+    return gids, sims, stats
 
 
 def search_hnsw_numpy(index: HNSWIndex, queries: np.ndarray, k: int, ef: int):

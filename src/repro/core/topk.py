@@ -30,7 +30,9 @@ One module models the paper's two sorting structures (DESIGN.md §2, Fig. 9):
 
 Both the HNSW traversal queues (``core/hnsw.py``) and the streaming scan are
 built on the same PQ primitives — there is exactly one top-k merge
-implementation in the codebase.
+implementation in the codebase; :func:`merge_sorted_many` extends it across
+database shards (the fan-out combiner of ``HNSWEngine(shards=N)``, see
+docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 
@@ -120,6 +122,36 @@ def merge_sorted(s_a: jax.Array, i_a: jax.Array,
     out_s = jnp.zeros((a + b,), s_a.dtype).at[pos_a].set(s_a).at[pos_b].set(s_b)
     out_i = jnp.zeros((a + b,), i_a.dtype).at[pos_a].set(i_a).at[pos_b].set(i_b)
     return out_s[:a], out_i[:a]
+
+
+def merge_sorted_many(scores: jax.Array, ids: jax.Array):
+    """Rank-merge ``S`` descending-sorted runs into the best ``cap``.
+
+    ``scores (S, cap)`` / ``ids (S, cap)`` are stacked per-shard result runs
+    (the sharded-HNSW fan-out); the reduction is a **left-leaning pairwise
+    merge tree** of :func:`merge_sorted` calls — ``ceil(log2 S)`` levels,
+    each level one vmapped rank-merge. Ties keep the lower run index first
+    at every level (``merge_sorted`` places run A ahead), so equal scores
+    come back ordered by shard index — the deterministic cross-shard order
+    the sharded engines and their parity tests rely on. Sentinel slots
+    (``NEG_INF`` / ``-1`` pads, e.g. a shard that returned fewer than
+    ``cap`` valid rows) lose to every real entry and can only surface when
+    fewer than ``cap`` valid entries exist in total.
+
+    Returns ``(scores (cap,), ids (cap,))``. ``S == 1`` is the identity —
+    the 1-shard bit-parity contract of the sharded traversal.
+    """
+    s, i = scores, ids
+    while s.shape[0] > 1:
+        even_s, even_i = s[0::2], i[0::2]
+        odd_s, odd_i = s[1::2], i[1::2]
+        if odd_s.shape[0] < even_s.shape[0]:      # odd run count: carry last
+            pad_s = jnp.full_like(even_s[:1], NEG_INF)
+            pad_i = jnp.full_like(even_i[:1], -1)
+            odd_s = jnp.concatenate([odd_s, pad_s])
+            odd_i = jnp.concatenate([odd_i, pad_i])
+        s, i = jax.vmap(merge_sorted)(even_s, even_i, odd_s, odd_i)
+    return s[0], i[0]
 
 
 def pq_insert_batch(pq: PQ, scores: jax.Array, payloads: jax.Array) -> PQ:

@@ -1,4 +1,11 @@
-"""Jit'd public wrappers around the Pallas kernels (padding, tiling policy)."""
+"""Jit'd public wrappers around the Pallas kernels (padding, tiling policy).
+
+Kernel-to-engine mapping and the data layouts each kernel streams are
+documented in docs/ARCHITECTURE.md. All wrappers are placement-transparent:
+they launch on whatever device their operands are committed to, which is
+what lets the sharded HNSW fan-out (``HNSWEngine(shards=N)``) run one
+kernel-backed traversal per shard device with no per-device code here.
+"""
 from __future__ import annotations
 
 import functools

@@ -31,14 +31,18 @@ from .mesh import make_local_mesh
 
 def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
           n_queries: int = 256, batches: int = 4, use_kernel: bool = False,
-          backend: str | None = None, hnsw_layout: str = "rows", log=print):
+          backend: str | None = None, hnsw_layout: str = "rows",
+          hnsw_shards: int | None = None, log=print):
     """``backend`` selects the engine execution path (shared contract, see
     ``core/engine.py``): "numpy" (host reference), "tpu" (device-resident
     Pallas pipeline, interpret-mode off-TPU) or "jnp" (device path without
     Pallas). Applies to the ``bitbound-folding`` (two-stage scan) and
     ``hnsw`` (batched graph traversal) engines. ``hnsw_layout`` picks the
     traversal's fine-grained distance layout ("rows" row-gather /
-    "blocked" neighbour-blocked streaming, bit-exact results)."""
+    "blocked" neighbour-blocked streaming, bit-exact results);
+    ``hnsw_shards`` fans the HNSW engine out over N per-device database
+    shards with a rank-merged global top-k (EXPERIMENTS.md §Sharded
+    HNSW)."""
     db = synthetic_fingerprints(SyntheticConfig(n=n_db))
     queries = queries_from_db(db, n_queries * batches)
 
@@ -76,7 +80,8 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
         eng = HNSWEngine(db[:min(n_db, 20_000)], m=CHEMBL_LIKE.hnsw_m,
                          ef_construction=CHEMBL_LIKE.hnsw_ef_construction,
                          ef_search=CHEMBL_LIKE.hnsw_ef_search,
-                         backend=backend, layout=hnsw_layout)
+                         backend=backend, layout=hnsw_layout,
+                         shards=hnsw_shards)
         eng.search(queries[:n_queries], k)  # compile
         t0 = time.time()
         for b in range(batches):
@@ -86,7 +91,7 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
             f"{eng.stats.get('iters', 0)} iters, "
             f"{eng.stats.get('neighbour_evals', 0)} neighbour evals, "
             f"{eng.stats.get('max_iters_hit', 0)} budget-terminated "
-            f"(last batch)")
+            f"(last batch, {eng.stats.get('shards') or 1} shard(s))")
     else:
         raise ValueError(engine)
 
@@ -121,7 +126,8 @@ def make_workload(n_ops: int, write_ratio: float,
 def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
                   k: int = 10, n_ops: int = 256, write_ratio: float = 0.01,
                   backend: str | None = None, compact_threshold: int = 2048,
-                  flush_every: int = 8, hnsw_layout: str = "rows", log=print):
+                  flush_every: int = 8, hnsw_layout: str = "rows",
+                  hnsw_shards: int | None = None, log=print):
     """Drive a :class:`SearchService` with a mixed insert+query workload and
     report the serving telemetry. Returns the service summary dict."""
     from ..serve.service import SearchService
@@ -132,7 +138,7 @@ def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
     svc = SearchService(db, engines=engines, backend=backend, k=k,
                         cutoff=CHEMBL_LIKE.cutoff, fold_m=CHEMBL_LIKE.folding_m,
                         compact_threshold=compact_threshold,
-                        hnsw_layout=hnsw_layout)
+                        hnsw_layout=hnsw_layout, hnsw_shards=hnsw_shards)
     ops = make_workload(n_ops, write_ratio, pool, queries)
     enames = list(svc.engines)
     since_flush = 0
@@ -174,6 +180,10 @@ def main():
                     choices=["rows", "blocked"],
                     help="HNSW fine-grained distance layout: per-row gather "
                          "or neighbour-blocked streaming (bit-exact results)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="fan the HNSW engine out over N per-device database "
+                         "shards (rank-merged global top-k; 1 = bit-identical "
+                         "to unsharded)")
     ap.add_argument("--ops", type=int, default=256,
                     help="service mode: number of workload operations")
     ap.add_argument("--write-ratio", type=float, default=0.01,
@@ -188,11 +198,12 @@ def main():
                       n_db=args.n_db, k=args.k, n_ops=args.ops,
                       write_ratio=args.write_ratio, backend=args.backend,
                       compact_threshold=args.compact_threshold,
-                      hnsw_layout=args.hnsw_layout)
+                      hnsw_layout=args.hnsw_layout, hnsw_shards=args.shards)
     else:
         serve(args.engine, n_db=args.n_db, k=args.k,
               n_queries=args.n_queries, use_kernel=args.use_kernel,
-              backend=args.backend, hnsw_layout=args.hnsw_layout)
+              backend=args.backend, hnsw_layout=args.hnsw_layout,
+              hnsw_shards=args.shards)
 
 
 if __name__ == "__main__":

@@ -27,6 +27,8 @@ The service is synchronous and deterministic by design (no threads): a
 driver loop decides when to flush, which keeps parity tests and benchmark
 replays exact. ``launch/search_serve.py --engine service`` and
 ``benchmarks/serve_load.py`` drive it with mixed insert+query workloads.
+The store -> service -> engine request path is documented in
+docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
@@ -66,6 +68,7 @@ class ServiceConfig:
     hnsw_ef_construction: int = 40
     hnsw_ef_search: int = 32
     hnsw_layout: str = "rows"    # "blocked" = neighbour-blocked expand stage
+    hnsw_shards: int | None = None  # fan-out HNSW over N per-device shards
     seed: int = 0
 
 
@@ -119,7 +122,8 @@ class SearchService:
             return HNSWEngine(db, m=cfg.hnsw_m,
                               ef_construction=cfg.hnsw_ef_construction,
                               ef_search=cfg.hnsw_ef_search, seed=cfg.seed,
-                              backend=cfg.backend, layout=cfg.hnsw_layout)
+                              backend=cfg.backend, layout=cfg.hnsw_layout,
+                              shards=cfg.hnsw_shards)
         raise ValueError(
             f"unknown engine {name!r}; expected one of {ENGINE_NAMES}")
 

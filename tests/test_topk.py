@@ -6,9 +6,9 @@ try:
 except ImportError:  # collection-safe fallback (see tests/_propcheck.py)
     from _propcheck import given, settings, strategies as st
 
-from repro.core.topk import (PQ, merge_sorted, pq_insert, pq_insert_batch,
-                             pq_make, pq_pop, pq_pop_many, pq_worst,
-                             streaming_topk)
+from repro.core.topk import (NEG_INF, PQ, merge_sorted, merge_sorted_many,
+                             pq_insert, pq_insert_batch, pq_make, pq_pop,
+                             pq_pop_many, pq_worst, streaming_topk)
 
 floats = st.floats(-1e6, 1e6, allow_nan=False, width=32)
 
@@ -84,6 +84,82 @@ def test_merge_sorted_matches_full_sort(xs, ys):
     both_i = np.concatenate([ia, ib])
     for s, i in zip(np.asarray(ms), np.asarray(mi)):
         assert s in both_s[both_i == i]
+
+
+def _shard_runs(valid_counts, cap, seed=0, scores=None):
+    """Stacked (S, cap) descending runs with ``-1``/``NEG_INF`` pad tails of
+    per-run length ``cap - valid_counts[s]`` — the sharded fan-out's result
+    shape. Ids encode (shard, slot) as ``shard * 1000 + slot``."""
+    rng = np.random.default_rng(seed)
+    S = len(valid_counts)
+    s_out = np.full((S, cap), -np.inf, dtype=np.float32)
+    i_out = np.full((S, cap), -1, dtype=np.int32)
+    for s, n in enumerate(valid_counts):
+        vals = (np.sort(rng.random(n).astype(np.float32))[::-1]
+                if scores is None else np.asarray(scores[s], np.float32))
+        s_out[s, :n] = vals[:n]
+        i_out[s, :n] = s * 1000 + np.arange(n)
+    return s_out, i_out
+
+
+def _merge_oracle(s_runs, i_runs, cap):
+    """Stable shard-major merge: ties keep lower shard, then run order."""
+    flat_s = s_runs.reshape(-1)
+    flat_i = i_runs.reshape(-1)
+    order = np.argsort(-flat_s, kind="stable")[:cap]
+    return flat_s[order], flat_i[order]
+
+
+@given(st.lists(st.integers(0, 8), min_size=1, max_size=5),
+       st.sampled_from([1, 3, 8]))
+@settings(max_examples=30, deadline=None)
+def test_merge_sorted_many_matches_stable_oracle(valid_counts, cap):
+    """The rank-merge tree over S shard runs == a stable sort of the
+    concatenation, for any mix of run lengths incl. empty/padded runs."""
+    valid_counts = [min(v, cap) for v in valid_counts]
+    s_runs, i_runs = _shard_runs(valid_counts, cap, seed=cap)
+    ms, mi = merge_sorted_many(jnp.asarray(s_runs), jnp.asarray(i_runs))
+    es, ei = _merge_oracle(s_runs, i_runs, cap)
+    np.testing.assert_array_equal(np.asarray(ms), es)
+    np.testing.assert_array_equal(np.asarray(mi), ei)
+
+
+def test_merge_sorted_many_unequal_counts_and_pads():
+    """Shards returning fewer than cap rows (id -1 / -inf pads): pads never
+    displace real entries and only surface when valid entries run out."""
+    s_runs, i_runs = _shard_runs([4, 0, 2, 1], cap=4, seed=3)
+    ms, mi = merge_sorted_many(jnp.asarray(s_runs), jnp.asarray(i_runs))
+    ms, mi = np.asarray(ms), np.asarray(mi)
+    assert (mi >= 0).all()                      # 7 valid entries, cap 4
+    es, ei = _merge_oracle(s_runs, i_runs, 4)
+    np.testing.assert_array_equal(ms, es)
+    np.testing.assert_array_equal(mi, ei)
+    # fewer valid entries than cap: the tail is sentinel pads
+    s_runs, i_runs = _shard_runs([1, 0, 1], cap=4, seed=4)
+    ms, mi = merge_sorted_many(jnp.asarray(s_runs), jnp.asarray(i_runs))
+    assert (np.asarray(mi)[2:] == -1).all()
+    assert not np.isfinite(np.asarray(ms)[2:]).any()
+
+
+def test_merge_sorted_many_duplicate_scores_stable_by_shard():
+    """Equal scores come back ordered by shard index then slot (the
+    left-leaning tree keeps run A first at every level) — the deterministic
+    cross-shard tie order the sharded engines rely on."""
+    dup = [[0.5, 0.5, 0.25], [0.5, 0.5, 0.25], [0.5, 0.25, 0.25]]
+    s_runs, i_runs = _shard_runs([3, 3, 3], cap=3, scores=dup)
+    ms, mi = merge_sorted_many(jnp.asarray(s_runs), jnp.asarray(i_runs))
+    np.testing.assert_allclose(np.asarray(ms), [0.5] * 3)
+    # all five 0.5-entries exist; the best 3 are shard 0's pair then shard 1
+    np.testing.assert_array_equal(np.asarray(mi), [0, 1, 1000])
+
+
+def test_merge_sorted_many_single_run_identity():
+    """S == 1 is the identity — the sharded traversal's 1-shard bit-parity
+    contract rests on this."""
+    s_runs, i_runs = _shard_runs([3], cap=5, seed=9)
+    ms, mi = merge_sorted_many(jnp.asarray(s_runs), jnp.asarray(i_runs))
+    np.testing.assert_array_equal(np.asarray(ms), s_runs[0])
+    np.testing.assert_array_equal(np.asarray(mi), i_runs[0])
 
 
 def test_pq_pop_order():
