@@ -26,8 +26,9 @@ REPO = Path(__file__).resolve().parent.parent
 BENCH_REL = "experiments/bench"
 # rows are only comparable at the same measurement shape; "shards" guards
 # the fig8_hnsw_grid_sharded.json artifact (a re-run at a different shard
-# count is a new baseline, not a regression)
-SHAPE_KEYS = ("n_db", "n_queries", "beam", "shards")
+# count is a new baseline, not a regression), "wal" the serve_load*.json
+# durability axis (an in-memory row is no baseline for a fsync-per-ack row)
+SHAPE_KEYS = ("n_db", "n_queries", "beam", "shards", "wal")
 
 
 def _git(*args: str) -> subprocess.CompletedProcess:

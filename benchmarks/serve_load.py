@@ -13,10 +13,16 @@ delta-bucket size below the compaction threshold (one full delta
 0 -> threshold cycle), and at least one compaction — so the timed window
 measures pure serving: ``compiles_in_window`` must be 0 (asserted by the CI
 smoke leg via the JSON).
+
+``--wal`` adds the durability axis (ISSUE 6): each (engine, write_ratio)
+cell is re-measured with the write-ahead log on — fsync-per-ack and
+8-record group commit — against a temp directory, so the p99 rows quantify
+what the acked-implies-recovered contract costs per insert.
 """
 from __future__ import annotations
 
 import argparse
+import tempfile
 
 import numpy as np
 
@@ -26,6 +32,13 @@ from repro.serve.service import SearchService
 from .common import emit
 
 WRITE_RATIOS = (0.0, 0.01, 0.1)
+
+# durability axis (ISSUE 6): "off" = in-memory service (the historical rows,
+# names unchanged), "fsync" = WAL with fsync-per-ack, "group8" = WAL with
+# 8-record group commit. The p99 delta between fsync and group8 is the price
+# of the strict acked-implies-recovered contract per insert.
+WAL_MODES = ("off", "fsync", "group8")
+_WAL_FSYNC_EVERY = {"fsync": 1, "group8": 8}
 
 
 def _capacities(svc):
@@ -49,21 +62,28 @@ def _run_ops(svc, ops, engine, k, flush_every):
 
 def run(n_db=20_000, n_ops=256, k=10, backend="jnp",
         engines=("brute", "bitbound-folding"), write_ratios=WRITE_RATIOS,
-        compact_threshold=None, flush_every=8, suffix=None):
+        compact_threshold=None, flush_every=8, suffix=None,
+        wal_modes=("off",)):
     db = synthetic_fingerprints(SyntheticConfig(n=n_db, seed=0))
     pool = synthetic_fingerprints(SyntheticConfig(n=max(4 * n_ops, 256),
                                                   seed=7))
     queries = queries_from_db(db, min(n_db, 256))
     rows = []
     for engine in engines:
-        for wr in write_ratios:
+        for wr, wal in ((wr, wal) for wr in write_ratios
+                        for wal in wal_modes):
             # threshold low enough that the warmup pass crosses >= 1
             # compaction (and thereby visits every delta bucket) when the
             # workload writes at all
             expected_writes = max(int(n_ops * wr), 1)
             ct = compact_threshold or max(2, expected_writes // 2)
+            tmpdir = (tempfile.TemporaryDirectory(prefix="serve_load_wal_")
+                      if wal != "off" else None)
+            durable = dict(durable_dir=tmpdir.name,
+                           wal_fsync_every=_WAL_FSYNC_EVERY[wal]) \
+                if tmpdir else {}
             svc = SearchService(db, engines=(engine,), backend=backend, k=k,
-                                compact_threshold=ct)
+                                compact_threshold=ct, **durable)
             ops = make_workload(n_ops, wr, pool[:2 * n_ops], queries, seed=3)
             warm_pool = pool[2 * n_ops:]
             warm_ops = [("insert", warm_pool[i % len(warm_pool):][:1])
@@ -85,11 +105,12 @@ def run(n_db=20_000, n_ops=256, k=10, backend="jnp",
             compiled_after = svc.compiled_pipelines()
             capacity_crossed = _capacities(svc) != caps_before
             s = svc.summary()
+            wal_sfx = "" if wal == "off" else f"_wal-{wal}"
             rows.append({
-                "name": f"serve_{engine}_wr{wr}",
+                "name": f"serve_{engine}_wr{wr}{wal_sfx}",
                 "engine": engine, "backend": backend,
                 "n_db": n_db, "k": k, "n_ops": n_ops,
-                "write_ratio": wr,
+                "write_ratio": wr, "wal": wal,
                 "compact_threshold": ct,
                 "p50_ms": s.get("p50_ms", 0.0),
                 "p99_ms": s.get("p99_ms", 0.0),
@@ -106,6 +127,9 @@ def run(n_db=20_000, n_ops=256, k=10, backend="jnp",
                 # reported so the hard no-recompile check can exempt it
                 "capacity_crossed": bool(capacity_crossed),
             })
+            svc.close()
+            if tmpdir is not None:
+                tmpdir.cleanup()
     sfx = suffix if suffix is not None else (
         "" if backend in (None, "jnp") else f"_{backend}")
     emit(f"serve_load{sfx}", rows)
@@ -126,6 +150,10 @@ def main():
                          f"{WRITE_RATIOS}")
     ap.add_argument("--compact-threshold", type=int, default=None)
     ap.add_argument("--flush-every", type=int, default=8)
+    ap.add_argument("--wal", action="store_true",
+                    help=f"sweep the durability axis {WAL_MODES} (WAL into "
+                         "a temp dir; p99 delta fsync-per-ack vs group "
+                         "commit vs in-memory)")
     args = ap.parse_args()
     ratios = (args.write_ratio,) if args.write_ratio is not None \
         else WRITE_RATIOS
@@ -134,7 +162,8 @@ def main():
                engines=tuple(args.engines.split(",")),
                write_ratios=ratios,
                compact_threshold=args.compact_threshold,
-               flush_every=args.flush_every)
+               flush_every=args.flush_every,
+               wal_modes=WAL_MODES if args.wal else ("off",))
     bad = [r for r in rows
            if r["compiles_in_window"] and not r["capacity_crossed"]]
     if bad:

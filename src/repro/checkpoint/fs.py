@@ -1,0 +1,188 @@
+"""Injectable filesystem layer for the durability machinery (ISSUE 6).
+
+Every write-side file operation the checkpoint/snapshot writers and the
+write-ahead log perform goes through an :class:`Fs` instance instead of the
+``os``/``open`` builtins. Production code uses the module-level
+:data:`DEFAULT_FS` (thin pass-throughs, plus the fsync discipline real
+durability needs); the crash-fault-injection harness swaps in a
+:class:`CrashPointFs` that raises :class:`InjectedCrash` after a byte/op
+budget — simulating a process death at an arbitrary point inside a WAL
+append, a segment rotation, a snapshot leaf write, or the atomic-rename
+publish — without monkeypatching globals. ``tests/test_crash_recovery.py``
+sweeps those budgets; the subprocess SIGKILL driver covers the real-kill
+case the in-process exception cannot (buffers lost mid-syscall).
+
+Only the *write* surface is virtualised (opens for write, writes, fsyncs,
+renames, directory create/remove). Reads go through the normal builtins:
+a crash cannot corrupt a read, and recovery code paths must work on plain
+on-disk state regardless of how it was produced.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from pathlib import Path
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by :class:`CrashPointFs` when the fault budget is exhausted —
+    the in-process stand-in for the process dying at this exact point."""
+
+
+class Fs:
+    """Write-side filesystem surface (the ``_Fs`` injection point).
+
+    The default implementation is the real filesystem with the fsync
+    discipline durable storage needs: ``fsync`` flushes user-space buffers
+    and syncs the file, ``fsync_dir`` syncs a directory's entry table (so a
+    rename/create survives power loss), ``replace`` is the atomic publish.
+    """
+
+    def open(self, path, mode: str = "wb"):
+        return open(path, mode)
+
+    def write(self, f, data: bytes) -> int:
+        return f.write(data)
+
+    def fsync(self, f) -> None:
+        f.flush()
+        os.fsync(f.fileno())
+
+    def fsync_dir(self, path) -> None:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    def replace(self, src, dst) -> None:
+        os.replace(src, dst)
+
+    def mkdir(self, path, exist_ok: bool = True) -> None:
+        Path(path).mkdir(parents=True, exist_ok=exist_ok)
+
+    def remove(self, path) -> None:
+        os.remove(path)
+
+    def rmtree(self, path) -> None:
+        shutil.rmtree(path, ignore_errors=True)
+
+    def truncate(self, path, size: int) -> None:
+        with open(path, "r+b") as f:
+            f.truncate(size)
+            f.flush()
+            os.fsync(f.fileno())
+
+
+DEFAULT_FS = Fs()
+
+
+class _BudgetFile:
+    """File wrapper that charges writes against a shared budget and tears
+    the write that exhausts it (partial bytes hit the disk, then the
+    "process" dies) — the shape a real crash leaves behind."""
+
+    def __init__(self, f, fs: "CrashPointFs"):
+        self._f = f
+        self._fs = fs
+
+    def write(self, data) -> int:
+        data = bytes(data)
+        keep = self._fs._charge_bytes(len(data))
+        if keep < len(data):
+            if keep:
+                self._f.write(data[:keep])
+            self._f.flush()
+            raise InjectedCrash(
+                f"write torn after {self._fs.bytes_written} bytes")
+        return self._f.write(data)
+
+    def __getattr__(self, name):
+        return getattr(self._f, name)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self._f.close()
+        return False
+
+
+class CrashPointFs(Fs):
+    """Fault-injecting :class:`Fs`: dies after ``byte_budget`` written bytes
+    and/or ``op_budget`` metadata operations (fsync / rename / mkdir /
+    remove / truncate).
+
+    Byte budgets land crashes *inside* payload writes (torn WAL records,
+    truncated ``.npy`` leaves); op budgets land them *between* the metadata
+    steps (after temp-write but before rename, after rename but before the
+    GC of the superseded generation, ...). Sweeping both floors every crash
+    point the durability layer has. Counters keep counting after the first
+    crash so a harness can read how far the run got.
+    """
+
+    def __init__(self, byte_budget: int | None = None,
+                 op_budget: int | None = None):
+        self.byte_budget = byte_budget
+        self.op_budget = op_budget
+        self.bytes_written = 0
+        self.ops = 0
+        self.crashed = False
+
+    # -- accounting ---------------------------------------------------------
+    def _charge_bytes(self, n: int) -> int:
+        """Returns how many of ``n`` bytes may still be written."""
+        if self.byte_budget is None:
+            self.bytes_written += n
+            return n
+        room = max(self.byte_budget - self.bytes_written, 0)
+        keep = min(n, room)
+        self.bytes_written += keep
+        if keep < n:
+            self.crashed = True
+        return keep
+
+    def _charge_op(self, what: str) -> None:
+        self.ops += 1
+        if self.op_budget is not None and self.ops > self.op_budget:
+            self.crashed = True
+            raise InjectedCrash(f"op budget exhausted at {what} #{self.ops}")
+
+    # -- surface ------------------------------------------------------------
+    def open(self, path, mode: str = "wb"):
+        f = super().open(path, mode)
+        if "w" in mode or "a" in mode or "+" in mode:
+            return _BudgetFile(f, self)
+        return f
+
+    def write(self, f, data: bytes) -> int:
+        return f.write(data)           # f is a _BudgetFile: already budgeted
+
+    def fsync(self, f) -> None:
+        self._charge_op("fsync")
+        inner = f._f if isinstance(f, _BudgetFile) else f
+        super().fsync(inner)
+
+    def fsync_dir(self, path) -> None:
+        self._charge_op("fsync_dir")
+        super().fsync_dir(path)
+
+    def replace(self, src, dst) -> None:
+        self._charge_op("replace")
+        super().replace(src, dst)
+
+    def mkdir(self, path, exist_ok: bool = True) -> None:
+        self._charge_op("mkdir")
+        super().mkdir(path, exist_ok=exist_ok)
+
+    def remove(self, path) -> None:
+        self._charge_op("remove")
+        super().remove(path)
+
+    def rmtree(self, path) -> None:
+        self._charge_op("rmtree")
+        super().rmtree(path)
+
+    def truncate(self, path, size: int) -> None:
+        self._charge_op("truncate")
+        super().truncate(path, size)

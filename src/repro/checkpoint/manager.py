@@ -7,6 +7,26 @@ and are atomically renamed, so a crash mid-write can never corrupt the
 latest checkpoint. ``restore`` device_puts onto *any* mesh/sharding
 (elastic: restoring a 512-chip checkpoint onto 256 chips just changes the
 target sharding — arrays are resharded on load).
+
+Two manifest flavours share one atomic-write core (``_write_atomic_dir``):
+
+* **tree checkpoints** (``save_checkpoint``/``restore_checkpoint``) — leaves
+  of an arbitrary pytree, restored against a ``like_tree`` structure. Used
+  by the training loop.
+* **named-array snapshots** (``save_array_snapshot``/``load_array_snapshot``)
+  — a flat ``{name: ndarray}`` dict plus a JSON ``meta`` blob, restored
+  without any template. Used by the serving durability layer
+  (``repro.serve.snapshot``), whose restore side runs in a fresh process
+  that has no live tree to mirror. ``load_latest_intact`` walks snapshots
+  newest-first and skips truncated/corrupt generations, so a crash during
+  a snapshot write (or a disk flipping bits in one) falls back to the last
+  intact one.
+
+All write-side file operations route through an injectable
+:class:`repro.checkpoint.fs.Fs` so the crash-fault harness can kill a write
+after N bytes/ops at any point in the sequence. ``durable=True`` adds the
+fsync discipline (leaf fsync before rename, directory fsync after) that the
+WAL's acked-implies-recovered contract relies on.
 """
 from __future__ import annotations
 
@@ -19,6 +39,8 @@ from pathlib import Path
 
 import jax
 import numpy as np
+
+from .fs import DEFAULT_FS, Fs
 
 
 def _leaf_paths(tree):
@@ -34,35 +56,80 @@ def _hash_file(path: Path) -> str:
     return h.hexdigest()
 
 
-def save_checkpoint(directory: str | os.PathLike, step: int, tree) -> Path:
-    base = Path(directory)
-    base.mkdir(parents=True, exist_ok=True)
-    final = base / f"step_{step:08d}"
-    tmp = base / f".tmp_step_{step:08d}"
+def _write_atomic_dir(base: Path, name: str, writer, *, fs: Fs,
+                      durable: bool) -> Path:
+    """Write a directory through ``writer(tmp_dir)`` then atomically publish
+    it as ``base/name``. A crash anywhere before the final rename leaves at
+    most a ``.tmp_*`` orphan; a crash after it leaves a complete dir."""
+    base = Path(base)
+    fs.mkdir(base)
+    final = base / name
+    tmp = base / f".tmp_{name}"
     if tmp.exists():
-        shutil.rmtree(tmp)
-    tmp.mkdir(parents=True)
-    leaves, treedef = _leaf_paths(tree)
-    manifest = {"step": step, "treedef": str(treedef), "leaves": []}
-    for i, leaf in enumerate(leaves):
-        arr = np.asarray(leaf)
-        dtype_name = str(arr.dtype)
-        if arr.dtype.kind == "V":  # ml_dtypes (bfloat16 etc.): store a view
-            import ml_dtypes  # noqa: F401 — dtype registry
-            dtype_name = arr.dtype.name
-            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
-        fname = f"leaf_{i:05d}.npy"
-        np.save(tmp / fname, arr)
-        manifest["leaves"].append({
-            "file": fname, "shape": list(arr.shape), "dtype": dtype_name,
-            "sha256": _hash_file(tmp / fname),
-        })
-    with open(tmp / "manifest.json", "w") as f:
-        json.dump(manifest, f)
+        fs.rmtree(tmp)
+    fs.mkdir(tmp)
+    writer(tmp)
+    if durable:
+        fs.fsync_dir(tmp)
     if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)                      # atomic publish
+        fs.rmtree(final)
+    fs.replace(tmp, final)
+    if durable:
+        fs.fsync_dir(base)
     return final
+
+
+def _write_npy(dirpath: Path, fname: str, arr: np.ndarray, *, fs: Fs,
+               durable: bool) -> str:
+    """Write one array file through the fs layer; returns its sha256."""
+    path = dirpath / fname
+    f = fs.open(path, "wb")
+    try:
+        np.save(f, arr)
+        if durable:
+            fs.fsync(f)
+    finally:
+        f.close()
+    return _hash_file(path)
+
+
+def _write_json(dirpath: Path, fname: str, obj, *, fs: Fs,
+                durable: bool) -> None:
+    path = dirpath / fname
+    f = fs.open(path, "wb")
+    try:
+        f.write(json.dumps(obj).encode("utf-8"))
+        if durable:
+            fs.fsync(f)
+    finally:
+        f.close()
+
+
+def save_checkpoint(directory: str | os.PathLike, step: int, tree, *,
+                    fs: Fs = DEFAULT_FS, durable: bool = False) -> Path:
+    base = Path(directory)
+
+    def writer(tmp: Path) -> None:
+        leaves, treedef = _leaf_paths(tree)
+        manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            dtype_name = str(arr.dtype)
+            if arr.dtype.kind == "V":  # ml_dtypes (bfloat16 etc.): view
+                import ml_dtypes  # noqa: F401 — dtype registry
+                dtype_name = arr.dtype.name
+                arr = arr.view(
+                    np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+            fname = f"leaf_{i:05d}.npy"
+            sha = _write_npy(tmp, fname, arr, fs=fs, durable=durable)
+            manifest["leaves"].append({
+                "file": fname, "shape": list(arr.shape), "dtype": dtype_name,
+                "sha256": sha,
+            })
+        _write_json(tmp, "manifest.json", manifest, fs=fs, durable=durable)
+
+    return _write_atomic_dir(base, f"step_{step:08d}", writer, fs=fs,
+                             durable=durable)
 
 
 def latest_step(directory: str | os.PathLike) -> int | None:
@@ -97,6 +164,90 @@ def restore_checkpoint(directory: str | os.PathLike, step: int, like_tree,
     if shardings is not None:
         restored = jax.tree.map(jax.device_put, restored, shardings)
     return restored
+
+
+# -- named-array snapshots (serving durability layer) ------------------------
+
+def save_array_snapshot(directory: str | os.PathLike, step: int,
+                        arrays: dict, meta: dict | None = None, *,
+                        prefix: str = "snap", fs: Fs = DEFAULT_FS,
+                        durable: bool = True) -> Path:
+    """Atomically write ``{name: ndarray}`` + a JSON ``meta`` blob as
+    ``<directory>/<prefix>_<step>/``. Names may contain ``/`` — files are
+    numbered, names live in the manifest."""
+    base = Path(directory)
+
+    def writer(tmp: Path) -> None:
+        manifest = {"step": step, "meta": meta or {}, "arrays": []}
+        for i, name in enumerate(sorted(arrays)):
+            arr = np.ascontiguousarray(arrays[name])
+            fname = f"arr_{i:05d}.npy"
+            sha = _write_npy(tmp, fname, arr, fs=fs, durable=durable)
+            manifest["arrays"].append({
+                "name": name, "file": fname, "shape": list(arr.shape),
+                "dtype": str(arr.dtype), "sha256": sha,
+            })
+        _write_json(tmp, "manifest.json", manifest, fs=fs, durable=durable)
+
+    return _write_atomic_dir(base, f"{prefix}_{step:08d}", writer, fs=fs,
+                             durable=durable)
+
+
+def snapshot_steps(directory: str | os.PathLike,
+                   prefix: str = "snap") -> list[int]:
+    base = Path(directory)
+    if not base.exists():
+        return []
+    return sorted(int(p.name.rsplit("_", 1)[1])
+                  for p in base.glob(f"{prefix}_*") if p.is_dir())
+
+
+def load_array_snapshot(directory: str | os.PathLike, step: int, *,
+                        prefix: str = "snap", verify: bool = True):
+    """Load one snapshot generation; returns ``(arrays, meta)``. Raises
+    ``IOError`` on missing files or sha256 mismatch."""
+    path = Path(directory) / f"{prefix}_{step:08d}"
+    mpath = path / "manifest.json"
+    if not mpath.exists():
+        raise IOError(f"no manifest in {path}")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    arrays = {}
+    for entry in manifest["arrays"]:
+        fpath = path / entry["file"]
+        if not fpath.exists():
+            raise IOError(f"missing leaf {fpath}")
+        if verify and _hash_file(fpath) != entry["sha256"]:
+            raise IOError(f"integrity check failed for {fpath}")
+        arr = np.load(fpath)
+        if (list(arr.shape) != entry["shape"]
+                or str(arr.dtype) != entry["dtype"]):
+            raise IOError(f"shape/dtype mismatch for {fpath}")
+        arrays[entry["name"]] = arr
+    return arrays, manifest["meta"]
+
+
+def read_snapshot_meta(directory: str | os.PathLike, step: int, *,
+                       prefix: str = "snap") -> dict:
+    """Read just the JSON ``meta`` blob of one snapshot (no array loads)."""
+    path = Path(directory) / f"{prefix}_{step:08d}" / "manifest.json"
+    with open(path) as f:
+        return json.load(f)["meta"]
+
+
+def load_latest_intact(directory: str | os.PathLike, *,
+                       prefix: str = "snap", verify: bool = True):
+    """Walk snapshot generations newest-first, skipping truncated or
+    corrupt ones; returns ``(step, arrays, meta)`` or ``(None, None, None)``
+    when no intact generation exists."""
+    for step in reversed(snapshot_steps(directory, prefix)):
+        try:
+            arrays, meta = load_array_snapshot(directory, step,
+                                               prefix=prefix, verify=verify)
+            return step, arrays, meta
+        except (IOError, ValueError, KeyError, json.JSONDecodeError):
+            continue
+    return None, None, None
 
 
 class CheckpointManager:

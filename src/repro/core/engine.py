@@ -221,6 +221,9 @@ class BruteForceEngine(SearchEngine):
     use_kernel: bool = False
     backend: str | None = None
     compact_threshold: int = 4096
+    #: prebuilt store (durability warm restart) — skips the store build;
+    #: ``db`` is ignored when set
+    store: object = None
 
     BACKENDS = ("jnp", "tpu")
     DEFAULT_BACKEND = "jnp"
@@ -228,9 +231,15 @@ class BruteForceEngine(SearchEngine):
     def __post_init__(self):
         self._init_engine()
         self.use_kernel = self.backend == "tpu" and _kernels_available()
-        self.store = _store_mod().MutableFingerprintStore(
-            np.asarray(self.db), sorted_main=False, fold_m=1,
-            compact_threshold=self.compact_threshold)
+        if self.store is None:
+            self.store = _store_mod().MutableFingerprintStore(
+                np.asarray(self.db), sorted_main=False, fold_m=1,
+                compact_threshold=self.compact_threshold)
+        else:
+            if self.store.sorted_main or self.store.fold_m != 1:
+                raise ValueError("restored store layout does not match "
+                                 "a brute-force engine")
+            self.compact_threshold = self.store.compact_threshold
         self._sync_gen = None
         self._sync_delta = None
         self._delta_dev = None
@@ -354,15 +363,26 @@ class BitBoundFoldingEngine(SearchEngine):
     use_kernel: bool = False
     backend: str | None = None
     compact_threshold: int = 4096
+    #: prebuilt store (durability warm restart) — skips the store build;
+    #: ``db`` is ignored when set
+    store: object = None
 
     BACKENDS = ("numpy", "jnp", "tpu")
     DEFAULT_BACKEND = "numpy"
 
     def __post_init__(self):
         self._init_engine()
-        self.store = _store_mod().MutableFingerprintStore(
-            np.asarray(self.db), sorted_main=True, fold_m=self.m,
-            fold_scheme=self.scheme, compact_threshold=self.compact_threshold)
+        if self.store is None:
+            self.store = _store_mod().MutableFingerprintStore(
+                np.asarray(self.db), sorted_main=True, fold_m=self.m,
+                fold_scheme=self.scheme,
+                compact_threshold=self.compact_threshold)
+        else:
+            if (not self.store.sorted_main or self.store.fold_m != self.m
+                    or self.store.fold_scheme != self.scheme):
+                raise ValueError("restored store layout does not match "
+                                 "engine fold config")
+            self.compact_threshold = self.store.compact_threshold
         self._stage1_cache = self._jit_cache
         self._sync_gen = None
         self._sync_delta = None
@@ -778,6 +798,9 @@ class HNSWEngine(SearchEngine):
     beam: int | None = None
     max_iters: int | None = None
     shards: int | None = None
+    #: prebuilt per-shard indexes (durability warm restart) — skips the
+    #: sharded build; requires ``shards`` and ignores ``db``
+    shard_indexes: list | None = None
 
     BACKENDS = ("numpy", "jnp", "tpu")
     DEFAULT_BACKEND = "jnp"
@@ -787,13 +810,22 @@ class HNSWEngine(SearchEngine):
         self._init_engine()
         if self.beam is None:
             self.beam = hn.auto_beam(self.ef_search)
+        if self.shard_indexes is not None and self.shards is None:
+            raise ValueError("shard_indexes= requires shards=")
         if self.shards is not None:
             if self.index is not None:
                 raise ValueError("pass either index= or shards=, not both")
             self.shards = int(self.shards)
-            self._shard_indexes = hn.build_hnsw_sharded(
-                np.asarray(self.db), self.shards, m=self.m,
-                ef_construction=self.ef_construction, seed=self.seed)
+            if self.shard_indexes is not None:
+                if len(self.shard_indexes) != self.shards:
+                    raise ValueError(
+                        f"{len(self.shard_indexes)} restored shard indexes "
+                        f"for shards={self.shards}")
+                self._shard_indexes = list(self.shard_indexes)
+            else:
+                self._shard_indexes = hn.build_hnsw_sharded(
+                    np.asarray(self.db), self.shards, m=self.m,
+                    ef_construction=self.ef_construction, seed=self.seed)
             # the numpy backend never touches a device — don't init jax
             self._shard_devices = (None if self.backend == "numpy"
                                    else shard_devices(self.shards))

@@ -133,10 +133,18 @@ def _analyse_comp(comp: Computation):
             res = _first_shape(rhs)
             contract = _CONTRACT_RE.search(s)
             if res and contract:
-                # lhs operand name: first arg of dot(...)
-                args = s.split(" dot(", 1)[1]
-                lhs_name = args.split(",")[0].strip().lstrip("%")
-                lhs = symtab.get(lhs_name)
+                # lhs operand: first arg of dot(...). Newer HLO prints typed
+                # operands ("dot(f32[64,64]{1,0} %name, ...)") — take the
+                # inline shape; older HLO prints bare names — symtab lookup.
+                args = s.split(" dot(", 1)[1].strip()
+                mshape = _SHAPE_RE.match(args)
+                if mshape:
+                    dims = ([int(d) for d in mshape.group(2).split(",")]
+                            if mshape.group(2) else [])
+                    lhs = (mshape.group(1), dims)
+                else:
+                    lhs_name = args.split(",")[0].strip().lstrip("%")
+                    lhs = symtab.get(lhs_name)
                 cdims = [int(d) for d in contract.group(1).split(",")] if contract.group(1) else []
                 k = 1
                 if lhs:

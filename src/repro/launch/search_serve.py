@@ -127,24 +127,53 @@ def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
                   k: int = 10, n_ops: int = 256, write_ratio: float = 0.01,
                   backend: str | None = None, compact_threshold: int = 2048,
                   flush_every: int = 8, hnsw_layout: str = "rows",
-                  hnsw_shards: int | None = None, log=print):
+                  hnsw_shards: int | None = None,
+                  durable_dir: str | None = None, snapshot_every: int = 0,
+                  resume: bool = False, log=print):
     """Drive a :class:`SearchService` with a mixed insert+query workload and
-    report the serving telemetry. Returns the service summary dict."""
+    report the serving telemetry. Returns the service summary dict.
+
+    ``durable_dir`` turns on the durability layer (WAL + snapshots under
+    that directory; every insert is fsync'd before it is acked);
+    ``snapshot_every`` writes a full-state snapshot every N inserts;
+    ``resume`` warm-restarts from an existing durable directory via
+    :meth:`SearchService.open` instead of building the engines from the
+    synthetic database (EXPERIMENTS.md §Durability runbook)."""
     from ..serve.service import SearchService
 
     db = synthetic_fingerprints(SyntheticConfig(n=n_db))
     pool = synthetic_fingerprints(SyntheticConfig(n=max(n_ops, 64), seed=7))
     queries = queries_from_db(db, min(n_db, 512))
-    svc = SearchService(db, engines=engines, backend=backend, k=k,
-                        cutoff=CHEMBL_LIKE.cutoff, fold_m=CHEMBL_LIKE.folding_m,
-                        compact_threshold=compact_threshold,
-                        hnsw_layout=hnsw_layout, hnsw_shards=hnsw_shards)
+    if resume:
+        if durable_dir is None:
+            raise ValueError("--resume requires --durable-dir")
+        # only patch the persisted config when a backend was requested —
+        # an absent --backend must keep the backend the snapshot was
+        # served with, not reset it to the default
+        svc = SearchService.open(
+            durable_dir, **({"backend": backend} if backend else {}))
+        log(f"[search-serve] resumed from {durable_dir}: "
+            f"{next(iter(svc.engines.values())).n_total} rows, "
+            f"engines={','.join(svc.engines)}")
+    else:
+        svc = SearchService(db, engines=engines, backend=backend, k=k,
+                            cutoff=CHEMBL_LIKE.cutoff,
+                            fold_m=CHEMBL_LIKE.folding_m,
+                            compact_threshold=compact_threshold,
+                            hnsw_layout=hnsw_layout, hnsw_shards=hnsw_shards,
+                            durable_dir=durable_dir)
     ops = make_workload(n_ops, write_ratio, pool, queries)
     enames = list(svc.engines)
     since_flush = 0
+    inserts_since_snap = 0
     for i, (op, payload) in enumerate(ops):
         if op == "insert":
             svc.insert(payload)            # broadcast to every engine
+            inserts_since_snap += 1
+            if (durable_dir is not None and snapshot_every
+                    and inserts_since_snap >= snapshot_every):
+                svc.snapshot()
+                inserts_since_snap = 0
         else:
             # router: spread query traffic round-robin over the engines
             svc.submit(payload, k=k, engine=enames[i % len(enames)])
@@ -155,11 +184,16 @@ def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
     svc.flush()
     s = svc.summary()
     log(f"[search-serve] service engines={','.join(svc.engines)} "
-        f"backend={backend or 'default'} db={n_db} k={k} "
+        f"backend={svc.config.backend or 'default'} db={n_db} k={k} "
         f"write_ratio={write_ratio}: p50={s.get('p50_ms', 0)}ms "
         f"p99={s.get('p99_ms', 0)}ms {s['qps']} QPS, "
         f"{s['n_inserts']} inserts, {s['compactions']} compactions, "
         f"buckets={s['batch_buckets']}")
+    if durable_dir is not None:
+        log(f"[search-serve] durable: WAL + snapshots under {durable_dir} "
+            f"(resume with --engine service --resume --durable-dir "
+            f"{durable_dir})")
+    svc.close()
     return s
 
 
@@ -192,13 +226,26 @@ def main():
                     help="service mode: delta rows triggering compaction")
     ap.add_argument("--service-engines", default="brute,bitbound-folding",
                     help="service mode: comma-separated engine list")
+    ap.add_argument("--durable-dir", default=None,
+                    help="service mode: directory for the WAL + snapshots "
+                         "(inserts are fsync'd before they are acked)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="service mode: full-state snapshot every N inserts "
+                         "(0 = only the initial one; requires --durable-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="service mode: warm-restart from --durable-dir "
+                         "(latest intact snapshot + WAL replay) instead of "
+                         "building fresh engines")
     args = ap.parse_args()
     if args.engine == "service":
         serve_service(engines=tuple(args.service_engines.split(",")),
                       n_db=args.n_db, k=args.k, n_ops=args.ops,
                       write_ratio=args.write_ratio, backend=args.backend,
                       compact_threshold=args.compact_threshold,
-                      hnsw_layout=args.hnsw_layout, hnsw_shards=args.shards)
+                      hnsw_layout=args.hnsw_layout, hnsw_shards=args.shards,
+                      durable_dir=args.durable_dir,
+                      snapshot_every=args.snapshot_every,
+                      resume=args.resume)
     else:
         serve(args.engine, n_db=args.n_db, k=args.k,
               n_queries=args.n_queries, use_kernel=args.use_kernel,

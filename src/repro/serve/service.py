@@ -35,11 +35,16 @@ from __future__ import annotations
 import time
 from collections import Counter
 from dataclasses import dataclass
+from pathlib import Path
 
 import numpy as np
 
+from ..checkpoint import manager as ckpt
+from ..checkpoint.fs import DEFAULT_FS, Fs
 from ..core.engine import (BitBoundFoldingEngine, BruteForceEngine,
                            HNSWEngine)
+from . import snapshot as snap
+from . import wal as wal_mod
 from .store import next_pow2
 
 ENGINE_NAMES = ("brute", "bitbound-folding", "hnsw")
@@ -70,6 +75,11 @@ class ServiceConfig:
     hnsw_layout: str = "rows"    # "blocked" = neighbour-blocked expand stage
     hnsw_shards: int | None = None  # fan-out HNSW over N per-device shards
     seed: int = 0
+    # --- durability (ISSUE 6; docs/ARCHITECTURE.md §On-disk format) ---
+    durable_dir: str | None = None  # snapshots/ + wal/ live here; None = RAM
+    wal_fsync_every: int = 1     # 1 = fsync per ack; N = group commit (the
+    #   last N-1 acked inserts may be lost on crash — benchmark axis only)
+    snapshot_keep: int = 2       # retained snapshot generations (walk-back)
 
 
 class SearchService:
@@ -81,19 +91,25 @@ class SearchService:
 
     def __init__(self, db, engines=("bitbound-folding",),
                  config: ServiceConfig | None = None,
-                 clock=time.perf_counter, **overrides):
+                 clock=time.perf_counter, fs: Fs | None = None, **overrides):
         cfg = config or ServiceConfig(**overrides)
         if overrides and config is not None:
             raise ValueError("pass either config= or keyword overrides")
         self.config = cfg
         self.clock = clock
         db = np.atleast_2d(np.asarray(db, dtype=np.uint32))
+        self.words = int(db.shape[1])
         self.engines = {name: self._build_engine(name, db) for name in engines}
         self.default_engine = engines[0]
         self._pending: list[_Request] = []
         self._results: dict[int, tuple] = {}
         self._next_rid = 0
+        self._fs = fs or DEFAULT_FS
+        self._wal = None
+        self._snap_id = -1
         self.reset_telemetry()
+        if cfg.durable_dir is not None:
+            self._attach_durable_dir(fresh=True)
 
     def reset_telemetry(self) -> None:
         """Zero the telemetry counters (engines and their compile caches are
@@ -106,33 +122,40 @@ class SearchService:
         self.search_time = 0.0
         self.insert_time = 0.0
 
-    def _build_engine(self, name: str, db: np.ndarray):
+    def _engine_kwargs(self, name: str) -> dict:
+        """ServiceConfig -> engine constructor knobs (shared by fresh builds
+        and snapshot restores, which pass data separately)."""
         cfg = self.config
         if name == "brute":
             # brute has no host reference path; map "numpy" to the jnp path
             be = cfg.backend if cfg.backend in ("jnp", "tpu") else None
-            return BruteForceEngine(db, backend=be,
-                                    compact_threshold=cfg.compact_threshold)
+            return dict(backend=be, compact_threshold=cfg.compact_threshold)
         if name == "bitbound-folding":
-            return BitBoundFoldingEngine(
-                db, cutoff=cfg.cutoff, m=cfg.fold_m, scheme=cfg.fold_scheme,
-                backend=cfg.backend,
-                compact_threshold=cfg.compact_threshold)
+            return dict(cutoff=cfg.cutoff, m=cfg.fold_m,
+                        scheme=cfg.fold_scheme, backend=cfg.backend,
+                        compact_threshold=cfg.compact_threshold)
         if name == "hnsw":
-            return HNSWEngine(db, m=cfg.hnsw_m,
-                              ef_construction=cfg.hnsw_ef_construction,
-                              ef_search=cfg.hnsw_ef_search, seed=cfg.seed,
-                              backend=cfg.backend, layout=cfg.hnsw_layout,
-                              shards=cfg.hnsw_shards)
+            return dict(m=cfg.hnsw_m,
+                        ef_construction=cfg.hnsw_ef_construction,
+                        ef_search=cfg.hnsw_ef_search, seed=cfg.seed,
+                        backend=cfg.backend, layout=cfg.hnsw_layout,
+                        shards=cfg.hnsw_shards)
         raise ValueError(
             f"unknown engine {name!r}; expected one of {ENGINE_NAMES}")
 
+    def _build_engine(self, name: str, db: np.ndarray):
+        kind = {"brute": BruteForceEngine,
+                "bitbound-folding": BitBoundFoldingEngine,
+                "hnsw": HNSWEngine}.get(name)
+        if kind is None:
+            raise ValueError(
+                f"unknown engine {name!r}; expected one of {ENGINE_NAMES}")
+        return kind(db, **self._engine_kwargs(name))
+
     # -- write path ---------------------------------------------------------
-    def insert(self, fps) -> np.ndarray:
-        """Append fingerprints online to every engine; returns the global
-        ids (engines must agree — one logical database)."""
-        t0 = self.clock()
-        fps = np.atleast_2d(np.asarray(fps, dtype=np.uint32))
+    def _apply_insert(self, fps: np.ndarray) -> np.ndarray:
+        """Apply one insert batch to every engine (no WAL, no telemetry) —
+        the shared path under :meth:`insert` and WAL replay."""
         gids = None
         for name, eng in self.engines.items():
             g = eng.insert(fps)
@@ -141,6 +164,23 @@ class SearchService:
             elif not np.array_equal(g, gids):
                 raise RuntimeError(
                     f"engine {name} assigned ids {g}, expected {gids}")
+        return gids
+
+    def insert(self, fps) -> np.ndarray:
+        """Append fingerprints online to every engine; returns the global
+        ids (engines must agree — one logical database). On a durable
+        service the batch is WAL-logged and fsync'd **before** it is
+        applied, so a return from this method means the insert survives any
+        subsequent crash (modulo an explicit group-commit window)."""
+        t0 = self.clock()
+        fps = np.atleast_2d(np.asarray(fps, dtype=np.uint32))
+        comp0 = self.compactions
+        if self._wal is not None and fps.shape[0]:
+            first_gid = next(iter(self.engines.values())).n_total
+            self._wal.append(first_gid, fps)
+        gids = self._apply_insert(fps)
+        if self._wal is not None and self.compactions != comp0:
+            self._wal.rotate()     # segment rotation on compaction
         self.n_inserts += fps.shape[0]
         self.insert_time += self.clock() - t0
         return gids
@@ -225,10 +265,127 @@ class SearchService:
         """Force-compact every store-backed engine's delta (operational
         hook: benchmarks use it to pin the delta phase before a measurement
         window; a deployment would call it off-peak)."""
+        comp0 = self.compactions
         for eng in self.engines.values():
             store = getattr(eng, "store", None)
             if store is not None and store.n_delta:
                 store.compact()
+        if self._wal is not None and self.compactions != comp0:
+            self._wal.rotate()
+
+    # -- durability (ISSUE 6) ------------------------------------------------
+    def _attach_durable_dir(self, fresh: bool) -> None:
+        base = Path(self.config.durable_dir)
+        self._snap_dir = base / "snapshots"
+        self._wal_dir = base / "wal"
+        if fresh and (ckpt.snapshot_steps(self._snap_dir)
+                      or wal_mod.segment_seqs(self._wal_dir)):
+            raise ValueError(
+                f"{base} already holds durable state; use "
+                f"SearchService.open() to warm-restart from it")
+        self._wal = wal_mod.WriteAheadLog(
+            self._wal_dir, self.words, fs=self._fs,
+            fsync_every=self.config.wal_fsync_every)
+        if fresh:
+            self.snapshot()    # base DB is recoverable before any insert
+
+    def snapshot(self) -> int:
+        """Write a full-state snapshot generation; rotates the WAL first so
+        the snapshot's ``wal_from_seq`` covers exactly the records after it,
+        then garbage-collects segments no retained snapshot needs. Crash
+        windows: before the atomic publish the old snapshot + full WAL
+        recover everything; after it the GC'd segments are redundant."""
+        if self._wal is None:
+            raise RuntimeError("snapshot() requires durable_dir")
+        sid = self._snap_id + 1
+        from_seq = self._wal.rotate()
+        arrays, meta = snap.service_state(self)
+        meta["wal_from_seq"] = int(from_seq)
+        meta["words"] = int(self.words)
+        ckpt.save_array_snapshot(self._snap_dir, sid, arrays, meta,
+                                 fs=self._fs, durable=True)
+        self._snap_id = sid
+        steps = ckpt.snapshot_steps(self._snap_dir)
+        for s in steps[:-max(self.config.snapshot_keep, 1)]:
+            self._fs.rmtree(self._snap_dir / f"snap_{s:08d}")
+        # WAL GC floor: the oldest *retained* snapshot's from_seq (walk-back
+        # restores must still find their records)
+        floors = []
+        for s in ckpt.snapshot_steps(self._snap_dir):
+            try:
+                floors.append(int(ckpt.read_snapshot_meta(
+                    self._snap_dir, s)["wal_from_seq"]))
+            except (IOError, KeyError, ValueError):
+                continue
+        if floors:
+            self._wal.gc_below(min(floors))
+        return sid
+
+    @classmethod
+    def open(cls, directory, *, clock=time.perf_counter,
+             fs: Fs | None = None, **overrides) -> "SearchService":
+        """Warm-restart a replica from a durable directory: load the latest
+        intact snapshot (walking back over corrupt/partial generations),
+        hydrate every engine bit-identically — sharded HNSW graphs are
+        re-committed to their devices — then replay the WAL tail and reopen
+        the log. ``overrides`` patch the persisted ServiceConfig (serving
+        knobs like backend; data-shape knobs must match the snapshot)."""
+        fs = fs or DEFAULT_FS
+        base = Path(directory)
+        step, arrays, meta = ckpt.load_latest_intact(base / "snapshots")
+        if step is None:
+            raise FileNotFoundError(f"no intact snapshot under {base}")
+        cfg = ServiceConfig(**{**meta["config"], **overrides})
+        cfg.durable_dir = str(base)
+        svc = cls.__new__(cls)
+        svc.config = cfg
+        svc.clock = clock
+        svc.words = int(meta["words"])
+        svc._fs = fs
+        svc.engines = {}
+        for name in meta["engines"]:
+            svc.engines[name] = snap.engine_from_state(
+                snap.split_engine_arrays(arrays, name),
+                meta["engine_state"][name], **svc._engine_kwargs(name))
+        svc.default_engine = meta["default_engine"]
+        svc._pending = []
+        svc._results = {}
+        svc._next_rid = 0
+        svc._wal = None
+        svc._snap_id = step
+        svc._snap_dir = base / "snapshots"
+        svc._wal_dir = base / "wal"
+        svc.reset_telemetry()
+        # replay acknowledged inserts logged after the snapshot (idempotent:
+        # records the snapshot already folded in are skipped; a gid gap means
+        # lost segments — refuse to serve rather than drop acked data)
+        records, _ = wal_mod.replay(svc._wal_dir,
+                                    from_seq=int(meta["wal_from_seq"]),
+                                    words=svc.words, truncate=True, fs=fs)
+        for first_gid, rows in records:
+            n_now = next(iter(svc.engines.values())).n_total
+            if first_gid + rows.shape[0] <= n_now:
+                continue
+            if first_gid != n_now:
+                raise IOError(f"WAL gap: record at gid {first_gid}, "
+                              f"index at {n_now}")
+            svc._apply_insert(rows)
+        svc._wal = wal_mod.WriteAheadLog(
+            svc._wal_dir, svc.words, fs=fs,
+            fsync_every=cfg.wal_fsync_every)
+        return svc
+
+    def close(self) -> None:
+        """Flush and close the WAL (no final snapshot — reopen replays)."""
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = None
+
+    def _set_fs(self, fs: Fs) -> None:
+        """Swap the filesystem layer (crash-fault harness hook)."""
+        self._fs = fs
+        if self._wal is not None:
+            self._wal.set_fs(fs)
 
     # -- telemetry ----------------------------------------------------------
     @property

@@ -9,7 +9,10 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager, save_checkpoint, restore_checkpoint
-from repro.checkpoint.manager import latest_step
+from repro.checkpoint.fs import CrashPointFs, InjectedCrash
+from repro.checkpoint.manager import (latest_step, load_array_snapshot,
+                                      load_latest_intact,
+                                      save_array_snapshot)
 
 
 def _tree(seed=0):
@@ -65,3 +68,75 @@ def test_structure_mismatch_rejected(tmp_path):
     save_checkpoint(tmp_path, 5, _tree())
     with pytest.raises(AssertionError):
         restore_checkpoint(tmp_path, 5, {"only": jnp.zeros(3)})
+
+
+# -- named-array snapshot corruption paths (ISSUE 6 satellite) ---------------
+
+def _arrays(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"x": rng.integers(0, 9, size=(6, 3), dtype=np.int64),
+            "nested/y": rng.random(5).astype(np.float32)}
+
+
+def test_snapshot_truncated_npy_detected(tmp_path):
+    save_array_snapshot(tmp_path, 0, _arrays(), {"gen": 0})
+    victim = sorted((tmp_path / "snap_00000000").glob("arr_*.npy"))[0]
+    victim.write_bytes(victim.read_bytes()[:-9])
+    with pytest.raises(IOError):
+        load_array_snapshot(tmp_path, 0)
+
+
+def test_snapshot_sha_mismatch_detected(tmp_path):
+    save_array_snapshot(tmp_path, 0, _arrays(), {"gen": 0})
+    mpath = tmp_path / "snap_00000000" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["arrays"][0]["sha256"] = "0" * 64
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(IOError, match="integrity"):
+        load_array_snapshot(tmp_path, 0)
+    # without verification the (undamaged) arrays still load
+    arrays, _ = load_array_snapshot(tmp_path, 0, verify=False)
+    np.testing.assert_array_equal(arrays["x"], _arrays()["x"])
+
+
+def test_crash_between_tempwrite_and_rename_keeps_latest(tmp_path):
+    """A write that dies after the temp dir is complete but before the
+    atomic rename must leave the previous generation as latest-intact."""
+    save_array_snapshot(tmp_path, 0, _arrays(0), {"gen": 0})
+
+    class NoRenameFs(CrashPointFs):
+        def replace(self, src, dst):
+            raise InjectedCrash("before rename")
+
+    with pytest.raises(InjectedCrash):
+        save_array_snapshot(tmp_path, 1, _arrays(1), {"gen": 1},
+                            fs=NoRenameFs())
+    assert (tmp_path / ".tmp_snap_00000001").exists()   # orphan, not a snap
+    step, arrays, meta = load_latest_intact(tmp_path)
+    assert step == 0 and meta == {"gen": 0}
+    np.testing.assert_array_equal(arrays["x"], _arrays(0)["x"])
+    # the next successful save reclaims the orphan temp dir
+    save_array_snapshot(tmp_path, 1, _arrays(1), {"gen": 1})
+    assert not (tmp_path / ".tmp_snap_00000001").exists()
+    step, _, meta = load_latest_intact(tmp_path)
+    assert step == 1 and meta == {"gen": 1}
+
+
+def test_torn_snapshot_write_walks_back(tmp_path):
+    """Tear the second generation's write at several depths (first leaf,
+    mid-leaves, inside the manifest): walk-back must always restore the
+    intact first generation."""
+    save_array_snapshot(tmp_path, 0, _arrays(0), {"gen": 0})
+    probe = CrashPointFs()             # measure the fault-free write size
+    save_array_snapshot(tmp_path / "probe", 1, _arrays(1), {"gen": 1},
+                        fs=probe)
+    total = probe.bytes_written
+    for frac in (0.01, 0.35, 0.75, 0.98):
+        with pytest.raises(InjectedCrash):
+            save_array_snapshot(tmp_path, 1, _arrays(1), {"gen": 1},
+                                fs=CrashPointFs(
+                                    byte_budget=max(1, int(total * frac))))
+        step, arrays, meta = load_latest_intact(tmp_path)
+        assert step == 0 and meta == {"gen": 0}, f"frac={frac}"
+        np.testing.assert_array_equal(arrays["nested/y"],
+                                      _arrays(0)["nested/y"])

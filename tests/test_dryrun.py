@@ -65,8 +65,7 @@ def test_dryrun_cell_reduced_subprocess():
         def small_mesh(*, multi_pod=False):
             shape = (2, 2, 4) if multi_pod else (4, 4)
             axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-            return jax.make_mesh(shape, axes,
-                                 axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+            return mesh_mod.compat_make_mesh(shape, axes)
         mesh_mod.make_production_mesh = small_mesh
         import repro.launch.dryrun as dr
         dr.make_production_mesh = small_mesh

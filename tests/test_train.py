@@ -9,10 +9,16 @@ from repro.configs import get_arch
 from repro.data.tokens import DataConfig, batch_for_step
 from repro.distributed.compression import (dequantize_int8, ef_compress_grads,
                                            ef_init, quantize_int8)
+from repro.train.optimizer import AdamWConfig
 from repro.train.step import TrainConfig, init_train_state, make_train_step
 
 
 CFG = get_arch("granite-3-2b").reduced()
+
+# The production schedule warms up over 100 steps — at 10 smoke steps the lr
+# never leaves the noise floor and "loss decreases" is a coin flip. Pin a
+# schedule shaped for the smoke horizon instead.
+SMOKE_OPT = AdamWConfig(warmup_steps=2, total_steps=10)
 
 
 def _run(tcfg, steps=8, seed=0):
@@ -28,8 +34,8 @@ def _run(tcfg, steps=8, seed=0):
 
 
 def test_loss_decreases():
-    losses, _ = _run(TrainConfig(), steps=10)
-    assert losses[-1] < losses[0], losses
+    losses, _ = _run(TrainConfig(opt=SMOKE_OPT), steps=10)
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]) * 0.99, losses
     assert all(np.isfinite(losses))
 
 
@@ -40,8 +46,9 @@ def test_microbatch_equivalence():
 
 
 def test_grad_compression_trains():
-    losses, _ = _run(TrainConfig(grad_compression=True), steps=10)
-    assert losses[-1] < losses[0]
+    losses, _ = _run(TrainConfig(opt=SMOKE_OPT, grad_compression=True),
+                     steps=10)
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]) * 0.99, losses
 
 
 def test_quantize_roundtrip_error_bounded():
