@@ -27,8 +27,11 @@ BENCH_REL = "experiments/bench"
 # rows are only comparable at the same measurement shape; "shards" guards
 # the fig8_hnsw_grid_sharded.json artifact (a re-run at a different shard
 # count is a new baseline, not a regression), "wal" the serve_load*.json
-# durability axis (an in-memory row is no baseline for a fsync-per-ack row)
-SHAPE_KEYS = ("n_db", "n_queries", "beam", "shards", "wal")
+# durability axis (an in-memory row is no baseline for a fsync-per-ack row),
+# and "fold_m" / "residency" the BENCH_tiered.json capacity sweep (a device
+# row guards nothing about the streaming path, and vice versa)
+SHAPE_KEYS = ("n_db", "n_queries", "beam", "shards", "wal", "fold_m",
+              "residency")
 
 
 def _git(*args: str) -> subprocess.CompletedProcess:
@@ -73,14 +76,17 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="allowed fractional QPS drop (default 0.20)")
-    ap.add_argument("--glob", default="fig8_hnsw_grid*.json",
-                    help="benchmark artifacts to guard")
+    ap.add_argument("--glob", default="fig8_hnsw_grid*.json,BENCH_tiered.json",
+                    help="benchmark artifacts to guard (comma-separated "
+                         "globs)")
     args = ap.parse_args(argv)
 
     bench_dir = REPO / BENCH_REL
     failed = False
     checked = 0
-    for path in sorted(bench_dir.glob(args.glob)):
+    paths = sorted({p for g in args.glob.split(",")
+                    for p in bench_dir.glob(g.strip())})
+    for path in paths:
         rel = f"{BENCH_REL}/{path.name}"
         text = path.read_text()
         new_rows = json.loads(text)

@@ -1,0 +1,189 @@
+"""Tiered-residency capacity sweep (ISSUE 7): QPS vs DB size vs fold level
+for the BitBound two-stage engine, device-resident vs tiered.
+
+``residency="device"`` keeps the full-resolution packed DB in device memory
+(the single-device ceiling this PR breaks); ``residency="tiered"`` keeps
+only the folded stage-1 arrays plus the count/order vectors device-resident
+and streams the BitBound-bounded rescore candidates host -> HBM through the
+engine's double-buffered staging window. The sweep measures both paths on
+shared DB sizes (the crossover axis) and pushes the tiered path an order of
+magnitude past the largest device-resident point — on this container both
+"device" and host memory are the same DRAM, so the wall-clocks bound the
+*software* overhead of chunking + merging (the stall fraction and the
+streamed-bytes column are what the roofline host-link model scales to real
+host links; see ``benchmarks/roofline.py --tiered``).
+
+The host link itself is measured once per run (``jax.device_put`` of a
+64 MiB buffer, timed to readiness) and emitted as ``link_gbps_measured`` so
+the roofline model can use the *observed* bandwidth on any host.
+
+Emits ``experiments/bench/BENCH_tiered.json`` (schema in EXPERIMENTS.md
+§Tiered residency) and one CSV line per row. ``--tiny`` is the CI smoke
+leg: a small DB forced through the streaming path with multiple chunks and
+a hard bit-identity assert against ``residency="device"`` (brute +
+bitbound), emitting nothing.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import BitBoundFoldingEngine, BruteForceEngine
+from repro.data.molecules import (SyntheticConfig, queries_from_db,
+                                  synthetic_fingerprints)
+from .common import emit, timeit
+
+K = 10
+N_QUERIES = 32
+
+
+def measure_link_gbps(n_bytes: int = 64 << 20) -> float:
+    """Observed host->device bandwidth: device_put of a fresh buffer, timed
+    to block_until_ready (the same primitive the streaming path issues)."""
+    buf = np.random.default_rng(0).integers(
+        0, 2**32, size=(n_bytes // 4,), dtype=np.uint32)
+    jax.block_until_ready(jax.device_put(buf[:1024]))     # warm the path
+    t0 = time.perf_counter()
+    jax.block_until_ready(jax.device_put(buf))
+    dt = time.perf_counter() - t0
+    return n_bytes / dt / 1e9
+
+
+def bench_point(pool: np.ndarray, n_db: int, m: int, residency: str,
+                backend: str, batches: int = 4, tier_chunk: int = 256,
+                repeats: int = 3):
+    db = pool[:n_db]
+    queries = queries_from_db(db, N_QUERIES * batches)
+    eng = BitBoundFoldingEngine(db, cutoff=0.6, m=m, backend=backend,
+                                residency=residency, tier_chunk=tier_chunk)
+    for b in range(batches):                               # compile/warm
+        eng.search(queries[b * N_QUERIES:(b + 1) * N_QUERIES], K)
+    # best-of-repeats over the whole batch loop: single-run wall-clocks on
+    # a shared container are noisy at these (sub-second) windows
+    dt, stats = None, {}
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for b in range(batches):
+            eng.search(queries[b * N_QUERIES:(b + 1) * N_QUERIES], K)
+        t = time.perf_counter() - t0
+        if dt is None or t < dt:
+            dt, stats = t, dict(eng.stats)
+    qps = N_QUERIES * batches / dt
+    row = {
+        "name": f"tiered_{residency}_n{n_db}_m{m}",
+        "n_db": n_db, "n_queries": N_QUERIES, "fold_m": m,
+        "residency": residency, "backend": eng.backend, "k": K,
+        "words": int(db.shape[1]),
+        "capacity": int(eng.store.main.capacity),
+        "scanned_per_query": int(eng.scanned(N_QUERIES) / N_QUERIES),
+        "host_qps": round(qps, 1),
+        "us_per_call": round(dt / batches * 1e6, 1),
+    }
+    if residency == "tiered":
+        row.update(
+            stall_fraction=round(stats.get("tiered_stall_fraction", 0.0), 4),
+            tiered_chunks=int(stats.get("tiered_chunks", 0)),
+            streamed_bytes_per_batch=int(
+                stats.get("tiered_streamed_bytes", 0)))
+    return row
+
+
+def run(sizes_device=(50_000, 100_000),
+        sizes_tiered=(50_000, 100_000, 1_000_000),
+        fold_ms=(2, 4), backend: str = "jnp", batches: int = 4):
+    n_max = max(max(sizes_device), max(sizes_tiered))
+    print(f"[tiered-capacity] generating {n_max}-print synthetic pool...",
+          flush=True)
+    pool = synthetic_fingerprints(SyntheticConfig(n=n_max))
+    link = measure_link_gbps()
+    print(f"[tiered-capacity] measured host link: {link:.2f} GB/s")
+    rows = []
+    # fold-level axis at the shared crossover size, both residencies
+    shared = max(s for s in sizes_device if s in set(sizes_tiered))
+    for m in fold_ms:
+        for residency in ("device", "tiered"):
+            r = bench_point(pool, shared, m, residency, backend,
+                            batches=batches)
+            r["link_gbps_measured"] = round(link, 2)
+            rows.append(r)
+            print(f"[tiered-capacity] {r['name']}: {r['host_qps']} QPS "
+                  f"(stall {r.get('stall_fraction', '-')})", flush=True)
+    # DB-size axis at the headline fold level
+    m = fold_ms[-1]
+    done = {(r["n_db"], r["fold_m"], r["residency"]) for r in rows}
+    for residency, sizes in (("device", sizes_device),
+                             ("tiered", sizes_tiered)):
+        for n in sizes:
+            if (n, m, residency) in done:
+                continue
+            r = bench_point(pool, n, m, residency, backend, batches=batches)
+            r["link_gbps_measured"] = round(link, 2)
+            rows.append(r)
+            print(f"[tiered-capacity] {r['name']}: {r['host_qps']} QPS "
+                  f"(stall {r.get('stall_fraction', '-')})", flush=True)
+    emit("BENCH_tiered", rows)
+    return rows
+
+
+def tiny() -> int:
+    """CI smoke leg: force a small DB through the streaming path (multiple
+    chunks) and require bit-identity with the device-resident path."""
+    db = synthetic_fingerprints(SyntheticConfig(n=2048))
+    queries = queries_from_db(db, 16)
+    extra = synthetic_fingerprints(SyntheticConfig(n=40, seed=5))
+    failures = 0
+    for name, dev, tie in (
+        ("bitbound",
+         BitBoundFoldingEngine(db, cutoff=0.6, m=4, backend="jnp"),
+         BitBoundFoldingEngine(db, cutoff=0.6, m=4, backend="jnp",
+                               residency="tiered", tier_chunk=32)),
+        ("brute",
+         BruteForceEngine(db, backend="jnp"),
+         BruteForceEngine(db, backend="jnp", residency="tiered",
+                          tier_chunk_rows=512)),
+    ):
+        for phase in ("main", "delta"):
+            if phase == "delta":
+                dev.insert(extra)
+                tie.insert(extra)
+            ids_d, sims_d = dev.search(queries, K)
+            ids_t, sims_t = tie.search(queries, K)
+            same = (np.array_equal(np.asarray(ids_d), np.asarray(ids_t))
+                    and np.array_equal(np.asarray(sims_d),
+                                       np.asarray(sims_t)))
+            chunks = tie.stats.get("tiered_chunks", 0)
+            status = "OK" if same and chunks > 1 else "FAIL"
+            failures += status == "FAIL"
+            print(f"[tiered-capacity] tiny {name}/{phase}: parity "
+                  f"{'bit-identical' if same else 'MISMATCH'}, "
+                  f"{chunks} chunks streamed -> {status}")
+    return 1 if failures else 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small DB, streaming forced, parity "
+                         "asserted, nothing emitted")
+    ap.add_argument("--sizes-device", type=int, nargs="+",
+                    default=[50_000, 100_000])
+    ap.add_argument("--sizes-tiered", type=int, nargs="+",
+                    default=[50_000, 100_000, 1_000_000])
+    ap.add_argument("--fold-ms", type=int, nargs="+", default=[2, 4])
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "tpu"])
+    ap.add_argument("--batches", type=int, default=4)
+    args = ap.parse_args()
+    if args.tiny:
+        sys.exit(tiny())
+    run(sizes_device=tuple(args.sizes_device),
+        sizes_tiered=tuple(args.sizes_tiered),
+        fold_ms=tuple(args.fold_ms), backend=args.backend,
+        batches=args.batches)
+
+
+if __name__ == "__main__":
+    main()

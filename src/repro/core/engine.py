@@ -57,6 +57,7 @@ layouts and the request path are documented in docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import jax
@@ -130,6 +131,10 @@ class SearchEngine:
     #: ``layout`` field (HNSW: "rows" row-gather / "blocked"
     #: neighbour-blocked streaming) extend this
     LAYOUTS: tuple = ("rows",)
+    #: residency modes the engine supports; the exhaustive engines extend
+    #: this with "tiered" (full-resolution rows stay in host memory and are
+    #: streamed into a double-buffered HBM staging window — ISSUE 7)
+    RESIDENCIES: tuple = ("device",)
 
     def _init_engine(self) -> None:
         if self.backend is None:
@@ -150,6 +155,18 @@ class SearchEngine:
         self._last_n_queries = 0
         self._jit_cache: dict = {}
         self.stats: dict = {}
+
+    def _resolve_residency(self) -> None:
+        """Resolve the ``residency`` field after the store exists: ``None``
+        inherits the store's policy (a :class:`TieredFingerprintStore`
+        defaults the engine to "tiered"), then validate."""
+        if getattr(self, "residency", None) is None:
+            self.residency = getattr(self.store, "residency", "device")
+        if self.residency not in self.RESIDENCIES:
+            raise ValueError(
+                f"{type(self).__name__} residency must be one of "
+                f"{'/'.join(repr(r) for r in self.RESIDENCIES)}, "
+                f"got {self.residency!r}")
 
     def _cached(self, key, builder):
         fn = self._jit_cache.get(key)
@@ -180,8 +197,10 @@ class SearchEngine:
     def insert(self, fps) -> np.ndarray:
         """Append fingerprints online; returns their global ids (monotone,
         stable across compactions). Results after an insert are identical to
-        a from-scratch engine on the concatenated database."""
-        fps = np.atleast_2d(np.asarray(fps, dtype=np.uint32))
+        a from-scratch engine on the concatenated database. Mis-dtyped rows
+        (floats, signed ints) raise ``ValueError`` up front instead of being
+        silently reinterpreted as uint32."""
+        fps = _store_mod().validate_rows(fps)
         if fps.shape[0] == 0:
             return np.empty((0,), dtype=np.int64)
         return self._apply_insert(fps)
@@ -216,6 +235,16 @@ class BruteForceEngine(SearchEngine):
     pipeline, and rank-merges the two top-k runs (main capacity-pad entries
     masked to -1 first — see :func:`_merge_main_delta`), so results match a
     from-scratch scan exactly for ``k <= n_total``.
+
+    ``residency`` (ISSUE 7): ``"device"`` keeps the whole main segment in
+    HBM (the default); ``"tiered"`` keeps it in host memory and streams
+    ``tier_chunk_rows``-row chunks through a double-buffered HBM staging
+    window — each chunk is scanned with the same fused top-k primitive and
+    rank-merged into the running result via :func:`core.topk.merge_sorted`
+    (ties keep the earlier chunk, reproducing the full scan's
+    ascending-index tie order bit-for-bit). ``None`` inherits the store's
+    policy. Double-buffer telemetry (chunks, bytes streamed, stall seconds /
+    fraction) lands in :attr:`stats` after each search.
     """
     db: jax.Array
     use_kernel: bool = False
@@ -224,9 +253,14 @@ class BruteForceEngine(SearchEngine):
     #: prebuilt store (durability warm restart) — skips the store build;
     #: ``db`` is ignored when set
     store: object = None
+    residency: str | None = None
+    #: rows per streamed chunk in tiered mode (rounded to a power of two so
+    #: chunks tile the power-of-two capacity exactly)
+    tier_chunk_rows: int = 65536
 
     BACKENDS = ("jnp", "tpu")
     DEFAULT_BACKEND = "jnp"
+    RESIDENCIES = ("device", "tiered")
 
     def __post_init__(self):
         self._init_engine()
@@ -240,6 +274,7 @@ class BruteForceEngine(SearchEngine):
                 raise ValueError("restored store layout does not match "
                                  "a brute-force engine")
             self.compact_threshold = self.store.compact_threshold
+        self._resolve_residency()
         self._sync_gen = None
         self._sync_delta = None
         self._delta_dev = None
@@ -253,8 +288,15 @@ class BruteForceEngine(SearchEngine):
         st = self.store
         if self._sync_gen != st.generation:
             self._sync_gen = st.generation
-            self.db = jnp.asarray(st.main.db)          # (capacity, W)
-            self.db_cnt = popcount(self.db)            # pad rows -> 0
+            if self.residency == "tiered":
+                # full-resolution rows stay on the host; searches stream
+                # them chunk-wise through _tiered_main_topk
+                self.db = None
+                self.db_cnt = None
+                self._db_np = st.main.db
+            else:
+                self.db = jnp.asarray(st.main.db)      # (capacity, W)
+                self.db_cnt = popcount(self.db)        # pad rows -> 0
         if self._sync_delta != st.delta_version:
             self._sync_delta = st.delta_version
             if st.n_delta == 0:
@@ -292,12 +334,90 @@ class BruteForceEngine(SearchEngine):
             return jax.jit(run)
         return build
 
+    def _tier_scan_builder(self, k: int, rows_n: int):
+        """Per-chunk fused scan: popcount + top-k over one streamed chunk.
+        Same primitive as the device-resident path, so per-row scores are
+        bit-identical."""
+        use_kernel = self.use_kernel
+
+        def build():
+            dk = min(k, rows_n)
+
+            def run(q, rows):
+                return _brute_topk(q, rows, popcount(rows), dk, use_kernel)
+            return jax.jit(run)
+        return build
+
+    def _tier_merge_builder(self, k: int, rows_n: int):
+        """Fold one chunk's (ids, vals) into the running top-k. The running
+        run always holds earlier (lower-id) chunks, and ``merge_sorted``
+        keeps run A ahead on ties — together with the in-chunk top-k's
+        lowest-index tie rule this reproduces the full scan's global
+        ascending-index tie order exactly."""
+        def build():
+            dk = min(k, rows_n)
+
+            def run(run_vals, run_ids, vals_c, ids_c, base):
+                gids = jnp.where(ids_c >= 0, ids_c.astype(jnp.int32) + base,
+                                 -1)
+                if dk < k:
+                    pad = ((0, 0), (0, k - dk))
+                    vals_c = jnp.pad(vals_c, pad, constant_values=-jnp.inf)
+                    gids = jnp.pad(gids, pad, constant_values=-1)
+                return jax.vmap(merge_sorted)(run_vals, run_ids, vals_c, gids)
+            return jax.jit(run)
+        return build
+
+    def _tiered_main_topk(self, q, k: int):
+        """Stream the host-resident main segment through a double-buffered
+        HBM staging window: ``jax.device_put`` of chunk i+1 is dispatched
+        before the scan of chunk i, so under JAX async dispatch the host→HBM
+        transfer overlaps the previous chunk's compute. The stall time —
+        waiting on a transfer that compute overtook — is measured per chunk
+        and reported in :attr:`stats`."""
+        sm = _store_mod()
+        cap = self.store.main.capacity
+        r = min(sm.next_pow2(max(self.tier_chunk_rows, 1)), cap)
+        n_chunks = cap // r
+        db_np = self._db_np
+        sfn = self._cached(("tier_scan", int(k), r),
+                           self._tier_scan_builder(k, r))
+        mfn = self._cached(("tier_merge", int(k), r),
+                           self._tier_merge_builder(k, r))
+        nq = q.shape[0]
+        run_vals = jnp.full((nq, k), -jnp.inf, jnp.float32)
+        run_ids = jnp.full((nq, k), -1, jnp.int32)
+        t0 = time.perf_counter()
+        stall = 0.0
+        staged = jax.device_put(db_np[:r])
+        for c in range(n_chunks):
+            cur = staged
+            if c + 1 < n_chunks:
+                staged = jax.device_put(db_np[(c + 1) * r:(c + 2) * r])
+            ts = time.perf_counter()
+            jax.block_until_ready(cur)
+            stall += time.perf_counter() - ts
+            ids_c, vals_c = sfn(q, cur)
+            run_vals, run_ids = mfn(run_vals, run_ids, vals_c, ids_c,
+                                    jnp.int32(c * r))
+        jax.block_until_ready(run_vals)
+        total = time.perf_counter() - t0
+        self.stats.update(
+            residency="tiered", tiered_chunks=n_chunks, tiered_chunk_rows=r,
+            tiered_streamed_bytes=int(n_chunks) * r * db_np.shape[1] * 4,
+            tiered_stall_s=stall, tiered_scan_s=total,
+            tiered_stall_fraction=(stall / total) if total > 0 else 0.0)
+        return run_ids, run_vals
+
     def search(self, queries, k: int):
         self._sync()
         q = jnp.asarray(queries)
-        fn = self._cached(("main", int(k), self.db.shape[0]),
-                          self._main_builder(k))
-        ids, vals = fn(q, self.db, self.db_cnt)
+        if self.residency == "tiered":
+            ids, vals = self._tiered_main_topk(q, k)
+        else:
+            fn = self._cached(("main", int(k), self.db.shape[0]),
+                              self._main_builder(k))
+            ids, vals = fn(q, self.db, self.db_cnt)
         if self._delta_dev is not None:
             ddb, dcnt, bucket = self._delta_dev
             dfn = self._cached(("delta", int(k), bucket),
@@ -355,6 +475,29 @@ class BitBoundFoldingEngine(SearchEngine):
     ``backend`` selects what :meth:`search` runs: ``"numpy"`` (default,
     reference), ``"tpu"`` (Pallas device path) or ``"jnp"`` (device path
     without Pallas).
+
+    ``residency`` (ISSUE 7) selects where the *full-resolution* main segment
+    lives for the device paths:
+
+    * ``"device"`` — everything in HBM (the default).
+    * ``"tiered"`` — only the folded stage-1 arrays plus the 4 B/row count
+      and order vectors stay in HBM (``(4*W/m + 8)`` bytes/row instead of
+      ``4*W*(1 + 1/m) + 8``); the full-resolution rows stay on the host
+      (optionally memmapped — :class:`~repro.serve.store.TieredFingerprintStore`).
+      Stage 1 and the rebuilt-order candidate merge run on device exactly as
+      before, but instead of gathering rescore rows from an HBM-resident
+      array, the candidate metadata returns to the host, which gathers the
+      BitBound-bounded candidate rows and streams them in
+      ``tier_chunk``-candidate chunks through a double-buffered HBM staging
+      window: ``jax.device_put`` of chunk i+1 overlaps the fused
+      rescore+top-k of chunk i, and partial top-k runs are rank-merged with
+      :func:`core.topk.merge_sorted`. Chunks ascend in stage-1 candidate
+      rank and ``merge_sorted`` keeps the earlier run on ties, so results
+      are **bit-identical** to ``residency="device"``
+      (``tests/test_tiered.py``). Double-buffer telemetry (chunks, bytes
+      streamed, stall fraction) lands in :attr:`stats`. ``None`` inherits
+      the store's policy. The numpy backend is host-resident by definition
+      and ignores the knob.
     """
     db: np.ndarray
     cutoff: float = 0.8
@@ -366,9 +509,13 @@ class BitBoundFoldingEngine(SearchEngine):
     #: prebuilt store (durability warm restart) — skips the store build;
     #: ``db`` is ignored when set
     store: object = None
+    residency: str | None = None
+    #: stage-2 candidate columns per streamed chunk in tiered mode
+    tier_chunk: int = 256
 
     BACKENDS = ("numpy", "jnp", "tpu")
     DEFAULT_BACKEND = "numpy"
+    RESIDENCIES = ("device", "tiered")
 
     def __post_init__(self):
         self._init_engine()
@@ -383,6 +530,7 @@ class BitBoundFoldingEngine(SearchEngine):
                 raise ValueError("restored store layout does not match "
                                  "engine fold config")
             self.compact_threshold = self.store.compact_threshold
+        self._resolve_residency()
         self._stage1_cache = self._jit_cache
         self._sync_gen = None
         self._sync_delta = None
@@ -398,7 +546,14 @@ class BitBoundFoldingEngine(SearchEngine):
         st = self.store
         if self._sync_gen != st.generation:
             self._sync_gen = st.generation
-            self.full = jnp.asarray(st.main.db)
+            if self.residency == "tiered":
+                # full-resolution rows stay host-side; counts/order (4 and
+                # 8 B/row) still ship — the rebuilt-order merge needs them
+                self.full = None
+                self._full_np = st.main.db
+            else:
+                self.full = jnp.asarray(st.main.db)
+                self._full_np = None
             self.full_cnt = jnp.asarray(st.main.counts.astype(np.int32))
             self.folded = jnp.asarray(st.main.folded)
             self.folded_cnt = jnp.asarray(
@@ -534,16 +689,13 @@ class BitBoundFoldingEngine(SearchEngine):
                               "capacity": cap}
         return self._device_state
 
-    def _build_device_search(self, bucket: int, k: int, delta_bucket: int):
-        """One jitted two-stage pipeline for <= ``bucket``-tile main windows
-        and a ``delta_bucket``-row delta segment (0 = no delta). All segment
-        arrays are runtime arguments, so the compiled pipeline survives
-        compactions that keep the capacity (and so the shapes) unchanged."""
+    def _make_stage1(self, bucket: int, k1m: int):
+        """Shared stage-1 closure (windowed folded scan -> per-query top-k1m
+        candidate window rows). Used by both `_build_device_search` and
+        `_build_tiered_candidates` — one implementation, so the two
+        residencies stay bit-identical by construction."""
         state = self._device_meta()
         kops, tile, capacity = state["kops"], state["tile"], state["capacity"]
-        m, scheme = self.m, self.scheme
-        kr1 = max(fl.kr1_for(k, m), k)
-        k1m = min(kr1, capacity)
 
         def stage1_main(qf, folded, folded_cnt, lo_row, hi_row):
             if kops is not None:
@@ -559,6 +711,74 @@ class BitBoundFoldingEngine(SearchEngine):
                 s1, cand = jax.lax.top_k(s, k1m)
                 cand = jnp.where(jnp.isfinite(s1), cand, -1)
             return cand, s1
+
+        return stage1_main
+
+    def _make_delta_select(self, k1m: int, k1c: int, delta_bucket: int):
+        """Shared main+delta candidate merge: stage-1 scores for both
+        segments, merged in the *rebuilt* global popcount-sorted order and
+        truncated to ``k1c`` candidates. Returns per-candidate metadata
+        (scores, validity, delta routing, window rows, global ids) — the
+        device pipeline gathers rescore rows from HBM right after this;
+        the tiered pipeline returns it to the host instead."""
+        capacity = self._device_meta()["capacity"]
+        BIG = jnp.int32(2**30)
+
+        def select(qf, cand, s1, full_cnt, order, d_folded, d_cnt,
+                   d_folded_cnt, d_ok, n_main):
+            # delta stage-1: masked folded scan (same arithmetic as the
+            # kernel: int popcounts, one f32 divide)
+            qf_cnt = popcount(qf)
+            d_inter = jnp.sum(jax.lax.population_count(
+                qf[:, None, :] & d_folded).astype(jnp.int32), axis=-1)
+            d_union = qf_cnt[:, None] + d_folded_cnt[None, :] - d_inter
+            s1d = jnp.where(d_union > 0,
+                            d_inter.astype(jnp.float32) /
+                            d_union.astype(jnp.float32), 0.0)
+            s1d = jnp.where(d_ok, s1d, -jnp.inf)
+            # virtual position of every candidate in the merged popcount-
+            # sorted array (= the rebuilt sorted row): main row r keeps rank
+            # r + |delta with cnt < cnt[r]|; delta row d gets its stable
+            # (cnt, insertion-order) rank + |main with cnt <= cnt[d]|.
+            # Delta global-ids always exceed main ids, which makes these two
+            # searchsorted sides reproduce the rebuilt stable sort exactly.
+            d_sorted = jnp.sort(d_cnt)                   # pads: PAD_COUNT
+            d_rank = jnp.argsort(jnp.argsort(d_cnt, stable=True))
+            pos_d = (d_rank + jnp.searchsorted(full_cnt, d_cnt, side="right")
+                     ).astype(jnp.int32)
+            safe_c = jnp.clip(cand, 0, capacity - 1)
+            pos_m = cand + jnp.searchsorted(
+                d_sorted, full_cnt[safe_c], side="left").astype(jnp.int32)
+            pos_m = jnp.where(cand >= 0, pos_m, BIG)
+            s_all = jnp.concatenate([s1, s1d], axis=1)   # (Q, k1m + D)
+            pos_all = jnp.concatenate(
+                [pos_m, jnp.broadcast_to(pos_d[None, :], s1d.shape)], axis=1)
+            # stage-1 truncation in rebuilt order: score desc, position asc
+            sel = jnp.lexsort((pos_all, -s_all), axis=-1)[:, :k1c]
+            sel_s = jnp.take_along_axis(s_all, sel, axis=1)
+            valid = jnp.isfinite(sel_s)
+            is_d = sel >= k1m
+            cand_sel = jnp.take_along_axis(cand, jnp.clip(sel, 0, k1m - 1),
+                                           axis=1)
+            d_slot = jnp.clip(sel - k1m, 0, delta_bucket - 1)
+            safe_m = jnp.clip(cand_sel, 0, capacity - 1)
+            gids = jnp.where(is_d, n_main + d_slot, order[safe_m])
+            gids = jnp.where(valid, gids, -1)
+            return sel_s, valid, is_d, d_slot, safe_m, gids
+
+        return select
+
+    def _build_device_search(self, bucket: int, k: int, delta_bucket: int):
+        """One jitted two-stage pipeline for <= ``bucket``-tile main windows
+        and a ``delta_bucket``-row delta segment (0 = no delta). All segment
+        arrays are runtime arguments, so the compiled pipeline survives
+        compactions that keep the capacity (and so the shapes) unchanged."""
+        state = self._device_meta()
+        capacity = state["capacity"]
+        m, scheme = self.m, self.scheme
+        kr1 = max(fl.kr1_for(k, m), k)
+        k1m = min(kr1, capacity)
+        stage1_main = self._make_stage1(bucket, k1m)
 
         def rescore(queries, rows, cnts, valid):
             q_cnt = popcount(queries)
@@ -608,50 +828,15 @@ class BitBoundFoldingEngine(SearchEngine):
         # popcount-sorted order before the kr1 truncation ------------------
         k1c = min(kr1, k1m + delta_bucket)
         k_out = min(k, k1c)
-        BIG = jnp.int32(2**30)
+        select = self._make_delta_select(k1m, k1c, delta_bucket)
 
         def run(queries, lo_row, hi_row, folded, folded_cnt, full, full_cnt,
                 order, d_full, d_folded, d_cnt, d_folded_cnt, d_ok, n_main):
             qf = fl.fold_jax(queries, m, scheme)
             cand, s1 = stage1_main(qf, folded, folded_cnt, lo_row, hi_row)
-            # delta stage-1: masked folded scan (same arithmetic as the
-            # kernel: int popcounts, one f32 divide)
-            qf_cnt = popcount(qf)
-            d_inter = jnp.sum(jax.lax.population_count(
-                qf[:, None, :] & d_folded).astype(jnp.int32), axis=-1)
-            d_union = qf_cnt[:, None] + d_folded_cnt[None, :] - d_inter
-            s1d = jnp.where(d_union > 0,
-                            d_inter.astype(jnp.float32) /
-                            d_union.astype(jnp.float32), 0.0)
-            s1d = jnp.where(d_ok, s1d, -jnp.inf)
-            # virtual position of every candidate in the merged popcount-
-            # sorted array (= the rebuilt sorted row): main row r keeps rank
-            # r + |delta with cnt < cnt[r]|; delta row d gets its stable
-            # (cnt, insertion-order) rank + |main with cnt <= cnt[d]|.
-            # Delta global-ids always exceed main ids, which makes these two
-            # searchsorted sides reproduce the rebuilt stable sort exactly.
-            d_sorted = jnp.sort(d_cnt)                   # pads: PAD_COUNT
-            d_rank = jnp.argsort(jnp.argsort(d_cnt, stable=True))
-            pos_d = (d_rank + jnp.searchsorted(full_cnt, d_cnt, side="right")
-                     ).astype(jnp.int32)
-            safe_c = jnp.clip(cand, 0, capacity - 1)
-            pos_m = cand + jnp.searchsorted(
-                d_sorted, full_cnt[safe_c], side="left").astype(jnp.int32)
-            pos_m = jnp.where(cand >= 0, pos_m, BIG)
-            s_all = jnp.concatenate([s1, s1d], axis=1)   # (Q, k1m + D)
-            pos_all = jnp.concatenate(
-                [pos_m, jnp.broadcast_to(pos_d[None, :], s1d.shape)], axis=1)
-            # stage-1 truncation in rebuilt order: score desc, position asc
-            sel = jnp.lexsort((pos_all, -s_all), axis=-1)[:, :k1c]
-            sel_s = jnp.take_along_axis(s_all, sel, axis=1)
-            valid = jnp.isfinite(sel_s)
-            is_d = sel >= k1m
-            cand_sel = jnp.take_along_axis(cand, jnp.clip(sel, 0, k1m - 1),
-                                           axis=1)
-            d_slot = jnp.clip(sel - k1m, 0, delta_bucket - 1)
-            safe_m = jnp.clip(cand_sel, 0, capacity - 1)
-            gids = jnp.where(is_d, n_main + d_slot, order[safe_m])
-            gids = jnp.where(valid, gids, -1)
+            sel_s, valid, is_d, d_slot, safe_m, gids = select(
+                qf, cand, s1, full_cnt, order, d_folded, d_cnt,
+                d_folded_cnt, d_ok, n_main)
             if m == 1:
                 vals, ok = sel_s[:, :k_out], valid[:, :k_out]
                 top_g = gids[:, :k_out]
@@ -667,6 +852,158 @@ class BitBoundFoldingEngine(SearchEngine):
             return finish(vals, top_g, ok, lo_row, hi_row, extra)
 
         return jax.jit(run)
+
+    # -- tiered residency: host-resident full rows, streamed rescore --------
+    def _build_tiered_candidates(self, bucket: int, k: int,
+                                 delta_bucket: int):
+        """Candidate half of the pipeline for ``residency="tiered"``
+        (m > 1): the same jitted stage-1 folded scan (+ rebuilt-order delta
+        merge) as `_build_device_search`, stopped at the point where the
+        device pipeline would gather full-resolution rows from HBM. The
+        candidate metadata returns to the host, which gathers the rows from
+        the host-resident main segment and streams them through
+        `_tiered_rescore`."""
+        state = self._device_meta()
+        capacity = state["capacity"]
+        m, scheme = self.m, self.scheme
+        kr1 = max(fl.kr1_for(k, m), k)
+        k1m = min(kr1, capacity)
+        stage1_main = self._make_stage1(bucket, k1m)
+
+        if delta_bucket == 0:
+            def run(queries, lo_row, hi_row, folded, folded_cnt, order):
+                qf = fl.fold_jax(queries, m, scheme)
+                cand, s1 = stage1_main(qf, folded, folded_cnt, lo_row,
+                                       hi_row)
+                valid = cand >= 0
+                safe = jnp.clip(cand, 0, capacity - 1)
+                gids = jnp.where(valid, order[safe], -1)
+                return safe, gids, valid
+
+            return jax.jit(run)
+
+        k1c = min(kr1, k1m + delta_bucket)
+        select = self._make_delta_select(k1m, k1c, delta_bucket)
+
+        def run(queries, lo_row, hi_row, folded, folded_cnt, full_cnt,
+                order, d_folded, d_cnt, d_folded_cnt, d_ok, n_main):
+            qf = fl.fold_jax(queries, m, scheme)
+            cand, s1 = stage1_main(qf, folded, folded_cnt, lo_row, hi_row)
+            sel_s, valid, is_d, d_slot, safe_m, gids = select(
+                qf, cand, s1, full_cnt, order, d_folded, d_cnt,
+                d_folded_cnt, d_ok, n_main)
+            return safe_m, gids, valid, is_d, d_slot
+
+        return jax.jit(run)
+
+    def _tier_rescore_builder(self, k: int, chunk: int):
+        """Fused rescore + top-k + rank-merge over one streamed candidate
+        chunk. Candidate popcounts are recomputed on device from the
+        streamed rows (identical integers to the stored counts for every
+        valid candidate; invalid ones are masked to -inf on both
+        residencies). Per-chunk `lax.top_k` breaks score ties by the lowest
+        in-chunk index and `merge_sorted` keeps the running (earlier-chunk)
+        run ahead on ties; chunks ascend in stage-1 candidate rank, so the
+        merged run reproduces the device path's single global top-k bit for
+        bit."""
+        dk = min(k, chunk)
+
+        def run(queries, rows, valid_c, gids_c, run_vals, run_ids):
+            cnts = jnp.sum(jax.lax.population_count(rows).astype(jnp.int32),
+                           axis=-1)
+            q_cnt = popcount(queries)
+            inter = jnp.sum(jax.lax.population_count(
+                queries[:, None, :] & rows).astype(jnp.int32), axis=-1)
+            union = q_cnt[:, None] + cnts - inter
+            s2 = jnp.where(union > 0,
+                           inter.astype(jnp.float32) /
+                           union.astype(jnp.float32), 0.0)
+            s2 = jnp.where(valid_c, s2, -jnp.inf)
+            vals, pos = jax.lax.top_k(s2, dk)
+            g = jnp.take_along_axis(gids_c, pos, axis=1)
+            g = jnp.where(jnp.isfinite(vals), g, -1)
+            if dk < k:
+                pad = ((0, 0), (0, k - dk))
+                vals = jnp.pad(vals, pad, constant_values=-jnp.inf)
+                g = jnp.pad(g, pad, constant_values=-1)
+            return jax.vmap(merge_sorted)(run_vals, run_ids, vals, g)
+
+        return jax.jit(run)
+
+    def _tiered_rescore(self, queries, k: int, safe_m, gids, valid,
+                        is_d, d_slot):
+        """Stream the BitBound-selected candidate rows host -> HBM in
+        double-buffered chunks and rank-merge the per-chunk top-k runs.
+        ``jax.device_put`` of chunk i+1 is dispatched before the fused
+        rescore kernel on chunk i, so the host link overlaps compute; the
+        wait on the staged buffer is timed as the stall telemetry."""
+        sm = _store_mod()
+        nq = queries.shape[0]
+        safe_np = np.asarray(safe_m)
+        gids_np = np.asarray(gids)
+        valid_np = np.asarray(valid)
+        n_cand = safe_np.shape[1]
+        C = max(1, min(sm.next_pow2(max(self.tier_chunk, 1)),
+                       sm.next_pow2(n_cand)))
+        n_chunks = (n_cand + C - 1) // C
+        rfn = self._cached(("tierrescore", int(k), C),
+                           lambda: self._tier_rescore_builder(k, C))
+        if is_d is not None:
+            is_d_np = np.asarray(is_d)
+            d_slot_np = np.asarray(d_slot)
+            d_db = self.store.delta_db
+            nd = max(d_db.shape[0], 1)
+
+        def host_chunk(c):
+            lo_c, hi_c = c * C, min((c + 1) * C, n_cand)
+            rows = self._full_np[safe_np[:, lo_c:hi_c]]
+            v = valid_np[:, lo_c:hi_c]
+            g = gids_np[:, lo_c:hi_c]
+            if is_d is not None:
+                dm = is_d_np[:, lo_c:hi_c]
+                if dm.any():
+                    ds = np.minimum(d_slot_np[:, lo_c:hi_c], nd - 1)
+                    rows = np.where(dm[:, :, None], d_db[ds], rows)
+            if hi_c - lo_c < C:     # last chunk: pad to the compiled shape
+                pad = C - (hi_c - lo_c)
+                rows = np.concatenate(
+                    [rows, np.zeros((nq, pad, rows.shape[2]), np.uint32)],
+                    axis=1)
+                v = np.concatenate([v, np.zeros((nq, pad), bool)], axis=1)
+                g = np.concatenate(
+                    [g, np.full((nq, pad), -1, g.dtype)], axis=1)
+            return np.ascontiguousarray(rows), v, np.ascontiguousarray(g)
+
+        run_vals = jnp.full((nq, k), -jnp.inf, jnp.float32)
+        run_ids = jnp.full((nq, k), -1, jnp.int32)
+        stall = 0.0
+        t_all = time.perf_counter()
+        staged = jax.device_put(host_chunk(0))
+        for c in range(n_chunks):
+            cur = staged
+            if c + 1 < n_chunks:
+                staged = jax.device_put(host_chunk(c + 1))
+            ts = time.perf_counter()
+            jax.block_until_ready(cur)
+            stall += time.perf_counter() - ts
+            rows_c, v_c, g_c = cur
+            run_vals, run_ids = rfn(queries, rows_c, v_c, g_c,
+                                    run_vals, run_ids)
+        jax.block_until_ready(run_vals)
+        total = time.perf_counter() - t_all
+        words = self._full_np.shape[1]
+        self.stats.update(
+            residency="tiered", tiered_chunks=n_chunks, tiered_chunk_cols=C,
+            tiered_streamed_bytes=int(n_chunks) * int(C) * int(nq)
+            * (4 * words + 5),
+            tiered_stall_s=stall, tiered_scan_s=total,
+            tiered_stall_fraction=(stall / total) if total > 0 else 0.0)
+        vals_np = np.asarray(run_vals)
+        ids_np = np.asarray(run_ids)
+        ok = np.isfinite(vals_np)
+        ids = np.where(ok, ids_np, -1)
+        sims = np.where(ok, vals_np, 0.0).astype(np.float32)
+        return ids, sims
 
     def search_tpu(self, queries, k: int):
         """Fixed-shape device path -> ``(ids, sims, scanned)`` jax arrays.
@@ -690,27 +1027,56 @@ class BitBoundFoldingEngine(SearchEngine):
             bucket = total_tiles  # jnp fallback scans full rows, one variant
         dd = self._delta_dev
         delta_bucket = dd["bucket"] if dd is not None else 0
+        lo_j = jnp.asarray(lo, jnp.int32)
+        hi_j = jnp.asarray(hi, jnp.int32)
+        ok_np = None
+        if dd is not None:
+            lo_cnt, hi_cnt = bb.bound_counts_np(a, self.cutoff)
+            d_cnt_np = self.store.delta_counts
+            ok_np = np.zeros((q_np.shape[0], delta_bucket), dtype=bool)
+            ok_np[:, :d_cnt_np.shape[0]] = (
+                (d_cnt_np[None, :] >= lo_cnt[:, None]) &
+                (d_cnt_np[None, :] <= hi_cnt[:, None]))
+        # m == 1 never gathers full-resolution rows (folded == full, stage-1
+        # scores are already exact), so the device pipeline serves tiered
+        # mode as-is with `self.full is None` — the traced function simply
+        # never touches that argument.
+        if self.residency == "tiered" and self.m > 1:
+            cfn = self._cached(
+                ("tiercand", bucket, int(k), delta_bucket,
+                 state["capacity"]),
+                lambda: self._build_tiered_candidates(bucket, k,
+                                                      delta_bucket))
+            if dd is None:
+                safe_m, gids, valid = cfn(queries, lo_j, hi_j, self.folded,
+                                          self.folded_cnt, self.order)
+                is_d = d_slot = None
+                extra = 0
+            else:
+                safe_m, gids, valid, is_d, d_slot = cfn(
+                    queries, lo_j, hi_j, self.folded, self.folded_cnt,
+                    self.full_cnt, self.order, dd["folded"], dd["cnt"],
+                    dd["folded_cnt"], jnp.asarray(ok_np),
+                    jnp.int32(self.store.n_main))
+                extra = int(ok_np.sum())
+            ids, sims = self._tiered_rescore(queries, k, safe_m, gids,
+                                             valid, is_d, d_slot)
+            scanned = int(np.maximum(hi - lo, 0).sum()) + extra
+            self._record_batch(scanned, q_np.shape[0])
+            return ids, sims, scanned
         fn = self._cached(
             (bucket, int(k), delta_bucket, state["capacity"]),
             lambda: self._build_device_search(bucket, k, delta_bucket))
-        lo_j = jnp.asarray(lo, jnp.int32)
-        hi_j = jnp.asarray(hi, jnp.int32)
         if dd is None:
             ids, sims, scanned = fn(queries, lo_j, hi_j, self.folded,
                                     self.folded_cnt, self.full, self.full_cnt,
                                     self.order)
         else:
-            lo_cnt, hi_cnt = bb.bound_counts_np(a, self.cutoff)
-            d_cnt_np = self.store.delta_counts
-            ok = np.zeros((q_np.shape[0], delta_bucket), dtype=bool)
-            ok[:, :d_cnt_np.shape[0]] = (
-                (d_cnt_np[None, :] >= lo_cnt[:, None]) &
-                (d_cnt_np[None, :] <= hi_cnt[:, None]))
             ids, sims, scanned = fn(queries, lo_j, hi_j, self.folded,
                                     self.folded_cnt, self.full, self.full_cnt,
                                     self.order, dd["full"], dd["folded"],
                                     dd["cnt"], dd["folded_cnt"],
-                                    jnp.asarray(ok),
+                                    jnp.asarray(ok_np),
                                     jnp.int32(self.store.n_main))
         self._record_batch(scanned, queries.shape[0])
         return ids, sims, scanned

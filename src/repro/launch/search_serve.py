@@ -32,7 +32,8 @@ from .mesh import make_local_mesh
 def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
           n_queries: int = 256, batches: int = 4, use_kernel: bool = False,
           backend: str | None = None, hnsw_layout: str = "rows",
-          hnsw_shards: int | None = None, log=print):
+          hnsw_shards: int | None = None, residency: str = "device",
+          log=print):
     """``backend`` selects the engine execution path (shared contract, see
     ``core/engine.py``): "numpy" (host reference), "tpu" (device-resident
     Pallas pipeline, interpret-mode off-TPU) or "jnp" (device path without
@@ -42,7 +43,9 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
     "blocked" neighbour-blocked streaming, bit-exact results);
     ``hnsw_shards`` fans the HNSW engine out over N per-device database
     shards with a rank-merged global top-k (EXPERIMENTS.md §Sharded
-    HNSW)."""
+    HNSW). ``residency="tiered"`` keeps the full-resolution DB host-side
+    and streams rescore candidates through a double-buffered HBM window
+    (bitbound-folding engine; EXPERIMENTS.md §Tiered residency)."""
     db = synthetic_fingerprints(SyntheticConfig(n=n_db))
     queries = queries_from_db(db, n_queries * batches)
 
@@ -65,7 +68,8 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
             dt = time.time() - t0
     elif engine == "bitbound-folding":
         eng = BitBoundFoldingEngine(db, cutoff=CHEMBL_LIKE.cutoff,
-                                    m=CHEMBL_LIKE.folding_m, backend=backend)
+                                    m=CHEMBL_LIKE.folding_m, backend=backend,
+                                    residency=residency)
         if eng.backend in ("jnp", "tpu"):
             # warm every batch once: different batches can hit different
             # (window-bucket, k) pipelines, and compiling inside the timed
@@ -129,7 +133,8 @@ def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
                   flush_every: int = 8, hnsw_layout: str = "rows",
                   hnsw_shards: int | None = None,
                   durable_dir: str | None = None, snapshot_every: int = 0,
-                  resume: bool = False, log=print):
+                  resume: bool = False, residency: str = "device",
+                  log=print):
     """Drive a :class:`SearchService` with a mixed insert+query workload and
     report the serving telemetry. Returns the service summary dict.
 
@@ -161,7 +166,7 @@ def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
                             fold_m=CHEMBL_LIKE.folding_m,
                             compact_threshold=compact_threshold,
                             hnsw_layout=hnsw_layout, hnsw_shards=hnsw_shards,
-                            durable_dir=durable_dir)
+                            durable_dir=durable_dir, residency=residency)
     ops = make_workload(n_ops, write_ratio, pool, queries)
     enames = list(svc.engines)
     since_flush = 0
@@ -236,6 +241,12 @@ def main():
                     help="service mode: warm-restart from --durable-dir "
                          "(latest intact snapshot + WAL replay) instead of "
                          "building fresh engines")
+    ap.add_argument("--residency", default="device",
+                    choices=["device", "tiered"],
+                    help="full-resolution DB placement for the exhaustive "
+                         "engines: HBM-resident, or host-resident with "
+                         "double-buffered streaming rescore (breaks the "
+                         "single-device HBM capacity ceiling)")
     args = ap.parse_args()
     if args.engine == "service":
         serve_service(engines=tuple(args.service_engines.split(",")),
@@ -245,12 +256,12 @@ def main():
                       hnsw_layout=args.hnsw_layout, hnsw_shards=args.shards,
                       durable_dir=args.durable_dir,
                       snapshot_every=args.snapshot_every,
-                      resume=args.resume)
+                      resume=args.resume, residency=args.residency)
     else:
         serve(args.engine, n_db=args.n_db, k=args.k,
               n_queries=args.n_queries, use_kernel=args.use_kernel,
               backend=args.backend, hnsw_layout=args.hnsw_layout,
-              hnsw_shards=args.shards)
+              hnsw_shards=args.shards, residency=args.residency)
 
 
 if __name__ == "__main__":

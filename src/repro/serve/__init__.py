@@ -1,5 +1,6 @@
 from .knn_prefix_cache import KNNPrefixCache, simhash_sketch  # noqa: F401
-from .store import MutableFingerprintStore, next_pow2  # noqa: F401
+from .store import (MutableFingerprintStore, TieredFingerprintStore,  # noqa: F401
+                    next_pow2, validate_rows)
 from .service import SearchService, ServiceConfig  # noqa: F401
 from .wal import WriteAheadLog, WalCorruption, replay as wal_replay  # noqa: F401
 from . import snapshot  # noqa: F401

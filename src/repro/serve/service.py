@@ -32,6 +32,7 @@ docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import Counter
 from dataclasses import dataclass
@@ -74,6 +75,8 @@ class ServiceConfig:
     hnsw_ef_search: int = 32
     hnsw_layout: str = "rows"    # "blocked" = neighbour-blocked expand stage
     hnsw_shards: int | None = None  # fan-out HNSW over N per-device shards
+    residency: str = "device"    # "tiered" = host-resident full rows,
+    #   double-buffered host->HBM streaming rescore (store-backed engines)
     seed: int = 0
     # --- durability (ISSUE 6; docs/ARCHITECTURE.md §On-disk format) ---
     durable_dir: str | None = None  # snapshots/ + wal/ live here; None = RAM
@@ -107,6 +110,8 @@ class SearchService:
         self._fs = fs or DEFAULT_FS
         self._wal = None
         self._snap_id = -1
+        self._snap_thread = None
+        self._snap_error = None
         self.reset_telemetry()
         if cfg.durable_dir is not None:
             self._attach_durable_dir(fresh=True)
@@ -129,11 +134,13 @@ class SearchService:
         if name == "brute":
             # brute has no host reference path; map "numpy" to the jnp path
             be = cfg.backend if cfg.backend in ("jnp", "tpu") else None
-            return dict(backend=be, compact_threshold=cfg.compact_threshold)
+            return dict(backend=be, compact_threshold=cfg.compact_threshold,
+                        residency=cfg.residency)
         if name == "bitbound-folding":
             return dict(cutoff=cfg.cutoff, m=cfg.fold_m,
                         scheme=cfg.fold_scheme, backend=cfg.backend,
-                        compact_threshold=cfg.compact_threshold)
+                        compact_threshold=cfg.compact_threshold,
+                        residency=cfg.residency)
         if name == "hnsw":
             return dict(m=cfg.hnsw_m,
                         ef_construction=cfg.hnsw_ef_construction,
@@ -289,19 +296,44 @@ class SearchService:
         if fresh:
             self.snapshot()    # base DB is recoverable before any insert
 
-    def snapshot(self) -> int:
+    def snapshot(self, *, background: bool = False) -> int:
         """Write a full-state snapshot generation; rotates the WAL first so
         the snapshot's ``wal_from_seq`` covers exactly the records after it,
         then garbage-collects segments no retained snapshot needs. Crash
         windows: before the atomic publish the old snapshot + full WAL
-        recover everything; after it the GC'd segments are redundant."""
+        recover everything; after it the GC'd segments are redundant.
+
+        ``background=True`` moves the serialization + fsync work off the
+        serving thread: the state is **extracted synchronously** as
+        copy-on-write numpy arrays (extraction is a copy — the writer never
+        aliases live store/graph arrays, so inserts keep acking while the
+        snapshot is in flight), then a daemon thread saves, prunes and
+        WAL-GCs. At most one writer is in flight; a second ``snapshot()``
+        (or :meth:`close`) joins the previous one first, and any writer
+        exception is re-raised at the next :meth:`snapshot_join` /
+        :meth:`snapshot` / :meth:`close`."""
         if self._wal is None:
             raise RuntimeError("snapshot() requires durable_dir")
+        self.snapshot_join()
         sid = self._snap_id + 1
         from_seq = self._wal.rotate()
         arrays, meta = snap.service_state(self)
         meta["wal_from_seq"] = int(from_seq)
         meta["words"] = int(self.words)
+        if background:
+            t = threading.Thread(target=self._snapshot_worker,
+                                 args=(sid, arrays, meta),
+                                 name=f"snapshot-{sid}", daemon=True)
+            self._snap_thread = t
+            t.start()
+            return sid
+        self._write_snapshot(sid, arrays, meta)
+        return sid
+
+    def _write_snapshot(self, sid: int, arrays, meta) -> None:
+        """Persist one extracted snapshot + retention prune + WAL GC (the
+        serialization half of :meth:`snapshot`; runs on the serving thread
+        or the background writer)."""
         ckpt.save_array_snapshot(self._snap_dir, sid, arrays, meta,
                                  fs=self._fs, durable=True)
         self._snap_id = sid
@@ -319,7 +351,23 @@ class SearchService:
                 continue
         if floors:
             self._wal.gc_below(min(floors))
-        return sid
+
+    def _snapshot_worker(self, sid: int, arrays, meta) -> None:
+        try:
+            self._write_snapshot(sid, arrays, meta)
+        except BaseException as e:   # surfaced at the next join point
+            self._snap_error = e
+
+    def snapshot_join(self) -> None:
+        """Wait for an in-flight background snapshot (no-op otherwise) and
+        re-raise any exception its writer hit."""
+        t = self._snap_thread
+        if t is not None:
+            t.join()
+            self._snap_thread = None
+        if self._snap_error is not None:
+            e, self._snap_error = self._snap_error, None
+            raise e
 
     @classmethod
     def open(cls, directory, *, clock=time.perf_counter,
@@ -353,6 +401,8 @@ class SearchService:
         svc._next_rid = 0
         svc._wal = None
         svc._snap_id = step
+        svc._snap_thread = None
+        svc._snap_error = None
         svc._snap_dir = base / "snapshots"
         svc._wal_dir = base / "wal"
         svc.reset_telemetry()
@@ -376,7 +426,9 @@ class SearchService:
         return svc
 
     def close(self) -> None:
-        """Flush and close the WAL (no final snapshot — reopen replays)."""
+        """Flush and close the WAL (no final snapshot — reopen replays).
+        Joins any in-flight background snapshot first."""
+        self.snapshot_join()
         if self._wal is not None:
             self._wal.close()
             self._wal = None

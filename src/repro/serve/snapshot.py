@@ -36,9 +36,17 @@ import numpy as np
 from ..core import hnsw as hn
 from ..core.engine import (BitBoundFoldingEngine, BruteForceEngine,
                            HNSWEngine)
-from .store import MutableFingerprintStore, _popcounts
+from .store import (MutableFingerprintStore, TieredFingerprintStore,
+                    _popcounts)
 
 FORMAT_VERSION = 1
+
+
+def _cow(a: np.ndarray) -> np.ndarray:
+    """Copy-on-write extraction: always materialize a private C-contiguous
+    copy (``np.ascontiguousarray`` would alias an already-contiguous live
+    array, racing the background snapshot writer against inserts)."""
+    return np.array(a, order="C")
 
 
 # -- store ------------------------------------------------------------------
@@ -57,13 +65,20 @@ def store_state(store: MutableFingerprintStore):
         "generation": int(store.generation),
         "delta_version": int(store.delta_version),
         "compactions": int(store.compactions),
+        "residency": getattr(store, "residency", "device"),
     }
     return arrays, meta
 
 
 def store_from_state(arrays, meta) -> MutableFingerprintStore:
     from ..core import folding as fl
-    st = MutableFingerprintStore(
+    # tiered stores restore as tiered (host-RAM main segment; an mmap
+    # backing directory is a deployment knob, not snapshot state) so the
+    # hydrated engine never materializes the full DB on device
+    kind = (TieredFingerprintStore
+            if meta.get("residency", "device") == "tiered"
+            else MutableFingerprintStore)
+    st = kind(
         arrays["main_rows"], sorted_main=meta["sorted_main"],
         fold_m=meta["fold_m"], fold_scheme=meta["fold_scheme"],
         compact_threshold=meta["compact_threshold"])
@@ -85,14 +100,13 @@ def store_from_state(arrays, meta) -> MutableFingerprintStore:
 def hnsw_index_state(index: hn.HNSWIndex):
     """Extract one HNSW index as ``(arrays, meta)``."""
     arrays = {
-        "db": np.ascontiguousarray(index.db),
-        "base_adj": np.ascontiguousarray(index.base_adj),
-        "level_of": np.ascontiguousarray(index.level_of),
+        "db": _cow(index.db),
+        "base_adj": _cow(index.base_adj),
+        "level_of": _cow(index.level_of),
     }
     for l in range(1, index.max_level + 1):
-        arrays[f"upper{l}_nodes"] = np.ascontiguousarray(
-            index.level_nodes[l - 1])
-        arrays[f"upper{l}_adj"] = np.ascontiguousarray(index.level_adj[l - 1])
+        arrays[f"upper{l}_nodes"] = _cow(index.level_nodes[l - 1])
+        arrays[f"upper{l}_adj"] = _cow(index.level_adj[l - 1])
     rng_state = None
     if index.rng is not None:
         rng_state = index.rng.bit_generator.state  # JSON-able nested dict

@@ -32,6 +32,7 @@ the concatenated database — the insert-then-search parity contract.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from pathlib import Path
 
 import numpy as np
 
@@ -51,6 +52,35 @@ def next_pow2(n: int) -> int:
 
 def _popcounts(rows: np.ndarray) -> np.ndarray:
     return np.bitwise_count(rows).sum(axis=-1).astype(np.int64)
+
+
+def validate_rows(fps, words: int | None = None) -> np.ndarray:
+    """Validate an insert batch up front: returns a ``(N, W)`` uint32 array
+    or raises a clear ``ValueError``.
+
+    Accepted dtypes are ``uint32`` (the packed-word format) and unsigned
+    integer types that cast to it losslessly (``uint8`` / ``uint16``).
+    Anything else — floats, signed ints (what a bare python list becomes),
+    objects — is rejected here instead of surfacing later as a cryptic
+    kernel shape/dtype error deep in a compiled pipeline.
+    """
+    arr = np.asarray(fps)
+    if arr.dtype != np.uint32:
+        if not (arr.dtype.kind == "u"
+                and np.can_cast(arr.dtype, np.uint32, "safe")):
+            raise ValueError(
+                "fingerprint rows must be packed uint32 words "
+                f"(or a losslessly-castable unsigned dtype), got {arr.dtype}")
+        arr = arr.astype(np.uint32)
+    arr = np.atleast_2d(arr)
+    if arr.ndim != 2:
+        raise ValueError(
+            f"fingerprint rows must be (N, W) packed words, got shape "
+            f"{arr.shape}")
+    if words is not None and arr.shape[1] != words:
+        raise ValueError(
+            f"fingerprint width {arr.shape[1]} != store width {words}")
+    return arr
 
 
 @dataclass
@@ -77,6 +107,11 @@ class MutableFingerprintStore:
         arrays (``m=1`` stores aliases of the full-resolution arrays).
     compact_threshold : delta row count that triggers compaction on insert.
     """
+
+    #: where a device engine should keep the full-resolution main segment;
+    #: :class:`TieredFingerprintStore` overrides this to "tiered" (host RAM,
+    #: streamed to HBM per rescore chunk — see core/engine.py residency)
+    residency = "device"
 
     def __init__(self, db: np.ndarray, *, sorted_main: bool = True,
                  fold_m: int = 1, fold_scheme: int = 1,
@@ -148,11 +183,10 @@ class MutableFingerprintStore:
     # -- writes --------------------------------------------------------------
     def insert(self, fps: np.ndarray) -> np.ndarray:
         """Append fingerprints to the delta segment; returns their global
-        ids. Triggers compaction when the delta reaches the threshold."""
-        fps = np.atleast_2d(np.asarray(fps, dtype=np.uint32))
-        if fps.shape[1] != self.words:
-            raise ValueError(
-                f"fingerprint width {fps.shape[1]} != store width {self.words}")
+        ids. Triggers compaction when the delta reaches the threshold.
+        Mis-shaped or mis-dtyped rows raise ``ValueError`` up front
+        (:func:`validate_rows`) instead of corrupting the delta."""
+        fps = validate_rows(fps, self.words)
         if fps.shape[0] == 0:
             return np.empty((0,), dtype=np.int64)
         gids = np.arange(self.n_total, self.n_total + fps.shape[0],
@@ -188,3 +222,86 @@ class MutableFingerprintStore:
         self.generation += 1
         self.delta_version += 1
         self.compactions += 1
+
+
+class TieredFingerprintStore(MutableFingerprintStore):
+    """Tiered-residency store: the full-resolution main segment stays on the
+    host (ISSUE 7 / ROADMAP "Billion-fingerprint capacity").
+
+    Layout and semantics are byte-identical to
+    :class:`MutableFingerprintStore` — same deterministic ``_build_main``,
+    same counters, same snapshot format. The differences are residency
+    policy, not data:
+
+    * ``residency = "tiered"`` tells the device engines not to upload
+      ``main.db`` in ``_sync``; only the folded stage-1 arrays plus the
+      (4 B/row) count and order vectors go to HBM, and full-resolution rows
+      are gathered on the host and streamed into a double-buffered HBM
+      staging window per rescore chunk (``core/engine.py``).
+    * ``mmap_dir`` optionally backs the main segment's full-resolution rows
+      with a ``np.memmap`` file, so a database much larger than RAM-resident
+      working set can be served — the OS pages rescore windows in on demand
+      and the sorted copy never has to live in anonymous memory. The folded
+      arrays (m× smaller) and the int64 count/order vectors stay in RAM.
+      Compactions write a fresh file per generation (``main_<gen>.u32``).
+
+    On a host with pinned-memory support, ``mmap_dir=None`` rows are the
+    host-pinned tier; the engine's ``jax.device_put`` chunks are what an
+    FPGA/TPU host would DMA from pinned buffers.
+    """
+
+    residency = "tiered"
+
+    #: rows per host-side write chunk while building a memmapped segment
+    _BUILD_CHUNK = 1 << 16
+
+    def __init__(self, db: np.ndarray, *, mmap_dir: str | None = None,
+                 **kwargs):
+        self._mmap_dir = mmap_dir
+        self._mmap_seq = 0
+        super().__init__(db, **kwargs)
+
+    def _build_main(self, rows: np.ndarray) -> MainSegment:
+        if self._mmap_dir is None:
+            return super()._build_main(rows)
+        # memmap-backed build: identical arrays to the parent (pinned by
+        # tests/test_tiered.py), written chunk-wise so the full sorted copy
+        # never has to be materialised in anonymous memory
+        n = rows.shape[0]
+        capacity = next_pow2(max(n, 1))
+        counts = _popcounts(rows)
+        if self.sorted_main:
+            order = np.argsort(counts, kind="stable").astype(np.int64)
+        else:
+            order = np.arange(n, dtype=np.int64)
+        base = Path(self._mmap_dir)
+        base.mkdir(parents=True, exist_ok=True)
+        path = base / f"main_{self._mmap_seq:04d}.u32"
+        self._mmap_seq += 1
+        db = np.memmap(path, dtype=np.uint32, mode="w+",
+                       shape=(capacity, self.words))
+        db[n:] = 0
+        cnt = np.full((capacity,), PAD_COUNT if self.sorted_main else 0,
+                      dtype=np.int64)
+        order_p = np.full((capacity,), -1, dtype=np.int64)
+        order_p[:n] = order
+        wf = self.words // self.fold_m
+        folded = (np.zeros((capacity, wf), dtype=np.uint32)
+                  if self.fold_m > 1 else db)
+        folded_counts = np.zeros((capacity,), dtype=np.int64)
+        for lo in range(0, n, self._BUILD_CHUNK):
+            hi = min(lo + self._BUILD_CHUNK, n)
+            sel = order[lo:hi]
+            chunk = rows[sel] if self.sorted_main else rows[lo:hi]
+            db[lo:hi] = chunk
+            cnt[lo:hi] = counts[sel] if self.sorted_main else counts[lo:hi]
+            if self.fold_m > 1:
+                fchunk = fl.fold(chunk, self.fold_m, self.fold_scheme)
+                folded[lo:hi] = fchunk
+                folded_counts[lo:hi] = _popcounts(fchunk)
+            else:
+                folded_counts[lo:hi] = _popcounts(chunk)
+        db.flush()
+        return MainSegment(db=db, counts=cnt, order=order_p, folded=folded,
+                           folded_counts=folded_counts, n=n,
+                           capacity=capacity)

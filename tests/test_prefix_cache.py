@@ -47,3 +47,78 @@ def test_capacity_eviction():
         cache.insert(rng.integers(0, 1000, 32), payload=i)
     assert len(cache._sketches) == 4
     assert cache._payloads == [4, 5, 6, 7]
+
+
+# -- determinism + oracle (ISSUE 7 satellite) -------------------------------
+
+def test_simhash_sketch_determinism_pinned():
+    """Exact packed-word pin: any change to the n-gram hash, seed handling
+    or bit packing invalidates every stored sketch, so the sketch function
+    is part of the on-disk contract."""
+    s = simhash_sketch(np.arange(20))
+    assert s.dtype == np.uint32 and s.shape == (32,)
+    expected = {0: 0x80, 1: 0x4000000, 3: 0x2000, 5: 0x1, 6: 0x80000,
+                8: 0x40, 9: 0x2000000, 11: 0x1000, 12: 0x80000000,
+                14: 0x40000, 16: 0x20, 17: 0x1000000, 19: 0x800,
+                20: 0x40000000, 22: 0x20000, 24: 0x10, 29: 0x2,
+                30: 0x100000}
+    assert {i: int(v) for i, v in enumerate(s) if v} == expected
+    # parameters flow through (length/ngram/seed change the mapping)
+    s2 = simhash_sketch(np.arange(20), length=256, ngram=2, seed=7)
+    assert [int(v) for v in s2] == [1048593, 1048592, 16777488, 16777472,
+                                    268439808, 268439552, 65537, 65537]
+    # pure function: repeated calls byte-equal
+    np.testing.assert_array_equal(s, simhash_sketch(np.arange(20)))
+
+
+def test_lookup_matches_brute_force_oracle():
+    """Cache hit/miss decisions must match an oracle that scores every
+    cached prompt exhaustively with the same sketch + threshold + exact
+    prefix-verification rule."""
+    from repro.core import tanimoto
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(7)
+    cache = KNNPrefixCache(sim_threshold=0.6, min_prefix=8, capacity=64)
+    prompts = []
+    for i in range(12):
+        if i % 3 == 0 or not prompts:
+            p = rng.integers(0, 500, 64)       # fresh conversation
+        else:                                  # fork an earlier prompt
+            base = prompts[rng.integers(len(prompts))]
+            cut = int(rng.integers(8, 56))
+            p = np.concatenate([base[:cut], rng.integers(0, 500, 64 - cut)])
+        prompts.append(p)
+        cache.insert(p, payload=i)
+
+    def oracle(query):
+        qs = jnp.asarray(simhash_sketch(query))
+        best_payload, best_len = None, 0
+        for j, p in enumerate(prompts):
+            sim = float(tanimoto(qs, jnp.asarray(simhash_sketch(p))))
+            if sim < cache.sim_threshold:
+                continue
+            n = min(len(query), len(p))
+            neq = np.nonzero(query[:n] != p[:n])[0]
+            plen = int(neq[0]) if len(neq) else n
+            if plen > best_len:
+                best_payload, best_len = j, plen
+        if best_len >= cache.min_prefix:
+            return best_payload, best_len
+        return None, 0
+
+    hits = misses = 0
+    for t in range(20):
+        if t % 2:
+            base = prompts[rng.integers(len(prompts))]
+            cut = int(rng.integers(4, 60))
+            q = np.concatenate([base[:cut], rng.integers(0, 500, 20)])
+        else:
+            q = rng.integers(0, 500, 64)
+        want = oracle(q)
+        got = cache.lookup(q)
+        assert got == want, (t, got, want)
+        hits += want[0] is not None
+        misses += want[0] is None
+    assert cache.hits == hits and cache.misses == misses
+    assert hits > 0 and misses > 0             # both branches exercised

@@ -118,3 +118,39 @@ def test_width_mismatch_rejected(rows):
     st = MutableFingerprintStore(rows)
     with pytest.raises(ValueError, match="width"):
         st.insert(np.zeros((2, rows.shape[1] + 1), np.uint32))
+
+
+# -- insert validation (ISSUE 7 satellite) ----------------------------------
+
+def test_insert_rejects_wrong_width(rows):
+    st = MutableFingerprintStore(rows)
+    with pytest.raises(ValueError, match="width"):
+        st.insert(np.ones((2, rows.shape[1] + 1), dtype=np.uint32))
+
+
+def test_insert_rejects_float_rows(rows):
+    st = MutableFingerprintStore(rows)
+    with pytest.raises(ValueError, match="uint32"):
+        st.insert(np.ones((2, rows.shape[1]), dtype=np.float32))
+
+
+def test_insert_rejects_signed_and_python_ints(rows):
+    st = MutableFingerprintStore(rows)
+    with pytest.raises(ValueError, match="uint32"):
+        st.insert(np.ones((1, rows.shape[1]), dtype=np.int64))
+    with pytest.raises(ValueError, match="uint32"):
+        st.insert([[1] * rows.shape[1]])       # python ints -> int64
+
+
+def test_insert_rejects_bad_ndim(rows):
+    st = MutableFingerprintStore(rows)
+    with pytest.raises(ValueError, match="packed words"):
+        st.insert(np.zeros((2, 2, rows.shape[1]), dtype=np.uint32))
+
+
+def test_insert_accepts_narrower_unsigned(rows):
+    # uint8/uint16 rows are losslessly castable packed words
+    st = MutableFingerprintStore(rows)
+    gids = st.insert(np.ones((2, rows.shape[1]), dtype=np.uint16))
+    assert gids.tolist() == [len(rows), len(rows) + 1]
+    assert st.delta_db.dtype == np.uint32

@@ -204,3 +204,77 @@ def test_load_latest_intact_skips_partial(tmp_path):
     step, arrays, meta = load_latest_intact(tmp_path)
     assert step == 0 and meta == {"v": 1}
     np.testing.assert_array_equal(arrays["x"], np.arange(5))
+
+
+# -- background snapshots (ISSUE 7 satellite) -------------------------------
+
+def test_background_snapshot_inserts_keep_acking(tmp_path):
+    """Inserts must keep acking while a snapshot writer is parked mid-write:
+    the state is handed off as copy-on-write arrays on the serving thread
+    and the serialization + fsync runs on a daemon thread."""
+    import threading
+
+    from repro.checkpoint.fs import Fs
+
+    gate = threading.Event()
+    entered = threading.Event()
+
+    class GateFs(Fs):
+        armed = False
+
+        def open(self, path, mode="wb"):
+            if self.armed and "snap_" in str(path):
+                entered.set()
+                assert gate.wait(timeout=30), "test gate never released"
+            return super().open(path, mode)
+
+    fs = GateFs()
+    svc = SearchService(BASE, engines=("brute",), durable_dir=str(tmp_path),
+                        compact_threshold=10_000, fs=fs)
+    fs.armed = True
+    svc.snapshot(background=True)
+    assert entered.wait(timeout=30), "background writer never started"
+    # writer is blocked inside the gated open(); the serving thread acks
+    gids = []
+    for i in range(6):
+        gids.extend(svc.insert(EXTRA[i * 3:(i + 1) * 3]).tolist())
+    assert svc._snap_thread is not None and svc._snap_thread.is_alive()
+    assert gids == list(range(len(BASE), len(BASE) + 18))
+    gate.set()
+    svc.snapshot_join()
+    svc.close()
+    # every insert acked during the in-flight snapshot is recoverable
+    svc2 = SearchService.open(tmp_path)
+    assert svc2.engines["brute"].n_total == len(BASE) + 18
+    svc2.close()
+
+
+def test_background_snapshot_error_surfaces_at_join(tmp_path):
+    from repro.checkpoint.fs import Fs
+
+    class BoomFs(Fs):
+        armed = False
+
+        def open(self, path, mode="wb"):
+            if self.armed and "snap_" in str(path):
+                raise IOError("boom")
+            return super().open(path, mode)
+
+    fs = BoomFs()
+    svc = SearchService(BASE[:32], engines=("brute",),
+                        durable_dir=str(tmp_path), fs=fs)
+    fs.armed = True
+    svc.snapshot(background=True)
+    with pytest.raises(IOError, match="boom"):
+        svc.snapshot_join()
+    svc.close()                               # error already consumed
+
+
+def test_hnsw_extraction_never_aliases_live_arrays():
+    """COW contract behind background snapshots: extracted arrays must be
+    private copies, never views of the live (still-mutating) state."""
+    eng = HNSWEngine(POOL[:80])
+    arrays, _ = snap.hnsw_index_state(eng.index)
+    for name, a in arrays.items():
+        assert not np.shares_memory(a, eng.index.db), name
+        assert not np.shares_memory(a, eng.index.base_adj), name

@@ -1,0 +1,175 @@
+"""Tiered residency (ISSUE 7): host-resident full-resolution rows +
+double-buffered host->HBM streaming rescore must be **bit-identical** (ids
+and scores) to the fully device-resident path, at every fold level, on both
+device backends, with and without a delta segment, across compactions, and
+through snapshot/restore."""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import BitBoundFoldingEngine, BruteForceEngine
+from repro.data.molecules import (SyntheticConfig, queries_from_db,
+                                  synthetic_fingerprints)
+from repro.serve.store import MutableFingerprintStore, TieredFingerprintStore
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def db():
+    return synthetic_fingerprints(SyntheticConfig(n=3000))
+
+
+@pytest.fixture(scope="module")
+def queries(db):
+    return queries_from_db(db, 16)
+
+
+@pytest.fixture(scope="module")
+def extra():
+    return synthetic_fingerprints(SyntheticConfig(n=120, seed=9))
+
+
+def _assert_identical(a, b):
+    ids_a, sims_a = a
+    ids_b, sims_b = b
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    np.testing.assert_array_equal(np.asarray(sims_a), np.asarray(sims_b))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "tpu"])
+def test_brute_tiered_parity(db, queries, extra, backend):
+    dev = BruteForceEngine(db, backend=backend)
+    # tiny chunk -> the 4096-capacity main segment streams in 8 chunks
+    tie = BruteForceEngine(db, backend=backend, residency="tiered",
+                           tier_chunk_rows=512)
+    _assert_identical(dev.search(queries, K), tie.search(queries, K))
+    dev.insert(extra)
+    tie.insert(extra)                       # delta path on top of streaming
+    _assert_identical(dev.search(queries, K), tie.search(queries, K))
+    assert tie.stats["residency"] == "tiered"
+    assert tie.stats["tiered_chunks"] == 8
+    assert tie.stats["tiered_streamed_bytes"] > 0
+    assert 0.0 <= tie.stats["tiered_stall_fraction"] <= 1.0
+
+
+@pytest.mark.parametrize("backend", ["jnp", "tpu"])
+@pytest.mark.parametrize("m", [1, 4])
+def test_bitbound_tiered_parity(db, queries, extra, backend, m):
+    kw = dict(cutoff=0.6, m=m, backend=backend, compact_threshold=100)
+    dev = BitBoundFoldingEngine(db, **kw)
+    tie = BitBoundFoldingEngine(db, residency="tiered", tier_chunk=32, **kw)
+    _assert_identical(dev.search(queries, K), tie.search(queries, K))
+    # delta phase, then past compact_threshold -> rebuilt main segment
+    for lo, hi in ((0, 40), (40, 120)):
+        dev.insert(extra[lo:hi])
+        tie.insert(extra[lo:hi])
+        _assert_identical(dev.search(queries, K), tie.search(queries, K))
+    assert dev.store.compactions > 0
+    if m > 1:   # m == 1 never streams (stage-1 folded scores are exact)
+        assert tie.stats["residency"] == "tiered"
+        assert tie.stats["tiered_chunks"] > 1
+
+
+def test_bitbound_tiered_matches_numpy_reference(db, queries):
+    """The streaming path sits behind the same oracle as the device path."""
+    ref = BitBoundFoldingEngine(db, cutoff=0.6, m=4, backend="numpy")
+    tie = BitBoundFoldingEngine(db, cutoff=0.6, m=4, backend="jnp",
+                                residency="tiered", tier_chunk=64)
+    ids_r, sims_r = ref.search(queries, K)
+    ids_t, sims_t = tie.search(queries, K)
+    np.testing.assert_array_equal(ids_r, np.asarray(ids_t, dtype=np.int64))
+    np.testing.assert_allclose(sims_r, sims_t, rtol=0, atol=0)
+
+
+def test_tiered_keeps_full_rows_off_device(db):
+    eng = BitBoundFoldingEngine(db, cutoff=0.6, m=4, backend="jnp",
+                                residency="tiered")
+    assert eng.full is None                   # never uploaded
+    assert eng._full_np is eng.store.main.db  # host view, no copy
+    b = BruteForceEngine(db, backend="jnp", residency="tiered")
+    assert b.db is None and b._db_np is b.store.main.db
+
+
+def test_invalid_residency_rejected(db):
+    with pytest.raises(ValueError, match="residency"):
+        BruteForceEngine(db[:64], residency="floppy")
+    with pytest.raises(ValueError, match="residency"):
+        BitBoundFoldingEngine(db[:64], residency="hbm")
+
+
+def test_tiered_store_mmap_byte_equal(db, extra):
+    """The memmap-backed main segment build is byte-identical to the
+    in-RAM build, including across an insert-triggered compaction."""
+    with tempfile.TemporaryDirectory() as td:
+        kw = dict(sorted_main=True, fold_m=4, compact_threshold=64)
+        plain = MutableFingerprintStore(db, **kw)
+        tiered = TieredFingerprintStore(db, mmap_dir=td, **kw)
+        assert tiered.residency == "tiered"
+        assert isinstance(tiered.main.db, np.memmap)
+        for attr in ("db", "folded", "counts", "folded_counts", "order"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(plain.main, attr)),
+                np.asarray(getattr(tiered.main, attr)), err_msg=attr)
+        plain.insert(extra)
+        tiered.insert(extra)                  # crosses compact_threshold
+        assert tiered.compactions == plain.compactions > 0
+        for attr in ("db", "folded", "counts", "folded_counts", "order"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(plain.main, attr)),
+                np.asarray(getattr(tiered.main, attr)), err_msg=attr)
+
+
+def test_tiered_store_engine_inherits_residency(db, queries):
+    """An engine built on a TieredFingerprintStore (residency=None) serves
+    tiered and stays bit-identical to a device-resident engine."""
+    with tempfile.TemporaryDirectory() as td:
+        st = TieredFingerprintStore(db, mmap_dir=td, sorted_main=True,
+                                    fold_m=4, compact_threshold=4096)
+        eng = BitBoundFoldingEngine(None, cutoff=0.6, m=4, backend="jnp",
+                                    store=st)
+        assert eng.residency == "tiered"
+        dev = BitBoundFoldingEngine(db, cutoff=0.6, m=4, backend="jnp")
+        _assert_identical(dev.search(queries, K), eng.search(queries, K))
+
+
+def test_tiered_snapshot_roundtrip(db, queries, extra):
+    """Snapshot/restore of a tiered engine: the hydrated engine stays
+    tiered (full DB never materialized on device) and bit-identical."""
+    from repro.serve import snapshot as snap
+    eng = BitBoundFoldingEngine(db, cutoff=0.6, m=4, backend="jnp",
+                                residency="tiered", tier_chunk=64)
+    eng.insert(extra[:30])
+    arrays, meta = snap.engine_state(eng)
+    assert meta["store"]["residency"] == "device"  # plain store under a
+    #   tiered *engine*: residency was an engine knob, carried by the config
+    r1 = eng.search(queries, K)
+    back = snap.engine_from_state(arrays, meta, cutoff=0.6, m=4,
+                                  backend="jnp", residency="tiered",
+                                  tier_chunk=64)
+    assert back.residency == "tiered" and back.full is None
+    _assert_identical(r1, back.search(queries, K))
+    # tiered *store*: residency rides in the snapshot meta itself
+    st = TieredFingerprintStore(db, sorted_main=True, fold_m=4)
+    eng2 = BitBoundFoldingEngine(None, cutoff=0.6, m=4, backend="jnp",
+                                 store=st)
+    arrays2, meta2 = snap.engine_state(eng2)
+    assert meta2["store"]["residency"] == "tiered"
+    back2 = snap.engine_from_state(arrays2, meta2, cutoff=0.6, m=4,
+                                   backend="jnp")
+    assert back2.residency == "tiered" and back2.full is None
+    _assert_identical(eng2.search(queries, K), back2.search(queries, K))
+
+
+def test_service_residency_plumbs_through(db, queries):
+    from repro.serve.service import SearchService
+    svc = SearchService(db, engines=("brute", "bitbound-folding"),
+                        backend="jnp", residency="tiered")
+    for eng in svc.engines.values():
+        assert eng.residency == "tiered"
+    dev = SearchService(db, engines=("bitbound-folding",), backend="jnp")
+    ids_t, sims_t = svc.search(queries, k=K, engine="bitbound-folding")
+    ids_d, sims_d = dev.search(queries, k=K)
+    np.testing.assert_array_equal(ids_t, ids_d)
+    np.testing.assert_array_equal(sims_t, sims_d)
