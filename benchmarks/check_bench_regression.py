@@ -28,10 +28,12 @@ BENCH_REL = "experiments/bench"
 # the fig8_hnsw_grid_sharded.json artifact (a re-run at a different shard
 # count is a new baseline, not a regression), "wal" the serve_load*.json
 # durability axis (an in-memory row is no baseline for a fsync-per-ack row),
-# and "fold_m" / "residency" the BENCH_tiered.json capacity sweep (a device
-# row guards nothing about the streaming path, and vice versa)
+# "fold_m" / "residency" the BENCH_tiered.json capacity sweep (a device
+# row guards nothing about the streaming path, and vice versa), and
+# "loop" / "target_qps" the serve_slo.json SLO harness (closed-loop
+# capacity and open-loop paced QPS are different measurements)
 SHAPE_KEYS = ("n_db", "n_queries", "beam", "shards", "wal", "fold_m",
-              "residency")
+              "residency", "loop", "target_qps")
 
 
 def _git(*args: str) -> subprocess.CompletedProcess:
@@ -76,7 +78,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="allowed fractional QPS drop (default 0.20)")
-    ap.add_argument("--glob", default="fig8_hnsw_grid*.json,BENCH_tiered.json",
+    ap.add_argument("--glob",
+                    default="fig8_hnsw_grid*.json,BENCH_tiered.json,"
+                            "serve_slo.json",
                     help="benchmark artifacts to guard (comma-separated "
                          "globs)")
     args = ap.parse_args(argv)

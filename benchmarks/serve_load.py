@@ -18,11 +18,24 @@ smoke leg via the JSON).
 cell is re-measured with the write-ahead log on — fsync-per-ack and
 8-record group commit — against a temp directory, so the p99 rows quantify
 what the acked-implies-recovered contract costs per insert.
+
+``--slo`` switches to the SLO-tracking harness (ISSUE 8 tentpole): a
+target-QPS load loop — ``--loop closed`` issues ops back-to-back (service
+at capacity), ``--loop open`` paces submissions to ``--target-qps`` on a
+wall-clock schedule so queueing delay shows up in the latency when the
+service falls behind — with a per-phase latency breakdown read from the
+service's metrics registry (queue wait / engine batch / insert / WAL
+append) and a **hard p99 SLO verdict**: the run exits non-zero when
+request p99 exceeds ``--slo-p99-ms``. ``--measure-overhead`` replays the
+identical window against a ``metrics=False`` twin service and reports the
+observability overhead as a QPS fraction (``--overhead-budget 0.05`` turns
+the 5% acceptance bound into a hard failure).
 """
 from __future__ import annotations
 
 import argparse
 import tempfile
+import time
 
 import numpy as np
 
@@ -112,8 +125,9 @@ def run(n_db=20_000, n_ops=256, k=10, backend="jnp",
                 "n_db": n_db, "k": k, "n_ops": n_ops,
                 "write_ratio": wr, "wal": wal,
                 "compact_threshold": ct,
-                "p50_ms": s.get("p50_ms", 0.0),
-                "p99_ms": s.get("p99_ms", 0.0),
+                # summary() reports explicit None when no queries ran
+                "p50_ms": s.get("p50_ms") or 0.0,
+                "p99_ms": s.get("p99_ms") or 0.0,
                 "qps": s["qps"],
                 "n_queries": s["n_queries"],
                 "n_inserts": s["n_inserts"],
@@ -136,6 +150,155 @@ def run(n_db=20_000, n_ops=256, k=10, backend="jnp",
     return rows
 
 
+# -- SLO-tracking harness (ISSUE 8) -----------------------------------------
+
+#: (report key, registry family) pairs for the per-phase latency breakdown
+PHASE_FAMILIES = (
+    ("queue_wait", "service_queue_wait_ms"),
+    ("engine_batch", "service_engine_batch_ms"),
+    ("insert", "service_insert_ms"),
+    ("wal_append", "service_wal_append_ms"),
+)
+
+
+def _phase_breakdown(svc):
+    """Read the per-phase latency families out of the service registry."""
+    out = {}
+    for phase, fam_name in PHASE_FAMILIES:
+        fam = svc.metrics.family(fam_name)
+        if fam is None:
+            continue
+        n = fam.count()
+        if not n:
+            continue
+        out[phase] = {"count": int(n), "mean_ms": fam.mean(),
+                      "p50_ms": fam.quantile(0.5),
+                      "p99_ms": fam.quantile(0.99)}
+    return out
+
+
+def _run_window(svc, ops, engine, k, flush_every, loop, target_qps):
+    """One timed load window; returns (wall seconds, missed deadlines).
+
+    ``loop="closed"`` issues ops back-to-back — the service runs at
+    capacity and the measured QPS *is* the capacity. ``loop="open"``
+    schedules op i at ``t0 + i/target_qps`` and sleeps until its deadline:
+    arrival rate is fixed, so when the service falls behind, the backlog
+    shows up as queue-wait and request latency instead of silently slowing
+    the generator (coordinated omission)."""
+    interval = (1.0 / target_qps) if (loop == "open" and target_qps) else 0.0
+    missed = 0
+    since = 0
+    t0 = time.perf_counter()
+    for i, (op, payload) in enumerate(ops):
+        if interval:
+            deadline = t0 + i * interval
+            now = time.perf_counter()
+            if now < deadline:
+                time.sleep(deadline - now)
+            elif now > deadline + interval:
+                missed += 1
+        if op == "insert":
+            svc.insert(payload)
+        else:
+            svc.submit(payload, k=k, engine=engine)
+            since += 1
+            if since >= flush_every:
+                svc.flush()
+                since = 0
+    svc.flush()
+    return time.perf_counter() - t0, missed
+
+
+def _measured_service(db, pool, queries, *, engine, backend, k, n_ops,
+                      write_ratio, flush_every, loop, target_qps,
+                      metrics=True, **svc_kwargs):
+    """Build + warm a service, run one timed window, return
+    (service, wall seconds, missed deadlines). Caller closes."""
+    expected_writes = max(int(n_ops * write_ratio), 1)
+    ct = max(2, expected_writes // 2)
+    svc = SearchService(db, engines=(engine,), backend=backend, k=k,
+                        compact_threshold=ct, metrics=metrics, **svc_kwargs)
+    ops = make_workload(n_ops, write_ratio, pool[:2 * n_ops], queries, seed=3)
+    warm_pool = pool[2 * n_ops:]
+    warm_ops = [("insert", warm_pool[i % len(warm_pool):][:1])
+                if op == "insert" else (op, payload)
+                for i, (op, payload) in enumerate(ops)]
+    _run_ops(svc, warm_ops, engine, k, flush_every)   # compile everything
+    svc.compact_all()
+    svc.reset_telemetry()
+    dt, missed = _run_window(svc, ops, engine, k, flush_every, loop,
+                             target_qps)
+    return svc, dt, missed
+
+
+def run_slo(n_db=20_000, n_ops=256, k=10, backend="jnp",
+            engines=("brute",), write_ratio=0.01, flush_every=8,
+            loop="closed", target_qps=None, slo_p99_ms=50.0,
+            measure_overhead=False, residency="device",
+            tier_chunk_rows=None, tier_chunk=None, suffix=None):
+    """SLO harness: per-engine load window + registry phase breakdown +
+    hard p99 verdict. Emits ``experiments/bench/serve_slo*.json`` rows and
+    returns them; the CLI exits non-zero when any ``slo_ok`` is false."""
+    db = synthetic_fingerprints(SyntheticConfig(n=n_db, seed=0))
+    pool = synthetic_fingerprints(SyntheticConfig(n=max(4 * n_ops, 256),
+                                                  seed=7))
+    queries = queries_from_db(db, min(n_db, 256))
+    svc_kwargs = dict(residency=residency, tier_chunk_rows=tier_chunk_rows,
+                      tier_chunk=tier_chunk)
+    common = dict(backend=backend, k=k, n_ops=n_ops,
+                  write_ratio=write_ratio, flush_every=flush_every,
+                  loop=loop, target_qps=target_qps, **svc_kwargs)
+    rows = []
+    for engine in engines:
+        svc, dt, missed = _measured_service(db, pool, queries, engine=engine,
+                                            **common)
+        s = svc.summary()
+        phases = _phase_breakdown(svc)
+        svc.close()
+        p99 = s.get("p99_ms")
+        achieved_qps = s["n_queries"] / dt if dt > 0 else 0.0
+        row = {
+            "name": f"slo_{engine}_{loop}"
+                    + (f"_q{target_qps:g}" if target_qps else ""),
+            "engine": engine, "backend": backend, "loop": loop,
+            "n_db": n_db, "k": k, "n_ops": n_ops,
+            "write_ratio": write_ratio, "residency": residency,
+            "target_qps": target_qps, "achieved_qps": round(achieved_qps, 1),
+            # alias for the bench-regression guard's QPS comparison key
+            "host_qps": round(achieved_qps, 1),
+            "missed_deadlines": missed,
+            "p50_ms": s.get("p50_ms"), "p99_ms": p99,
+            "mean_ms": s.get("mean_ms"),
+            "slo_p99_ms": slo_p99_ms,
+            "slo_ok": bool(p99 is not None and p99 <= slo_p99_ms),
+            "phases": phases,
+        }
+        if measure_overhead:
+            # identical window against a metrics-off twin: the QPS delta is
+            # the whole observability bill (acceptance bound: <= 5%)
+            svc2, dt2, _ = _measured_service(db, pool, queries,
+                                             engine=engine, metrics=False,
+                                             **common)
+            n_q2 = len(svc2.latencies_ms) or s["n_queries"]
+            svc2.close()
+            qps_off = n_q2 / dt2 if dt2 > 0 else 0.0
+            row["qps_metrics_off"] = round(qps_off, 1)
+            row["overhead_frac"] = (
+                round(max(0.0, 1.0 - achieved_qps / qps_off), 4)
+                if qps_off > 0 else None)
+        rows.append(row)
+        print(f"[serve-slo] {row['name']}: p99={p99}ms "
+              f"(SLO {slo_p99_ms}ms -> {'OK' if row['slo_ok'] else 'FAIL'}) "
+              f"qps={row['achieved_qps']}"
+              + (f" overhead={row.get('overhead_frac')}"
+                 if measure_overhead else ""))
+    sfx = suffix if suffix is not None else (
+        "" if backend in (None, "jnp") else f"_{backend}")
+    emit(f"serve_slo{sfx}", rows)
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--backend", default="jnp",
@@ -154,7 +317,54 @@ def main():
                     help=f"sweep the durability axis {WAL_MODES} (WAL into "
                          "a temp dir; p99 delta fsync-per-ack vs group "
                          "commit vs in-memory)")
+    ap.add_argument("--slo", action="store_true",
+                    help="SLO-tracking mode: load loop + per-phase registry "
+                         "breakdown + hard p99 verdict (exit non-zero on "
+                         "violation)")
+    ap.add_argument("--loop", default="closed", choices=["closed", "open"],
+                    help="SLO mode: closed = back-to-back (capacity), open "
+                         "= wall-clock paced to --target-qps (queueing "
+                         "visible when the service falls behind)")
+    ap.add_argument("--target-qps", type=float, default=None,
+                    help="SLO mode, open loop: arrival rate to pace to")
+    ap.add_argument("--slo-p99-ms", type=float, default=50.0,
+                    help="SLO mode: request-latency p99 bound (ms)")
+    ap.add_argument("--measure-overhead", action="store_true",
+                    help="SLO mode: replay the window against a "
+                         "metrics=False twin and report overhead_frac")
+    ap.add_argument("--overhead-budget", type=float, default=None,
+                    help="SLO mode: fail when overhead_frac exceeds this "
+                         "(the acceptance bound is 0.05)")
+    ap.add_argument("--residency", default="device",
+                    choices=["device", "tiered"])
+    ap.add_argument("--tier-chunk-rows", type=int, default=None)
+    ap.add_argument("--tier-chunk", type=int, default=None)
     args = ap.parse_args()
+    if args.slo:
+        if args.loop == "open" and not args.target_qps:
+            ap.error("--loop open requires --target-qps")
+        rows = run_slo(n_db=args.n_db, n_ops=args.ops, k=args.k,
+                       backend=args.backend,
+                       engines=tuple(args.engines.split(",")),
+                       write_ratio=(args.write_ratio
+                                    if args.write_ratio is not None
+                                    else 0.01),
+                       flush_every=args.flush_every, loop=args.loop,
+                       target_qps=args.target_qps,
+                       slo_p99_ms=args.slo_p99_ms,
+                       measure_overhead=(args.measure_overhead
+                                         or args.overhead_budget is not None),
+                       residency=args.residency,
+                       tier_chunk_rows=args.tier_chunk_rows,
+                       tier_chunk=args.tier_chunk)
+        bad = [r["name"] for r in rows if not r["slo_ok"]]
+        if args.overhead_budget is not None:
+            bad += [f"{r['name']} (overhead {r['overhead_frac']} > "
+                    f"{args.overhead_budget})" for r in rows
+                    if (r.get("overhead_frac") or 0) > args.overhead_budget]
+        if bad:
+            raise SystemExit(f"SLO violated: {bad}")
+        return
     ratios = (args.write_ratio,) if args.write_ratio is not None \
         else WRITE_RATIOS
     rows = run(n_db=args.n_db, n_ops=args.ops, k=args.k,

@@ -67,6 +67,7 @@ import numpy as np
 from . import bitbound as bb
 from . import folding as fl
 from . import hnsw as hn
+from ..obs.trace import TRACER as _TR
 from .distributed import merge_shard_topk, shard_devices
 from .fingerprints import popcount, tanimoto_scores, batched_tanimoto_scores
 from .topk import merge_sorted, streaming_topk
@@ -387,19 +388,38 @@ class BruteForceEngine(SearchEngine):
         nq = q.shape[0]
         run_vals = jnp.full((nq, k), -jnp.inf, jnp.float32)
         run_ids = jnp.full((nq, k), -1, jnp.int32)
+        # tracing (ISSUE 8): each host->HBM transfer is a flow span on the
+        # "h2d-stream" track from dispatch to observed-ready; with tracing
+        # on, each chunk's scan additionally syncs so its span carries real
+        # device time — chunk i's scan span then visibly overlaps chunk
+        # i+1's device_put span in Perfetto (dispatched before the scan).
+        traced = _TR.enabled
         t0 = time.perf_counter()
         stall = 0.0
+        put_h = _TR.begin("tier.device_put", track="h2d-stream", chunk=0)
         staged = jax.device_put(db_np[:r])
         for c in range(n_chunks):
-            cur = staged
+            cur, cur_h = staged, put_h
             if c + 1 < n_chunks:
+                put_h = _TR.begin("tier.device_put", track="h2d-stream",
+                                  chunk=c + 1)
                 staged = jax.device_put(db_np[(c + 1) * r:(c + 2) * r])
             ts = time.perf_counter()
             jax.block_until_ready(cur)
-            stall += time.perf_counter() - ts
-            ids_c, vals_c = sfn(q, cur)
-            run_vals, run_ids = mfn(run_vals, run_ids, vals_c, ids_c,
-                                    jnp.int32(c * r))
+            te = time.perf_counter()
+            stall += te - ts
+            cur_h.end()
+            if traced:
+                _TR.emit("tier.stall", ts, te, chunk=c)
+                with _TR.span("tier.scan_chunk", chunk=c, rows=r):
+                    ids_c, vals_c = sfn(q, cur)
+                    run_vals, run_ids = mfn(run_vals, run_ids, vals_c, ids_c,
+                                            jnp.int32(c * r))
+                    jax.block_until_ready(run_vals)  # tracing-only sync
+            else:
+                ids_c, vals_c = sfn(q, cur)
+                run_vals, run_ids = mfn(run_vals, run_ids, vals_c, ids_c,
+                                        jnp.int32(c * r))
         jax.block_until_ready(run_vals)
         total = time.perf_counter() - t0
         self.stats.update(
@@ -976,19 +996,41 @@ class BitBoundFoldingEngine(SearchEngine):
 
         run_vals = jnp.full((nq, k), -jnp.inf, jnp.float32)
         run_ids = jnp.full((nq, k), -1, jnp.int32)
+        # tracing (ISSUE 8): same span scheme as the brute tiered scan —
+        # "tier.device_put" flow spans on the h2d-stream track (dispatch ->
+        # observed-ready), per-chunk "tier.host_gather" / "tier.rescore"
+        # stack spans, with a tracing-only sync so rescore spans carry real
+        # device time and chunk i+1's transfer visibly overlaps chunk i.
+        traced = _TR.enabled
         stall = 0.0
         t_all = time.perf_counter()
-        staged = jax.device_put(host_chunk(0))
+        put_h = _TR.begin("tier.device_put", track="h2d-stream", chunk=0)
+        with _TR.span("tier.host_gather", chunk=0):
+            first = host_chunk(0)
+        staged = jax.device_put(first)
         for c in range(n_chunks):
-            cur = staged
+            cur, cur_h = staged, put_h
             if c + 1 < n_chunks:
-                staged = jax.device_put(host_chunk(c + 1))
+                put_h = _TR.begin("tier.device_put", track="h2d-stream",
+                                  chunk=c + 1)
+                with _TR.span("tier.host_gather", chunk=c + 1):
+                    nxt = host_chunk(c + 1)
+                staged = jax.device_put(nxt)
             ts = time.perf_counter()
             jax.block_until_ready(cur)
-            stall += time.perf_counter() - ts
+            te = time.perf_counter()
+            stall += te - ts
+            cur_h.end()
             rows_c, v_c, g_c = cur
-            run_vals, run_ids = rfn(queries, rows_c, v_c, g_c,
-                                    run_vals, run_ids)
+            if traced:
+                _TR.emit("tier.stall", ts, te, chunk=c)
+                with _TR.span("tier.rescore", chunk=c, cols=C):
+                    run_vals, run_ids = rfn(queries, rows_c, v_c, g_c,
+                                            run_vals, run_ids)
+                    jax.block_until_ready(run_vals)  # tracing-only sync
+            else:
+                run_vals, run_ids = rfn(queries, rows_c, v_c, g_c,
+                                        run_vals, run_ids)
         jax.block_until_ready(run_vals)
         total = time.perf_counter() - t_all
         words = self._full_np.shape[1]
@@ -1047,18 +1089,21 @@ class BitBoundFoldingEngine(SearchEngine):
                  state["capacity"]),
                 lambda: self._build_tiered_candidates(bucket, k,
                                                       delta_bucket))
-            if dd is None:
-                safe_m, gids, valid = cfn(queries, lo_j, hi_j, self.folded,
-                                          self.folded_cnt, self.order)
-                is_d = d_slot = None
-                extra = 0
-            else:
-                safe_m, gids, valid, is_d, d_slot = cfn(
-                    queries, lo_j, hi_j, self.folded, self.folded_cnt,
-                    self.full_cnt, self.order, dd["folded"], dd["cnt"],
-                    dd["folded_cnt"], jnp.asarray(ok_np),
-                    jnp.int32(self.store.n_main))
-                extra = int(ok_np.sum())
+            with _TR.span("bitbound.stage1", bucket=int(bucket),
+                          tiered=True):
+                if dd is None:
+                    safe_m, gids, valid = cfn(queries, lo_j, hi_j,
+                                              self.folded, self.folded_cnt,
+                                              self.order)
+                    is_d = d_slot = None
+                    extra = 0
+                else:
+                    safe_m, gids, valid, is_d, d_slot = cfn(
+                        queries, lo_j, hi_j, self.folded, self.folded_cnt,
+                        self.full_cnt, self.order, dd["folded"], dd["cnt"],
+                        dd["folded_cnt"], jnp.asarray(ok_np),
+                        jnp.int32(self.store.n_main))
+                    extra = int(ok_np.sum())
             ids, sims = self._tiered_rescore(queries, k, safe_m, gids,
                                              valid, is_d, d_slot)
             scanned = int(np.maximum(hi - lo, 0).sum()) + extra
@@ -1067,17 +1112,20 @@ class BitBoundFoldingEngine(SearchEngine):
         fn = self._cached(
             (bucket, int(k), delta_bucket, state["capacity"]),
             lambda: self._build_device_search(bucket, k, delta_bucket))
-        if dd is None:
-            ids, sims, scanned = fn(queries, lo_j, hi_j, self.folded,
-                                    self.folded_cnt, self.full, self.full_cnt,
-                                    self.order)
-        else:
-            ids, sims, scanned = fn(queries, lo_j, hi_j, self.folded,
-                                    self.folded_cnt, self.full, self.full_cnt,
-                                    self.order, dd["full"], dd["folded"],
-                                    dd["cnt"], dd["folded_cnt"],
-                                    jnp.asarray(ok_np),
-                                    jnp.int32(self.store.n_main))
+        with _TR.span("bitbound.pipeline", bucket=int(bucket),
+                      delta_bucket=int(delta_bucket)):
+            if dd is None:
+                ids, sims, scanned = fn(queries, lo_j, hi_j, self.folded,
+                                        self.folded_cnt, self.full,
+                                        self.full_cnt, self.order)
+            else:
+                ids, sims, scanned = fn(queries, lo_j, hi_j, self.folded,
+                                        self.folded_cnt, self.full,
+                                        self.full_cnt, self.order,
+                                        dd["full"], dd["folded"],
+                                        dd["cnt"], dd["folded_cnt"],
+                                        jnp.asarray(ok_np),
+                                        jnp.int32(self.store.n_main))
         self._record_batch(scanned, queries.shape[0])
         return ids, sims, scanned
 
@@ -1432,11 +1480,7 @@ class HNSWEngine(SearchEngine):
             "backend": self.backend,
             "layout": self.layout,
             "shards": n_shards,
-            "iters": int(iters.sum()),
-            "expansions": int(expans.sum()),
-            "neighbour_evals": int(expans.sum()) * m2,
-            "converged": int((reason == hn.REASON_CONVERGED).sum()),
-            "max_iters_hit": int((reason == hn.REASON_MAX_ITERS).sum()),
+            **hn.stats_summary(iters, expans, reason, m2),
             "iters_per_query": iters.sum(axis=0),
             "expansions_per_query": expans.sum(axis=0),
             "per_shard": [{"iters": int(i.sum()), "expansions": int(e.sum())}
@@ -1448,41 +1492,51 @@ class HNSWEngine(SearchEngine):
                beam: int | None = None):
         ef = ef or self.ef_search
         beam = beam or self.beam
-        if self.shards is not None:
-            return self._search_sharded(queries, k, ef, beam)
-        m2 = self.index.base_adj.shape[1]
-        if self.backend == "numpy":
-            ids, sims, ctr = hn.search_hnsw_numpy(self.index,
-                                                  np.asarray(queries), k, ef)
-            self._record_batch(ctr["evals"], len(queries))
-            self.stats = {"backend": "numpy", "iters": ctr["iters"],
-                          "expansions": ctr["iters"],
-                          "neighbour_evals": ctr["evals"]}
+        # the span folds the traversal's TraversalStats totals into its args
+        # via span.set() before closing (no-op when tracing is disabled)
+        with _TR.span("hnsw.search", backend=self.backend, ef=int(ef),
+                      shards=self.shards or 1) as sp:
+            if self.shards is not None:
+                ids, sims = self._search_sharded(queries, k, ef, beam)
+                sp.set(**{kk: self.stats[kk]
+                          for kk in ("iters", "expansions", "neighbour_evals")
+                          if kk in self.stats})
+                return ids, sims
+            m2 = self.index.base_adj.shape[1]
+            if self.backend == "numpy":
+                ids, sims, ctr = hn.search_hnsw_numpy(
+                    self.index, np.asarray(queries), k, ef)
+                self._record_batch(ctr["evals"], len(queries))
+                self.stats = {"backend": "numpy", "iters": ctr["iters"],
+                              "expansions": ctr["iters"],
+                              "neighbour_evals": ctr["evals"]}
+                sp.set(iters=ctr["iters"], neighbour_evals=ctr["evals"])
+                return ids, sims
+            if self._graph_dirty:
+                self._refresh_graph()
+            fn = self._device_search(k, ef, beam, self._graph.max_level)
+            g = self._graph
+            ids, sims, tstats = fn(jnp.asarray(queries), g.db, g.db_popcount,
+                                   g.base_adj, g.upper_adj, g.entry_point,
+                                   g.nbr_fps, g.nbr_cnt)
+            iters = np.asarray(tstats.iters)
+            expans = np.asarray(tstats.expansions)
+            # each expanded candidate gathers and scores <= 2M neighbour
+            # slots
+            self._record_batch(int(expans.sum()) * m2, iters.shape[0])
+            self.stats = {
+                "backend": self.backend,
+                "layout": self.layout,
+                **hn.stats_summary(iters, expans, tstats.reason, m2),
+                "iters_per_query": iters,
+                "expansions_per_query": expans,
+            }
+            sp.set(iters=self.stats["iters"],
+                   expansions=self.stats["expansions"],
+                   neighbour_evals=self.stats["neighbour_evals"],
+                   converged=self.stats["converged"],
+                   max_iters_hit=self.stats["max_iters_hit"])
             return ids, sims
-        if self._graph_dirty:
-            self._refresh_graph()
-        fn = self._device_search(k, ef, beam, self._graph.max_level)
-        g = self._graph
-        ids, sims, tstats = fn(jnp.asarray(queries), g.db, g.db_popcount,
-                               g.base_adj, g.upper_adj, g.entry_point,
-                               g.nbr_fps, g.nbr_cnt)
-        iters = np.asarray(tstats.iters)
-        expans = np.asarray(tstats.expansions)
-        reason = np.asarray(tstats.reason)
-        # each expanded candidate gathers and scores <= 2M neighbour slots
-        self._record_batch(int(expans.sum()) * m2, iters.shape[0])
-        self.stats = {
-            "backend": self.backend,
-            "layout": self.layout,
-            "iters": int(iters.sum()),
-            "expansions": int(expans.sum()),
-            "neighbour_evals": int(expans.sum()) * m2,
-            "converged": int((reason == hn.REASON_CONVERGED).sum()),
-            "max_iters_hit": int((reason == hn.REASON_MAX_ITERS).sum()),
-            "iters_per_query": iters,
-            "expansions_per_query": expans,
-        }
-        return np.asarray(ids), np.asarray(sims)
 
 
 def recall_at_k(pred_ids: np.ndarray, true_ids: np.ndarray) -> float:

@@ -618,6 +618,24 @@ class TraversalStats(NamedTuple):
     reason: jax.Array       # (Q,) int32 — REASON_CONVERGED / REASON_MAX_ITERS
 
 
+def stats_summary(iters, expansions, reason, m2: int) -> dict:
+    """Fold (already stacked/summed-ready) per-query traversal telemetry
+    into the scalar totals dict shared by :attr:`HNSWEngine.stats` and the
+    ``hnsw.search`` trace-span args (ISSUE 8): iteration/expansion totals,
+    neighbour evaluations (``expansions * 2M``) and termination-reason
+    counts. Accepts device arrays or numpy; always returns plain ints."""
+    iters = np.asarray(iters)
+    expansions = np.asarray(expansions)
+    reason = np.asarray(reason)
+    return {
+        "iters": int(iters.sum()),
+        "expansions": int(expansions.sum()),
+        "neighbour_evals": int(expansions.sum()) * int(m2),
+        "converged": int((reason == REASON_CONVERGED).sum()),
+        "max_iters_hit": int((reason == REASON_MAX_ITERS).sum()),
+    }
+
+
 def search_hnsw(g: HNSWDeviceGraph, queries: jax.Array, k: int, ef: int,
                 max_iters: int | None = None, beam: int = 1, score_fn=None,
                 expand_fn=None):

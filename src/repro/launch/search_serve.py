@@ -134,6 +134,10 @@ def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
                   hnsw_shards: int | None = None,
                   durable_dir: str | None = None, snapshot_every: int = 0,
                   resume: bool = False, residency: str = "device",
+                  tier_chunk_rows: int | None = None,
+                  tier_chunk: int | None = None,
+                  metrics_out: str | None = None,
+                  trace_out: str | None = None,
                   log=print):
     """Drive a :class:`SearchService` with a mixed insert+query workload and
     report the serving telemetry. Returns the service summary dict.
@@ -143,9 +147,21 @@ def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
     ``snapshot_every`` writes a full-state snapshot every N inserts;
     ``resume`` warm-restarts from an existing durable directory via
     :meth:`SearchService.open` instead of building the engines from the
-    synthetic database (EXPERIMENTS.md §Durability runbook)."""
+    synthetic database (EXPERIMENTS.md §Durability runbook).
+
+    ``metrics_out`` exports the service metrics registry as JSONL (plus a
+    Prometheus text twin at ``<path>.prom``); ``trace_out`` enables the
+    process-wide span tracer and writes Chrome trace-event JSON — open it in
+    Perfetto to see queue wait, batch formation, per-engine search, tiered
+    double-buffer chunk streams and WAL fsyncs (EXPERIMENTS.md
+    §Observability runbook). ``tier_chunk_rows`` / ``tier_chunk`` shrink the
+    tiered streaming chunks to force multi-chunk captures."""
+    from ..obs.trace import TRACER
     from ..serve.service import SearchService
 
+    if trace_out:
+        TRACER.clear()
+        TRACER.configure(enabled=True)
     db = synthetic_fingerprints(SyntheticConfig(n=n_db))
     pool = synthetic_fingerprints(SyntheticConfig(n=max(n_ops, 64), seed=7))
     queries = queries_from_db(db, min(n_db, 512))
@@ -166,7 +182,9 @@ def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
                             fold_m=CHEMBL_LIKE.folding_m,
                             compact_threshold=compact_threshold,
                             hnsw_layout=hnsw_layout, hnsw_shards=hnsw_shards,
-                            durable_dir=durable_dir, residency=residency)
+                            durable_dir=durable_dir, residency=residency,
+                            tier_chunk_rows=tier_chunk_rows,
+                            tier_chunk=tier_chunk)
     ops = make_workload(n_ops, write_ratio, pool, queries)
     enames = list(svc.engines)
     since_flush = 0
@@ -199,6 +217,18 @@ def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
             f"(resume with --engine service --resume --durable-dir "
             f"{durable_dir})")
     svc.close()
+    if metrics_out:
+        svc.metrics.export_jsonl(metrics_out, ts=time.time())
+        with open(str(metrics_out) + ".prom", "w") as f:
+            f.write(svc.metrics.render_prometheus())
+        log(f"[search-serve] metrics -> {metrics_out} "
+            f"(+ {metrics_out}.prom)")
+    if trace_out:
+        TRACER.export_chrome(trace_out)
+        log(f"[search-serve] trace -> {trace_out} "
+            f"({len(TRACER.events)} events, {TRACER.dropped_events} dropped;"
+            f" open in https://ui.perfetto.dev)")
+        TRACER.configure(enabled=False)
     return s
 
 
@@ -247,6 +277,19 @@ def main():
                          "engines: HBM-resident, or host-resident with "
                          "double-buffered streaming rescore (breaks the "
                          "single-device HBM capacity ceiling)")
+    ap.add_argument("--tier-chunk-rows", type=int, default=None,
+                    help="service mode, tiered residency: rows per streamed "
+                         "chunk for the brute engine (smaller forces more "
+                         "chunks through the double buffer)")
+    ap.add_argument("--tier-chunk", type=int, default=None,
+                    help="service mode, tiered residency: candidate columns "
+                         "per streamed rescore chunk (bitbound engine)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="service mode: export the metrics registry as JSONL "
+                         "here (a Prometheus text twin lands at <path>.prom)")
+    ap.add_argument("--trace-out", default=None,
+                    help="service mode: enable span tracing and write Chrome "
+                         "trace-event JSON here (view in Perfetto)")
     args = ap.parse_args()
     if args.engine == "service":
         serve_service(engines=tuple(args.service_engines.split(",")),
@@ -256,7 +299,11 @@ def main():
                       hnsw_layout=args.hnsw_layout, hnsw_shards=args.shards,
                       durable_dir=args.durable_dir,
                       snapshot_every=args.snapshot_every,
-                      resume=args.resume, residency=args.residency)
+                      resume=args.resume, residency=args.residency,
+                      tier_chunk_rows=args.tier_chunk_rows,
+                      tier_chunk=args.tier_chunk,
+                      metrics_out=args.metrics_out,
+                      trace_out=args.trace_out)
     else:
         serve(args.engine, n_db=args.n_db, k=args.k,
               n_queries=args.n_queries, use_kernel=args.use_kernel,

@@ -1,0 +1,159 @@
+"""Schema validation for the observability artifacts (ISSUE 8 satellite).
+
+Two validators, both returning a (possibly empty) list of human-readable
+error strings — empty means valid:
+
+* :func:`validate_trace` — Chrome trace-event JSON as exported by
+  :meth:`repro.obs.trace.Tracer.export_chrome` (and accepted by Perfetto).
+* :func:`validate_metrics_jsonl` — the registry's JSONL export, including
+  the required-family floor (:data:`REQUIRED_METRIC_FAMILIES`): a serving
+  run that silently stopped exporting request latencies must fail CI, not
+  produce an empty dashboard.
+
+``benchmarks/check_obs_schema.py`` is the CLI wrapper CI runs.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+#: metric families every SearchService export must contain (the serving
+#: dashboards and the SLO harness key on these)
+REQUIRED_METRIC_FAMILIES = (
+    "service_queries_total",
+    "service_request_latency_ms",
+    "service_scanned_total",
+)
+
+#: Chrome trace-event phases we emit / accept
+TRACE_PHASES = {"X", "M", "B", "E", "b", "e", "i", "C"}
+
+
+def validate_trace(obj, *, require_spans: tuple = ()) -> list[str]:
+    """Validate a parsed Chrome trace (dict with ``traceEvents`` or a bare
+    event list). ``require_spans`` additionally demands at least one "X"
+    event per named span (e.g. ``("tier.device_put",)`` for the tiered
+    double-buffer capture)."""
+    errors: list[str] = []
+    if isinstance(obj, dict):
+        events = obj.get("traceEvents")
+        if not isinstance(events, list):
+            return ["top-level dict has no traceEvents list"]
+    elif isinstance(obj, list):
+        events = obj
+    else:
+        return [f"trace must be a dict or list, got {type(obj).__name__}"]
+    if not events:
+        errors.append("trace has no events")
+    seen = set()
+    for i, ev in enumerate(events):
+        where = f"event[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        for key in ("name", "ph", "pid", "tid", "ts"):
+            if key not in ev:
+                errors.append(f"{where}: missing {key!r}")
+        name, ph = ev.get("name"), ev.get("ph")
+        if not isinstance(name, str) or not name:
+            errors.append(f"{where}: name must be a non-empty string")
+        if ph not in TRACE_PHASES:
+            errors.append(f"{where}: unknown phase {ph!r}")
+        for key in ("ts", "dur"):
+            if key in ev and not isinstance(ev[key], (int, float)):
+                errors.append(f"{where}: {key} not numeric")
+        if ph == "X":
+            if "dur" not in ev:
+                errors.append(f"{where}: complete event missing dur")
+            elif isinstance(ev["dur"], (int, float)) and ev["dur"] < 0:
+                errors.append(f"{where}: negative dur")
+            seen.add(name)
+            parent = (ev.get("args") or {}).get("parent")
+            if parent is not None and not isinstance(parent, str):
+                errors.append(f"{where}: args.parent not a string")
+    for name in require_spans:
+        if name not in seen:
+            errors.append(f"required span {name!r} not present in trace")
+    return errors
+
+
+def validate_trace_file(path, *, require_spans: tuple = ()) -> list[str]:
+    try:
+        obj = json.loads(Path(path).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable trace JSON ({e})"]
+    return validate_trace(obj, require_spans=require_spans)
+
+
+def _validate_metric_row(row: dict, where: str) -> list[str]:
+    errors = []
+    for key in ("name", "type", "labels"):
+        if key not in row:
+            errors.append(f"{where}: missing {key!r}")
+    kind = row.get("type")
+    if kind not in ("counter", "gauge", "histogram"):
+        errors.append(f"{where}: unknown type {kind!r}")
+    if not isinstance(row.get("labels", {}), dict):
+        errors.append(f"{where}: labels must be an object")
+    if kind in ("counter", "gauge"):
+        if not isinstance(row.get("value"), (int, float)):
+            errors.append(f"{where}: {kind} missing numeric value")
+    elif kind == "histogram":
+        for key in ("count", "sum"):
+            if not isinstance(row.get(key), (int, float)):
+                errors.append(f"{where}: histogram missing numeric {key!r}")
+        buckets = row.get("buckets")
+        if not isinstance(buckets, dict):
+            errors.append(f"{where}: histogram missing buckets object")
+        else:
+            n_in_buckets = 0
+            for le, n in buckets.items():
+                try:
+                    float(le)
+                except ValueError:
+                    if le not in ("inf", "+Inf"):
+                        errors.append(f"{where}: bucket edge {le!r} "
+                                      f"not numeric")
+                if not isinstance(n, int) or n < 0:
+                    errors.append(f"{where}: bucket count {n!r} invalid")
+                else:
+                    n_in_buckets += n
+            if isinstance(row.get("count"), int) \
+                    and n_in_buckets != row["count"]:
+                errors.append(f"{where}: bucket counts sum to "
+                              f"{n_in_buckets} != count {row['count']}")
+    return errors
+
+
+def validate_metrics_jsonl(path, *, require_families: tuple | None = None
+                           ) -> list[str]:
+    """Validate a registry JSONL export; ``require_families=None`` applies
+    :data:`REQUIRED_METRIC_FAMILIES`, ``()`` disables the floor."""
+    if require_families is None:
+        require_families = REQUIRED_METRIC_FAMILIES
+    try:
+        text = Path(path).read_text()
+    except OSError as e:
+        return [f"{path}: unreadable ({e})"]
+    errors: list[str] = []
+    seen: set[str] = set()
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    if not lines:
+        errors.append(f"{path}: empty metrics export")
+    for i, line in enumerate(lines):
+        where = f"line {i + 1}"
+        try:
+            row = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"{where}: invalid JSON ({e})")
+            continue
+        if not isinstance(row, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        errors.extend(_validate_metric_row(row, where))
+        if isinstance(row.get("name"), str):
+            seen.add(row["name"])
+    for fam in require_families:
+        if fam not in seen:
+            errors.append(f"required metric family {fam!r} missing")
+    return errors

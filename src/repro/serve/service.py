@@ -21,7 +21,16 @@ that host for the TPU engines:
   (``tests/test_insert_parity.py`` / ``tests/test_service.py``).
 * **telemetry** — per-request latency (submit -> flush completion),
   p50/p99/QPS, batch-bucket histogram, per-engine scanned counters and
-  compaction counts (:meth:`summary`).
+  compaction counts (:meth:`summary`). Since ISSUE 8 the backing store is a
+  :class:`repro.obs.metrics.MetricsRegistry` (:attr:`metrics`) — bounded
+  log-bucketed latency histograms and labeled counters/gauges with
+  Prometheus/JSONL exposition — plus structured trace spans through
+  ``repro.obs.trace.TRACER`` (queue wait, batch formation, per-engine
+  search, WAL append, snapshot writes; Chrome trace-event export for
+  Perfetto). ``latencies_ms`` / ``batches`` remain as *bounded* recent
+  windows (``TELEMETRY_WINDOW``) so sustained load cannot grow host memory;
+  ``summary()`` keys are unchanged and always present (``None`` percentiles
+  on a write-only run).
 
 The service is synchronous and deterministic by design (no threads): a
 driver loop decides when to flush, which keeps parity tests and benchmark
@@ -34,7 +43,7 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import Counter
+from collections import Counter, deque
 from dataclasses import dataclass
 from pathlib import Path
 
@@ -44,6 +53,8 @@ from ..checkpoint import manager as ckpt
 from ..checkpoint.fs import DEFAULT_FS, Fs
 from ..core.engine import (BitBoundFoldingEngine, BruteForceEngine,
                            HNSWEngine)
+from ..obs.metrics import MetricsRegistry, NULL_METRICS
+from ..obs.trace import TRACER as _TR
 from . import snapshot as snap
 from . import wal as wal_mod
 from .store import next_pow2
@@ -77,7 +88,16 @@ class ServiceConfig:
     hnsw_shards: int | None = None  # fan-out HNSW over N per-device shards
     residency: str = "device"    # "tiered" = host-resident full rows,
     #   double-buffered host->HBM streaming rescore (store-backed engines)
+    tier_chunk_rows: int | None = None  # brute tiered: rows per streamed
+    #   chunk (None = engine default); small values force multi-chunk
+    #   streams for tests / trace captures
+    tier_chunk: int | None = None       # bitbound tiered: candidate columns
+    #   per streamed rescore chunk (None = engine default)
     seed: int = 0
+    # --- observability (ISSUE 8; docs/ARCHITECTURE.md §Observability) ---
+    metrics: bool = True         # False = NULL_METRICS no-op registry (the
+    #   serve_load overhead A/B baseline); summary() falls back to the
+    #   bounded recent-window deque for percentiles
     # --- durability (ISSUE 6; docs/ARCHITECTURE.md §On-disk format) ---
     durable_dir: str | None = None  # snapshots/ + wal/ live here; None = RAM
     wal_fsync_every: int = 1     # 1 = fsync per ack; N = group commit (the
@@ -91,6 +111,11 @@ class SearchService:
     #: completed-but-unredeemed results kept before FIFO eviction — bounds
     #: memory for drivers that consume flush() returns and never result()
     RESULT_BUFFER = 1024
+
+    #: recent-window bound for the legacy ``latencies_ms`` / ``batches``
+    #: telemetry views — under sustained load they are rolling windows, not
+    #: append-only lists; full-run aggregates live in :attr:`metrics`
+    TELEMETRY_WINDOW = 4096
 
     def __init__(self, db, engines=("bitbound-folding",),
                  config: ServiceConfig | None = None,
@@ -117,15 +142,63 @@ class SearchService:
             self._attach_durable_dir(fresh=True)
 
     def reset_telemetry(self) -> None:
-        """Zero the telemetry counters (engines and their compile caches are
-        untouched). Benchmarks call this between warmup and timed windows."""
-        self.latencies_ms: list[float] = []
-        self.batches: list[dict] = []
+        """Zero the telemetry counters and the metrics registry (engines and
+        their compile caches are untouched). Benchmarks call this between
+        warmup and timed windows."""
+        if not hasattr(self, "metrics"):
+            self._init_metrics()
+        self.metrics.reset()
+        # bounded recent windows (back-compat views; see TELEMETRY_WINDOW)
+        self.latencies_ms: deque = deque(maxlen=self.TELEMETRY_WINDOW)
+        self.batches: deque = deque(maxlen=self.TELEMETRY_WINDOW)
+        self._batch_buckets: Counter = Counter()   # full-run, O(log batch)
         self.scanned_total: Counter = Counter()
         self.n_queries = 0
         self.n_inserts = 0
         self.search_time = 0.0
         self.insert_time = 0.0
+
+    def _init_metrics(self) -> None:
+        """Declare the service metric families (ISSUE 8). Families are
+        stable across :meth:`reset_telemetry`; only the values reset.
+        ``ServiceConfig.metrics=False`` swaps in the no-op registry."""
+        self.metrics = (MetricsRegistry() if self.config.metrics
+                        else NULL_METRICS)
+        m = self.metrics
+        self._m_queries = m.counter(
+            "service_queries_total", "queries completed", labels=("engine",))
+        self._m_inserts = m.counter(
+            "service_inserts_total", "fingerprint rows inserted")
+        self._m_scanned = m.counter(
+            "service_scanned_total", "candidates scored", labels=("engine",))
+        self._m_batches = m.counter(
+            "service_batches_total", "engine flush batches",
+            labels=("engine", "bucket"))
+        self._m_req_lat = m.histogram(
+            "service_request_latency_ms", "submit -> flush completion",
+            labels=("engine",))
+        self._m_queue_wait = m.histogram(
+            "service_queue_wait_ms", "submit -> batch formation",
+            labels=("engine",))
+        self._m_batch_ms = m.histogram(
+            "service_engine_batch_ms", "one (engine, k) flush group",
+            labels=("engine",))
+        self._m_insert_ms = m.histogram(
+            "service_insert_ms", "insert broadcast incl. WAL")
+        self._m_wal_ms = m.histogram(
+            "service_wal_append_ms", "WAL append+fsync before ack")
+        self._m_compactions = m.gauge(
+            "service_compactions", "store compactions to date")
+        self._m_tier_stall = m.gauge(
+            "service_tiered_stall_seconds",
+            "double-buffer stall in the last tiered search",
+            labels=("engine",))
+        self._m_tier_chunks = m.gauge(
+            "service_tiered_chunks",
+            "chunks streamed in the last tiered search", labels=("engine",))
+        self._m_tier_stall_frac = m.gauge(
+            "service_tiered_stall_fraction",
+            "stall fraction of the last tiered search", labels=("engine",))
 
     def _engine_kwargs(self, name: str) -> dict:
         """ServiceConfig -> engine constructor knobs (shared by fresh builds
@@ -134,13 +207,19 @@ class SearchService:
         if name == "brute":
             # brute has no host reference path; map "numpy" to the jnp path
             be = cfg.backend if cfg.backend in ("jnp", "tpu") else None
-            return dict(backend=be, compact_threshold=cfg.compact_threshold,
-                        residency=cfg.residency)
+            kw = dict(backend=be, compact_threshold=cfg.compact_threshold,
+                      residency=cfg.residency)
+            if cfg.tier_chunk_rows is not None:
+                kw["tier_chunk_rows"] = cfg.tier_chunk_rows
+            return kw
         if name == "bitbound-folding":
-            return dict(cutoff=cfg.cutoff, m=cfg.fold_m,
-                        scheme=cfg.fold_scheme, backend=cfg.backend,
-                        compact_threshold=cfg.compact_threshold,
-                        residency=cfg.residency)
+            kw = dict(cutoff=cfg.cutoff, m=cfg.fold_m,
+                      scheme=cfg.fold_scheme, backend=cfg.backend,
+                      compact_threshold=cfg.compact_threshold,
+                      residency=cfg.residency)
+            if cfg.tier_chunk is not None:
+                kw["tier_chunk"] = cfg.tier_chunk
+            return kw
         if name == "hnsw":
             return dict(m=cfg.hnsw_m,
                         ef_construction=cfg.hnsw_ef_construction,
@@ -182,14 +261,21 @@ class SearchService:
         t0 = self.clock()
         fps = np.atleast_2d(np.asarray(fps, dtype=np.uint32))
         comp0 = self.compactions
-        if self._wal is not None and fps.shape[0]:
-            first_gid = next(iter(self.engines.values())).n_total
-            self._wal.append(first_gid, fps)
-        gids = self._apply_insert(fps)
-        if self._wal is not None and self.compactions != comp0:
-            self._wal.rotate()     # segment rotation on compaction
+        with _TR.span("service.insert", rows=int(fps.shape[0])):
+            if self._wal is not None and fps.shape[0]:
+                first_gid = next(iter(self.engines.values())).n_total
+                tw = self.clock()
+                self._wal.append(first_gid, fps)
+                self._m_wal_ms.observe((self.clock() - tw) * 1e3)
+            gids = self._apply_insert(fps)
+            if self._wal is not None and self.compactions != comp0:
+                self._wal.rotate()     # segment rotation on compaction
         self.n_inserts += fps.shape[0]
-        self.insert_time += self.clock() - t0
+        self._m_inserts.inc(fps.shape[0])
+        self._m_compactions.set(self.compactions)
+        dt = self.clock() - t0
+        self.insert_time += dt
+        self._m_insert_ms.observe(dt * 1e3)
         return gids
 
     # -- read path ----------------------------------------------------------
@@ -217,27 +303,47 @@ class SearchService:
         groups: dict[tuple, list[_Request]] = {}
         for r in pending:
             groups.setdefault((r.engine, r.k), []).append(r)
+        # queue-wait spans use the service clock; only a real wall clock
+        # shares a timeline with the tracer's perf_counter epoch
+        real_clock = self.clock is time.perf_counter
         for (ename, k), reqs in groups.items():
             eng = self.engines[ename]
             qs = np.concatenate([r.queries for r in reqs])
             n, w = qs.shape
             ids_parts, sims_parts = [], []
             t0 = self.clock()
-            off = 0
-            while off < n:
-                chunk = qs[off:off + self.config.max_batch]
-                bucket = next_pow2(chunk.shape[0])
-                padded = np.zeros((bucket, w), dtype=np.uint32)
-                padded[:chunk.shape[0]] = chunk
-                ids, sims = eng.search(padded, k)
-                ids_parts.append(np.asarray(ids)[:chunk.shape[0]])
-                sims_parts.append(np.asarray(sims)[:chunk.shape[0]])
-                self.batches.append({"engine": ename, "k": k,
-                                     "bucket": int(bucket),
-                                     "n": int(chunk.shape[0])})
-                self.scanned_total[ename] += eng.scanned(bucket)
-                off += chunk.shape[0]
-            self.search_time += self.clock() - t0
+            for r in reqs:
+                self._m_queue_wait.observe((t0 - r.t_submit) * 1e3,
+                                           engine=ename)
+                if _TR.enabled and real_clock:
+                    _TR.emit("service.queue_wait", r.t_submit, t0,
+                             track="queue", rid=r.rid, engine=ename)
+            with _TR.span("service.batch", engine=ename, k=int(k),
+                          n_queries=int(n), n_requests=len(reqs)):
+                off = 0
+                while off < n:
+                    chunk = qs[off:off + self.config.max_batch]
+                    bucket = next_pow2(chunk.shape[0])
+                    padded = np.zeros((bucket, w), dtype=np.uint32)
+                    padded[:chunk.shape[0]] = chunk
+                    with _TR.span("service.engine_search", engine=ename,
+                                  bucket=int(bucket)):
+                        ids, sims = eng.search(padded, k)
+                    ids_parts.append(np.asarray(ids)[:chunk.shape[0]])
+                    sims_parts.append(np.asarray(sims)[:chunk.shape[0]])
+                    self.batches.append({"engine": ename, "k": k,
+                                         "bucket": int(bucket),
+                                         "n": int(chunk.shape[0])})
+                    self._batch_buckets[int(bucket)] += 1
+                    self._m_batches.inc(engine=ename, bucket=int(bucket))
+                    sc = eng.scanned(bucket)
+                    self.scanned_total[ename] += sc
+                    self._m_scanned.inc(sc, engine=ename)
+                    self._fold_engine_stats(ename, eng)
+                    off += chunk.shape[0]
+            dt = self.clock() - t0
+            self.search_time += dt
+            self._m_batch_ms.observe(dt * 1e3, engine=ename)
             ids = np.concatenate(ids_parts)
             sims = np.concatenate(sims_parts)
             t_done = self.clock()
@@ -247,7 +353,10 @@ class SearchService:
                 done[r.rid] = (ids[off:off + nr], sims[off:off + nr])
                 off += nr
                 self.latencies_ms.append((t_done - r.t_submit) * 1e3)
+                self._m_req_lat.observe((t_done - r.t_submit) * 1e3,
+                                        engine=ename)
                 self.n_queries += nr
+                self._m_queries.inc(nr, engine=ename)
         self._results.update(done)
         # FIFO-evict beyond the buffer bound: callers that consume flush()'s
         # return and never result() must not leak arrays forever
@@ -333,9 +442,10 @@ class SearchService:
     def _write_snapshot(self, sid: int, arrays, meta) -> None:
         """Persist one extracted snapshot + retention prune + WAL GC (the
         serialization half of :meth:`snapshot`; runs on the serving thread
-        or the background writer)."""
-        ckpt.save_array_snapshot(self._snap_dir, sid, arrays, meta,
-                                 fs=self._fs, durable=True)
+        or the background writer — the trace span's tid shows which)."""
+        with _TR.span("snapshot.write", sid=int(sid)):
+            ckpt.save_array_snapshot(self._snap_dir, sid, arrays, meta,
+                                     fs=self._fs, durable=True)
         self._snap_id = sid
         steps = ckpt.snapshot_steps(self._snap_dir)
         for s in steps[:-max(self.config.snapshot_keep, 1)]:
@@ -440,6 +550,20 @@ class SearchService:
             self._wal.set_fs(fs)
 
     # -- telemetry ----------------------------------------------------------
+    def _fold_engine_stats(self, ename: str, eng) -> None:
+        """Fold the engine's per-batch ``stats`` dict into the registry —
+        tiered double-buffer telemetry becomes per-engine gauges so the
+        stream-stall cost is visible without scraping engine objects."""
+        st = getattr(eng, "stats", None)
+        if not st:
+            return
+        if st.get("residency") == "tiered":
+            self._m_tier_stall.set(st.get("tiered_stall_s", 0.0),
+                                   engine=ename)
+            self._m_tier_chunks.set(st.get("tiered_chunks", 0), engine=ename)
+            self._m_tier_stall_frac.set(st.get("tiered_stall_fraction", 0.0),
+                                        engine=ename)
+
     @property
     def compactions(self) -> int:
         return sum(eng.store.compactions for eng in self.engines.values()
@@ -456,7 +580,6 @@ class SearchService:
         return total
 
     def summary(self) -> dict:
-        lat = np.asarray(self.latencies_ms, dtype=np.float64)
         out = {
             "engines": {n: e.backend for n, e in self.engines.items()},
             "n_queries": int(self.n_queries),
@@ -466,12 +589,25 @@ class SearchService:
             "insert_time_s": round(self.insert_time, 4),
             "qps": round(self.n_queries / self.search_time, 1)
             if self.search_time > 0 else 0.0,
-            "batch_buckets": dict(Counter(b["bucket"] for b in self.batches)),
+            "batch_buckets": dict(self._batch_buckets),
             "scanned": {k: int(v) for k, v in self.scanned_total.items()},
         }
-        if lat.size:
-            out.update(
-                p50_ms=round(float(np.percentile(lat, 50)), 3),
-                p99_ms=round(float(np.percentile(lat, 99)), 3),
-                mean_ms=round(float(lat.mean()), 3))
+        # percentiles from the full-run registry histogram (exact mean,
+        # log-bucket quantile estimate); the no-op registry falls back to
+        # the bounded recent window. Keys are always present — a write-only
+        # run reports explicit nulls, never a KeyError downstream.
+        p50 = p99 = mean = None
+        if self.n_queries:
+            if self.metrics.enabled:
+                p50 = self._m_req_lat.quantile(0.5)
+                p99 = self._m_req_lat.quantile(0.99)
+                mean = self._m_req_lat.mean()
+            elif self.latencies_ms:
+                lat = np.asarray(self.latencies_ms, dtype=np.float64)
+                p50, p99 = (float(np.percentile(lat, q)) for q in (50, 99))
+                mean = float(lat.mean())
+        out.update(
+            p50_ms=round(p50, 3) if p50 is not None else None,
+            p99_ms=round(p99, 3) if p99 is not None else None,
+            mean_ms=round(mean, 3) if mean is not None else None)
         return out

@@ -34,6 +34,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..core import hnsw as hn
+from ..obs.trace import TRACER as _TR
 from ..core.engine import (BitBoundFoldingEngine, BruteForceEngine,
                            HNSWEngine)
 from .store import (MutableFingerprintStore, TieredFingerprintStore,
@@ -208,10 +209,13 @@ def service_state(svc):
     ``(arrays, meta)`` — the canonical state the round-trip tests compare."""
     from dataclasses import asdict
     arrays, engines_meta = {}, {}
-    for name, eng in svc.engines.items():
-        a, m_ = engine_state(eng)
-        arrays.update({f"{name}/{k}": v for k, v in a.items()})
-        engines_meta[name] = m_
+    # the COW extraction runs on the serving thread even for background
+    # snapshots — its span is the synchronous cost the request path pays
+    with _TR.span("snapshot.extract", engines=list(svc.engines)):
+        for name, eng in svc.engines.items():
+            a, m_ = engine_state(eng)
+            arrays.update({f"{name}/{k}": v for k, v in a.items()})
+            engines_meta[name] = m_
     cfg = asdict(svc.config)
     cfg.pop("durable_dir", None)       # bound at open(), not snapshot time
     meta = {

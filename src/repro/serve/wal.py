@@ -39,6 +39,7 @@ from pathlib import Path
 import numpy as np
 
 from ..checkpoint.fs import DEFAULT_FS, Fs
+from ..obs.trace import TRACER as _TR
 
 MAGIC = b"FPWAL001"
 _HEADER = struct.Struct("<8sI")            # magic, words-per-row
@@ -107,14 +108,18 @@ class WriteAheadLog:
         if rows.shape[1] != self.words:
             raise ValueError(f"row width {rows.shape[1]} != WAL width "
                              f"{self.words}")
-        self._f.write(_encode_record(first_gid, rows))
-        self._unsynced += 1
-        if self._unsynced >= self.fsync_every:
-            self.sync()
+        with _TR.span("wal.append", rows=int(rows.shape[0]),
+                      seq=int(self.seq)):
+            self._f.write(_encode_record(first_gid, rows))
+            self._unsynced += 1
+            if self._unsynced >= self.fsync_every:
+                self.sync()
 
     def sync(self) -> None:
         if self._f is not None and self._unsynced:
-            self._fs.fsync(self._f)
+            with _TR.span("wal.fsync", records=int(self._unsynced),
+                          seq=int(self.seq)):
+                self._fs.fsync(self._f)
             self._unsynced = 0
 
     def rotate(self) -> int:

@@ -1,0 +1,214 @@
+"""Observability primitives (ISSUE 8): metrics registry semantics
+(counters/gauges/log-bucketed histograms, quantile error bound, thread
+safety, Prometheus + JSONL exposition round-tripping through the schema
+validators) and trace spans (nesting/parent linkage, Chrome export shape,
+bounded buffer, and the allocation-free disabled fast path)."""
+import json
+import threading
+
+import pytest
+
+from repro.obs.metrics import (GROWTH, MetricsRegistry, NULL_METRICS,
+                               NullMetrics)
+from repro.obs.schema import (validate_metrics_jsonl, validate_trace,
+                              validate_trace_file)
+from repro.obs.trace import NULL_HANDLE, NULL_SPAN, Tracer
+
+
+# -- registry ---------------------------------------------------------------
+
+def test_counter_gauge_labels():
+    m = MetricsRegistry()
+    c = m.counter("q_total", "queries", labels=("engine",))
+    c.inc(engine="brute")
+    c.inc(3, engine="hnsw")
+    assert c.value(engine="brute") == 1
+    assert c.value(engine="hnsw") == 3
+    assert c.value(engine="never-touched") == 0
+    assert c.total() == 4
+    g = m.gauge("depth")
+    g.set(7)
+    g.set(2)                      # last write wins
+    assert g.value() == 2
+    # same name re-registration must return the same family ...
+    assert m.counter("q_total", labels=("engine",)) is c
+    # ... and a kind/label mismatch is a hard error, not silent aliasing
+    with pytest.raises(ValueError, match="re-registered"):
+        m.gauge("q_total")
+    with pytest.raises(ValueError, match="labels"):
+        c.inc(backend="jnp")
+
+
+def test_histogram_quantile_error_bound():
+    m = MetricsRegistry()
+    h = m.histogram("lat_ms")
+    for v in range(1, 1001):
+        h.observe(float(v))
+    assert h.count() == 1000
+    assert h.mean() == pytest.approx(500.5)     # sum/count is exact
+    for q, truth in ((0.5, 500.0), (0.99, 990.0)):
+        est = h.quantile(q)
+        # log-bucketed with 8 buckets/doubling: ~9% max relative error
+        assert abs(est - truth) / truth < GROWTH - 1 + 0.02, (q, est)
+
+
+def test_histogram_single_value_exact():
+    m = MetricsRegistry()
+    h = m.histogram("lat_ms")
+    for _ in range(3):
+        h.observe(7.3)
+    # quantiles clamp to the observed [min, max] -> exact here
+    assert h.quantile(0.5) == 7.3
+    assert h.quantile(0.99) == 7.3
+    assert m.histogram("empty").quantile(0.5) is None
+    assert m.histogram("empty").mean() is None
+
+
+def test_registry_thread_safety():
+    m = MetricsRegistry()
+    c = m.counter("n", labels=("t",))
+    h = m.histogram("h")
+
+    def work(tid):
+        for i in range(5000):
+            c.inc(t=str(tid % 2))
+            h.observe(float(i % 17) + 0.5)
+
+    threads = [threading.Thread(target=work, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.total() == 8 * 5000
+    assert h.count() == 8 * 5000
+
+
+def test_prometheus_render_shape():
+    m = MetricsRegistry()
+    m.counter("req_total", "requests", labels=("engine",)).inc(5,
+                                                               engine="brute")
+    h = m.histogram("lat_ms", "latency")
+    h.observe(1.0)
+    h.observe(100.0)
+    text = m.render_prometheus()
+    assert "# TYPE req_total counter" in text
+    assert 'req_total{engine="brute"} 5' in text
+    assert "# TYPE lat_ms histogram" in text
+    assert "lat_ms_count 2" in text
+    assert "lat_ms_sum 101" in text
+    # cumulative bucket exposition ends at the +Inf edge with the count
+    bucket_lines = [l for l in text.splitlines() if "lat_ms_bucket" in l]
+    assert bucket_lines and bucket_lines[-1].endswith(" 2")
+
+
+def test_jsonl_export_round_trips_schema(tmp_path):
+    m = MetricsRegistry()
+    m.counter("service_queries_total", labels=("engine",)).inc(4,
+                                                               engine="brute")
+    m.counter("service_scanned_total", labels=("engine",)).inc(1024,
+                                                               engine="brute")
+    h = m.histogram("service_request_latency_ms", labels=("engine",))
+    for v in (0.5, 1.5, 2.5, 200.0):
+        h.observe(v, engine="brute")
+    m.gauge("service_compactions").set(2)
+    path = tmp_path / "metrics.jsonl"
+    n = m.export_jsonl(path, ts=123.0)
+    assert n == 4
+    assert validate_metrics_jsonl(path) == []     # serving-family floor met
+    rows = {r["name"]: r for r in map(json.loads, path.read_text().splitlines())}
+    lat = rows["service_request_latency_ms"]
+    assert lat["count"] == 4 and lat["min"] == 0.5 and lat["max"] == 200.0
+    assert sum(lat["buckets"].values()) == 4
+    # reset zeroes children but keeps family declarations
+    m.reset()
+    assert m.family("service_queries_total").total() == 0
+    assert m.collect() == []
+
+
+def test_metrics_schema_catches_corruption(tmp_path):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text(json.dumps({"name": "x", "type": "histogram",
+                               "labels": {}, "count": 5, "sum": 1.0,
+                               "buckets": {"1": 3}}) + "\n")
+    errs = validate_metrics_jsonl(bad, require_families=())
+    assert any("bucket counts sum" in e for e in errs)
+
+
+def test_null_metrics_surface():
+    n = NULL_METRICS
+    assert isinstance(n, NullMetrics) and n.enabled is False
+    fam = n.counter("anything", labels=("x",))
+    fam.inc(5, x="y")
+    fam.observe(1.0)
+    fam.set(2.0)
+    assert fam.total() == 0 and fam.quantile(0.5) is None
+    assert n.collect() == [] and n.render_prometheus() == ""
+
+
+# -- tracer -----------------------------------------------------------------
+
+def test_disabled_span_fast_path():
+    tr = Tracer(enabled=False)
+    # acceptance: no span object is allocated when tracing is off — every
+    # call returns the module-level singletons and records nothing
+    assert tr.span("a") is NULL_SPAN
+    assert tr.span("b", key="val") is tr.span("c")
+    assert tr.begin("d", track="t") is NULL_HANDLE
+    with tr.span("e") as s:
+        s.set(answer=42)
+    tr.begin("f").end(done=True)
+    tr.emit("g", 0.0, 1.0)
+    assert tr.events == [] and tr.dropped_events == 0
+
+
+def test_span_nesting_and_parent_linkage():
+    tr = Tracer(enabled=True)
+    with tr.span("outer", engine="brute"):
+        with tr.span("inner") as s:
+            s.set(rows=8)
+    by_name = {e["name"]: e for e in tr.events}
+    assert by_name["inner"]["args"]["parent"] == "outer"
+    assert by_name["inner"]["args"]["rows"] == 8
+    assert "parent" not in by_name["outer"]["args"]
+    # inner is contained in outer on the timeline
+    o, i = by_name["outer"], by_name["inner"]
+    assert o["ts"] <= i["ts"]
+    assert i["ts"] + i["dur"] <= o["ts"] + o["dur"] + 1e-6
+    assert validate_trace(tr.to_chrome()) == []
+
+
+def test_flow_handles_and_tracks():
+    tr = Tracer(enabled=True)
+    h = tr.begin("transfer", track="h2d-stream", chunk=0)
+    h.end(bytes=4096)
+    tr.emit("stall", 0.0, 0.001, track="h2d-stream", chunk=0)
+    names = [e["name"] for e in tr.events]
+    assert "thread_name" in names            # track metadata emitted once
+    meta = [e for e in tr.events if e["ph"] == "M"]
+    assert len(meta) == 1 and meta[0]["args"]["name"] == "h2d-stream"
+    tids = {e["tid"] for e in tr.events if e["ph"] == "X"}
+    assert tids == {meta[0]["tid"]}          # both spans on the named track
+    assert validate_trace(tr.to_chrome()) == []
+
+
+def test_event_buffer_bounded():
+    tr = Tracer(enabled=True, max_events=4)
+    for i in range(10):
+        with tr.span(f"s{i}"):
+            pass
+    assert len(tr.events) == 4
+    assert tr.dropped_events == 6
+
+
+def test_chrome_export_file(tmp_path):
+    tr = Tracer(enabled=True)
+    with tr.span("service.batch", engine="brute"):
+        pass
+    path = tmp_path / "trace.json"
+    n = tr.export_chrome(path)
+    assert n == 1
+    assert validate_trace_file(path, require_spans=("service.batch",)) == []
+    assert validate_trace_file(path, require_spans=("missing.span",)) \
+        == ["required span 'missing.span' not present in trace"]
+    obj = json.loads(path.read_text())
+    assert obj["displayTimeUnit"] == "ms"
