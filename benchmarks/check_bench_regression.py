@@ -31,9 +31,11 @@ BENCH_REL = "experiments/bench"
 # "fold_m" / "residency" the BENCH_tiered.json capacity sweep (a device
 # row guards nothing about the streaming path, and vice versa), and
 # "loop" / "target_qps" the serve_slo.json SLO harness (closed-loop
-# capacity and open-loop paced QPS are different measurements)
+# capacity and open-loop paced QPS are different measurements), and
+# "replicas" / "degradation" the concurrent front-end rows (a 2-replica
+# window or a different degradation ladder is a different serving shape)
 SHAPE_KEYS = ("n_db", "n_queries", "beam", "shards", "wal", "fold_m",
-              "residency", "loop", "target_qps")
+              "residency", "loop", "target_qps", "replicas", "degradation")
 
 
 def _git(*args: str) -> subprocess.CompletedProcess:

@@ -16,7 +16,8 @@ from __future__ import annotations
 import argparse
 import sys
 
-from repro.obs.schema import (REQUIRED_METRIC_FAMILIES, validate_trace_file,
+from repro.obs.schema import (FRONTEND_METRIC_FAMILIES,
+                              REQUIRED_METRIC_FAMILIES, validate_trace_file,
                               validate_metrics_jsonl)
 
 
@@ -33,6 +34,10 @@ def main(argv=None) -> int:
                     help="metric family that must appear in the JSONL "
                          "(repeatable; default: the serving floor "
                          f"{', '.join(REQUIRED_METRIC_FAMILIES)})")
+    ap.add_argument("--require-frontend", action="store_true",
+                    help="demand the concurrent-tier floor too: the service "
+                         "families plus "
+                         f"{', '.join(FRONTEND_METRIC_FAMILIES)}")
     args = ap.parse_args(argv)
     if not args.trace and not args.metrics:
         ap.error("nothing to validate: pass --trace and/or --metrics")
@@ -47,6 +52,9 @@ def main(argv=None) -> int:
     if args.metrics:
         fams = (tuple(args.require_family)
                 if args.require_family is not None else None)
+        if args.require_frontend:
+            fams = (REQUIRED_METRIC_FAMILIES + FRONTEND_METRIC_FAMILIES
+                    + (fams or ()))
         errs = validate_metrics_jsonl(args.metrics, require_families=fams)
         errors += [f"[metrics] {e}" for e in errs]
         print(f"[check-obs] metrics {args.metrics}: "

@@ -30,6 +30,15 @@ request p99 exceeds ``--slo-p99-ms``. ``--measure-overhead`` replays the
 identical window against a ``metrics=False`` twin service and reports the
 observability overhead as a QPS fraction (``--overhead-budget 0.05`` turns
 the 5% acceptance bound into a hard failure).
+
+``--frontend`` switches to the concurrent-tier harness (ISSUE 9): the same
+workload is driven through :class:`repro.serve.frontend.SearchFrontend`
+(bounded admission, deadlines, degradation ladder, N read replicas) in an
+open-loop window paced past capacity, with a hard verdict on *zero
+deadline misses among accepted requests* (admitted work either completes
+inside its deadline or is dropped un-scored with a typed error — never
+silently late). ``--failover`` kills a replica mid-window and asserts
+availability plus post-rehydrate byte parity.
 """
 from __future__ import annotations
 
@@ -299,6 +308,255 @@ def run_slo(n_db=20_000, n_ops=256, k=10, backend="jnp",
     return rows
 
 
+# -- concurrent front-end harness (ISSUE 9) ----------------------------------
+
+
+def _frontend_warm(fe, queries, pool, k, engine):
+    """Compile every pipeline shape the overload window can touch, on every
+    replica: each pow2 micro-batch bucket (the dispatcher submits
+    per-request singles; the service's micro-batcher groups them) x each
+    delta bucket the window's inserts can reach x each degradation level's
+    effective k. Batch warming runs through each replica's worker queue so
+    no compile can land inside the timed window on *any* replica; inserts
+    go through the front end so the delta grows identically everywhere.
+    Ends with an aligned compaction so the window starts at delta 0 with
+    the (delta 1, 2, ...) shapes already cached. Returns rows consumed
+    from ``pool``."""
+    import math
+
+    sizes, b = [], 1
+    while b <= min(fe.fcfg.high_water, 256):
+        sizes.append(b)
+        b *= 2
+    k_effs = sorted({max(1, int(math.floor(k * lvl.k_scale)))
+                     for lvl in fe.fcfg.ladder})
+
+    def _warm_buckets(svc):
+        for k_eff in k_effs:
+            for n in sizes:
+                for j in range(n):
+                    svc.submit(queries[j % len(queries)], k_eff, engine)
+                svc.flush()
+
+    def _wait_all(futs):
+        for f in futs:
+            f.result(timeout=600.0)
+
+    inserted = 0
+    for target in (0, 1, 2, 4):
+        while inserted < target:
+            fe.insert(pool[inserted:inserted + 1])
+            inserted += 1
+        _wait_all([rep.call(_warm_buckets, label="warm")
+                   for rep in fe.replicas])
+    _wait_all([rep.call(lambda svc: svc.compact_all(), label="warm")
+               for rep in fe.replicas])
+    return inserted
+
+
+def run_frontend_slo(n_db=20_000, n_ops=256, k=10, backend="jnp",
+                     engine="brute", replicas=1, write_ratio=0.01,
+                     high_water=64, deadline_ms=1000.0, target_qps=None,
+                     overload_factor=2.0, failover=False,
+                     metrics_out=None, suffix=None):
+    """Overload / failover harness for the concurrent serving tier.
+
+    Builds a :class:`repro.serve.frontend.SearchFrontend` with ``replicas``
+    read replicas, measures its closed-loop capacity, then runs an
+    open-loop window paced to ``target_qps`` (default ``overload_factor``
+    x capacity — overloaded *by construction*, so bounded admission must
+    shed). The verdict (``slo_ok``) demands **zero deadline misses among
+    accepted requests**: every admitted query either completes inside its
+    deadline or is dropped un-scored with a typed ``DeadlineExceeded``.
+
+    ``failover=True`` (requires ``replicas >= 2``) kills one replica at the
+    window midpoint and additionally asserts availability (completions
+    after the kill), rehydration (the slot comes back at a higher
+    generation), and post-rehydrate byte parity between the rebuilt
+    replica and a survivor.
+
+    Emits one ``experiments/bench/serve_slo*.json`` row with the
+    ``replicas`` / ``degradation`` measurement-shape keys; ``target_qps``
+    is recorded as None when auto-derived (the actual pace lands in
+    ``paced_qps``) so rows stay regression-comparable across machines.
+    """
+    from repro.serve.frontend import (DeadlineExceeded, FrontendConfig,
+                                      Overloaded, SearchFrontend,
+                                      Unavailable)
+    if failover and replicas < 2:
+        raise ValueError("failover run needs replicas >= 2 (one dies, one "
+                         "keeps serving)")
+    db = synthetic_fingerprints(SyntheticConfig(n=n_db, seed=0))
+    pool = synthetic_fingerprints(SyntheticConfig(n=max(4 * n_ops, 256),
+                                                  seed=7))
+    queries = queries_from_db(db, min(n_db, 256))
+    fcfg = FrontendConfig(replicas=replicas, high_water=high_water,
+                          default_deadline_ms=deadline_ms,
+                          flush_interval_ms=1.0,
+                          # first-compile stalls are not wedges; failover is
+                          # exercised via the explicit kill hook below
+                          health_timeout_s=60.0)
+    fe = SearchFrontend(db, engines=(engine,), backend=backend, k=k,
+                        compact_threshold=2 ** 30, frontend=fcfg)
+    try:
+        used = _frontend_warm(fe, queries, pool, k, engine)
+        # closed-loop capacity probe in concurrent waves: sequential
+        # single-client search would measure the dispatcher-tick latency
+        # floor, not the micro-batched throughput the admission bound is
+        # sized against — waves of in-flight requests measure the latter
+        n_probe = min(max(32, n_ops // 2), 128)
+        wave = max(1, min(high_water // 2, 16))
+        done = 0
+        t0 = time.perf_counter()
+        while done < n_probe:
+            futs = [fe.submit(queries[(done + j) % len(queries)], k, engine,
+                              deadline_ms=None)
+                    for j in range(min(wave, n_probe - done))]
+            for f in futs:
+                f.result(timeout=60.0)
+            done += len(futs)
+        cap_qps = n_probe / max(time.perf_counter() - t0, 1e-9)
+
+        paced = target_qps if target_qps else overload_factor * cap_qps
+        if failover and not target_qps:
+            # the failover leg measures sustained availability through a
+            # kill + rehydrate, not shedding: pace the window to span ~2s
+            # of wall time so "mid-run" leaves real traffic after the kill
+            paced = min(paced, max(n_ops / 2.0, 1.0))
+        interval = 1.0 / paced
+        ops = make_workload(n_ops, write_ratio, pool[used:used + 2 * n_ops],
+                            queries, seed=3)
+        kill_at = n_ops // 2 if failover else None
+        kill_idx = replicas - 1
+
+        import queue as queue_mod
+        import threading
+        stats = {"expired": 0, "unavailable": 0, "lat_ms": [],
+                 "after_kill": 0}
+        pend: queue_mod.Queue = queue_mod.Queue()
+
+        def _collect():
+            # futures complete roughly FIFO (dispatch order), so a single
+            # sequential collector measures completion latency with at most
+            # scheduling-noise overestimate — conservative for miss counting
+            while True:
+                item = pend.get()
+                if item is None:
+                    return
+                fut, t_sub, after_kill = item
+                try:
+                    fut.result(timeout=120.0)
+                except DeadlineExceeded:
+                    stats["expired"] += 1
+                    continue
+                except Unavailable:
+                    stats["unavailable"] += 1
+                    continue
+                stats["lat_ms"].append((time.perf_counter() - t_sub) * 1e3)
+                if after_kill:
+                    stats["after_kill"] += 1
+
+        collector = threading.Thread(target=_collect, daemon=True)
+        collector.start()
+        shed = 0
+        killed = False
+        t0 = time.perf_counter()
+        for i, (op, payload) in enumerate(ops):
+            slot = t0 + i * interval
+            now = time.perf_counter()
+            if now < slot:
+                time.sleep(slot - now)
+            if kill_at is not None and i == kill_at and not killed:
+                fe.kill_replica(kill_idx)
+                killed = True
+            if op == "insert":
+                try:
+                    fe.insert(payload)
+                except Unavailable:
+                    stats["unavailable"] += 1
+            else:
+                try:
+                    fut = fe.submit(payload, k=k, engine=engine)
+                except Overloaded:
+                    shed += 1
+                    continue
+                pend.put((fut, time.perf_counter(), killed))
+        fe.drain(timeout=120.0)
+        dt = time.perf_counter() - t0
+        pend.put(None)
+        collector.join(timeout=120.0)
+
+        failover_ok = None
+        if failover:
+            wait_until = time.perf_counter() + 60.0
+            while (fe.live_replicas() < replicas
+                   and time.perf_counter() < wait_until):
+                time.sleep(0.05)
+            rehydrated = (fe.live_replicas() == replicas
+                          and fe.replicas[kill_idx].generation > 0)
+            parity = False
+            if rehydrated:
+                # a write after rehydration must land on the rebuilt slot
+                # too, and both replicas must extract identical bytes
+                fe.insert(pool[used + 2 * n_ops:used + 2 * n_ops + 2])
+                a0, _ = fe.replica_state(0)
+                a1, _ = fe.replica_state(kill_idx)
+                parity = (set(a0) == set(a1)
+                          and all(np.array_equal(a0[name], a1[name])
+                                  for name in a0))
+            availability = stats["after_kill"] > 0
+            failover_ok = bool(rehydrated and parity and availability)
+
+        lat = stats["lat_ms"]
+        misses = (sum(1 for v in lat if v > deadline_ms)
+                  if deadline_ms is not None else 0)
+        s = fe.summary()
+        if metrics_out:
+            fe.export_metrics(metrics_out, ts=time.time())
+        row = {
+            "name": f"frontend_{engine}_r{replicas}"
+                    + ("_failover" if failover else ""),
+            "engine": engine, "backend": backend, "loop": "open",
+            "n_db": n_db, "k": k, "n_ops": n_ops,
+            "write_ratio": write_ratio,
+            "replicas": replicas, "degradation": len(fe.fcfg.ladder),
+            "high_water": high_water, "deadline_ms": deadline_ms,
+            "target_qps": target_qps if target_qps else None,
+            "paced_qps": round(paced, 1),
+            "capacity_qps": round(cap_qps, 1),
+            "achieved_qps": round(len(lat) / dt, 1) if dt > 0 else 0.0,
+            "host_qps": round(len(lat) / dt, 1) if dt > 0 else 0.0,
+            "completed": len(lat),
+            "shed": int(s["shed"]), "expired": int(s["expired"]),
+            "unavailable": int(stats["unavailable"]),
+            "deadline_misses": int(misses),
+            "failovers": int(s["failovers"]),
+            "max_degradation_level": int(s["max_degradation_level"]),
+            "p50_ms": (round(float(np.percentile(lat, 50)), 3)
+                       if lat else None),
+            "p99_ms": (round(float(np.percentile(lat, 99)), 3)
+                       if lat else None),
+            "slo_ok": bool(misses == 0 and failover_ok is not False),
+        }
+        if failover:
+            row["failover_ok"] = failover_ok
+            row["completed_after_kill"] = int(stats["after_kill"])
+        print(f"[serve-frontend] {row['name']}: paced={row['paced_qps']}qps "
+              f"(capacity {row['capacity_qps']}) completed={row['completed']}"
+              f" shed={row['shed']} expired={row['expired']} "
+              f"misses={row['deadline_misses']} p99={row['p99_ms']}ms "
+              f"degrade<= {row['max_degradation_level']} "
+              f"-> {'OK' if row['slo_ok'] else 'FAIL'}"
+              + (f" failover_ok={failover_ok}" if failover else ""))
+    finally:
+        fe.close()
+    rows = [row]
+    sfx = suffix if suffix is not None else (
+        "" if backend in (None, "jnp") else f"_{backend}")
+    emit(f"serve_slo{sfx}", rows)
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--backend", default="jnp",
@@ -339,7 +597,52 @@ def main():
                     choices=["device", "tiered"])
     ap.add_argument("--tier-chunk-rows", type=int, default=None)
     ap.add_argument("--tier-chunk", type=int, default=None)
+    ap.add_argument("--frontend", action="store_true",
+                    help="concurrent-tier mode (ISSUE 9): open-loop "
+                         "overload window through SearchFrontend; paced to "
+                         "--target-qps or 2x measured capacity; exits "
+                         "non-zero on any deadline miss among accepted "
+                         "requests")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="frontend mode: read replicas behind the front end")
+    ap.add_argument("--high-water", type=int, default=64,
+                    help="frontend mode: admission bound (in-flight "
+                         "requests before typed Overloaded shedding)")
+    ap.add_argument("--deadline-ms", type=float, default=1000.0,
+                    help="frontend mode: per-request deadline (<= 0 "
+                         "disables deadlines)")
+    ap.add_argument("--failover", action="store_true",
+                    help="frontend mode: kill one replica mid-window and "
+                         "assert availability + post-rehydrate byte parity "
+                         "(needs --replicas >= 2)")
+    ap.add_argument("--expect-shed", action="store_true",
+                    help="frontend mode: fail unless the window actually "
+                         "shed (guards the overload-by-construction smoke)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="frontend mode: export the merged front-end + "
+                         "replica metrics registries as JSONL here")
+    ap.add_argument("--out-suffix", default=None,
+                    help="override the emitted artifact suffix (e.g. "
+                         "_smoke keeps CI runs off the committed rows)")
     args = ap.parse_args()
+    if args.frontend:
+        rows = run_frontend_slo(
+            n_db=args.n_db, n_ops=args.ops, k=args.k, backend=args.backend,
+            engine=args.engines.split(",")[0],
+            replicas=args.replicas,
+            write_ratio=(args.write_ratio
+                         if args.write_ratio is not None else 0.01),
+            high_water=args.high_water,
+            deadline_ms=(args.deadline_ms if args.deadline_ms > 0 else None),
+            target_qps=args.target_qps, failover=args.failover,
+            metrics_out=args.metrics_out, suffix=args.out_suffix)
+        bad = [r["name"] for r in rows if not r["slo_ok"]]
+        if args.expect_shed:
+            bad += [f"{r['name']} (no shedding at {r['paced_qps']} qps)"
+                    for r in rows if not r["shed"]]
+        if bad:
+            raise SystemExit(f"frontend SLO violated: {bad}")
+        return
     if args.slo:
         if args.loop == "open" and not args.target_qps:
             ap.error("--loop open requires --target-qps")
@@ -356,7 +659,7 @@ def main():
                                          or args.overhead_budget is not None),
                        residency=args.residency,
                        tier_chunk_rows=args.tier_chunk_rows,
-                       tier_chunk=args.tier_chunk)
+                       tier_chunk=args.tier_chunk, suffix=args.out_suffix)
         bad = [r["name"] for r in rows if not r["slo_ok"]]
         if args.overhead_budget is not None:
             bad += [f"{r['name']} (overhead {r['overhead_frac']} > "
@@ -373,7 +676,8 @@ def main():
                write_ratios=ratios,
                compact_threshold=args.compact_threshold,
                flush_every=args.flush_every,
-               wal_modes=WAL_MODES if args.wal else ("off",))
+               wal_modes=WAL_MODES if args.wal else ("off",),
+               suffix=args.out_suffix)
     bad = [r for r in rows
            if r["compiles_in_window"] and not r["capacity_crossed"]]
     if bad:

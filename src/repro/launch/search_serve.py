@@ -127,6 +127,85 @@ def make_workload(n_ops: int, write_ratio: float,
     return ops
 
 
+def serve_frontend(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
+                   k: int = 10, n_ops: int = 256, write_ratio: float = 0.01,
+                   backend: str | None = None, compact_threshold: int = 2048,
+                   replicas: int = 2, durable_dir: str | None = None,
+                   snapshot_every: int = 0, resume: bool = False,
+                   metrics_out: str | None = None,
+                   trace_out: str | None = None, log=print):
+    """Drive the concurrent serving tier (ISSUE 9): the same mixed
+    insert+query workload as :func:`serve_service`, but through a
+    :class:`repro.serve.frontend.SearchFrontend` — bounded admission,
+    deadlines, degradation ladder and ``replicas`` read replicas fed by
+    one WAL-ordered insert fan-out. ``durable_dir`` makes the *front end*
+    durable (the on-disk layout matches the single service, so either can
+    recover the other's directory); ``resume`` warm-restarts every replica
+    from the latest snapshot + WAL tail. Returns the frontend summary."""
+    from ..obs.trace import TRACER
+    from ..serve.frontend import FrontendConfig, SearchFrontend
+
+    if trace_out:
+        TRACER.clear()
+        TRACER.configure(enabled=True)
+    db = synthetic_fingerprints(SyntheticConfig(n=n_db))
+    pool = synthetic_fingerprints(SyntheticConfig(n=max(n_ops, 64), seed=7))
+    queries = queries_from_db(db, min(n_db, 512))
+    fcfg = FrontendConfig(replicas=replicas, default_deadline_ms=None,
+                          flush_interval_ms=1.0,
+                          snapshot_every_inserts=snapshot_every)
+    if resume:
+        if durable_dir is None:
+            raise ValueError("--resume requires --durable-dir")
+        fe = SearchFrontend.open(
+            durable_dir, frontend=fcfg,
+            **({"backend": backend} if backend else {}))
+        log(f"[search-serve] frontend resumed from {durable_dir}: "
+            f"{fe.n_total} rows x {replicas} replicas")
+    else:
+        fe = SearchFrontend(db, engines=engines, backend=backend, k=k,
+                            cutoff=CHEMBL_LIKE.cutoff,
+                            fold_m=CHEMBL_LIKE.folding_m,
+                            compact_threshold=compact_threshold,
+                            durable_dir=durable_dir, frontend=fcfg)
+    ops = make_workload(n_ops, write_ratio, pool, queries)
+    enames = list(fe.engines)
+    futs = []
+    for i, (op, payload) in enumerate(ops):
+        if op == "insert":
+            fe.insert(payload)
+        else:
+            futs.append(fe.submit(payload, k=k,
+                                  engine=enames[i % len(enames)]))
+    for f in futs:
+        f.result(timeout=120.0)
+    fe.drain(timeout=120.0)
+    s = fe.summary()
+    log(f"[search-serve] frontend engines={','.join(fe.engines)} "
+        f"backend={fe.config.backend or 'default'} db={n_db} k={k} "
+        f"replicas={s['replicas_live']}/{s['replicas']}: "
+        f"p50={s.get('p50_ms')}ms p99={s.get('p99_ms')}ms "
+        f"{s['n_completed']} completed, shed={s['shed']} "
+        f"expired={s['expired']} failovers={s['failovers']} "
+        f"degradation<= {s['max_degradation_level']}")
+    if durable_dir is not None:
+        log(f"[search-serve] durable front end: WAL + snapshots under "
+            f"{durable_dir} (resume with --engine service --replicas "
+            f"{replicas} --resume --durable-dir {durable_dir})")
+    if metrics_out:
+        fe.export_metrics(metrics_out, ts=time.time())
+        log(f"[search-serve] metrics -> {metrics_out} "
+            f"(+ {metrics_out}.prom)")
+    fe.close()
+    if trace_out:
+        TRACER.export_chrome(trace_out)
+        log(f"[search-serve] trace -> {trace_out} "
+            f"({len(TRACER.events)} events; open in "
+            f"https://ui.perfetto.dev)")
+        TRACER.configure(enabled=False)
+    return s
+
+
 def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
                   k: int = 10, n_ops: int = 256, write_ratio: float = 0.01,
                   backend: str | None = None, compact_threshold: int = 2048,
@@ -284,6 +363,10 @@ def main():
     ap.add_argument("--tier-chunk", type=int, default=None,
                     help="service mode, tiered residency: candidate columns "
                          "per streamed rescore chunk (bitbound engine)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="service mode: serve through the concurrent front "
+                         "end (SearchFrontend) with N read replicas instead "
+                         "of the bare synchronous service")
     ap.add_argument("--metrics-out", default=None,
                     help="service mode: export the metrics registry as JSONL "
                          "here (a Prometheus text twin lands at <path>.prom)")
@@ -291,7 +374,18 @@ def main():
                     help="service mode: enable span tracing and write Chrome "
                          "trace-event JSON here (view in Perfetto)")
     args = ap.parse_args()
-    if args.engine == "service":
+    if args.engine == "service" and args.replicas > 1:
+        serve_frontend(engines=tuple(args.service_engines.split(",")),
+                       n_db=args.n_db, k=args.k, n_ops=args.ops,
+                       write_ratio=args.write_ratio, backend=args.backend,
+                       compact_threshold=args.compact_threshold,
+                       replicas=args.replicas,
+                       durable_dir=args.durable_dir,
+                       snapshot_every=args.snapshot_every,
+                       resume=args.resume,
+                       metrics_out=args.metrics_out,
+                       trace_out=args.trace_out)
+    elif args.engine == "service":
         serve_service(engines=tuple(args.service_engines.split(",")),
                       n_db=args.n_db, k=args.k, n_ops=args.ops,
                       write_ratio=args.write_ratio, backend=args.backend,

@@ -163,6 +163,13 @@ class Family:
         return self._child(tuple(str(labels[n]) for n in self.label_names))
 
     # -- mutation (each takes the registry lock) ----------------------------
+    def touch(self, **labels) -> None:
+        """Materialize a labeled child at its zero value without recording
+        an event — pre-seeding known label sets so exports (and
+        required-family CI floors) see the family before the first hit."""
+        with self._registry._lock:
+            self._resolve(labels)
+
     def inc(self, value: float = 1.0, **labels) -> None:
         with self._registry._lock:
             self._resolve(labels).value += value
@@ -346,6 +353,9 @@ class MetricsRegistry:
 class _NullFamily:
     """Accepts every instrument call and does nothing."""
     __slots__ = ()
+
+    def touch(self, **k):
+        pass
 
     def inc(self, *a, **k):
         pass

@@ -25,6 +25,19 @@ REQUIRED_METRIC_FAMILIES = (
     "service_scanned_total",
 )
 
+#: families the concurrent front end (ISSUE 9) must additionally export —
+#: CI's overload smoke passes these via ``--require-family`` (note that
+#: flag *replaces* the service floor, so callers list both sets)
+FRONTEND_METRIC_FAMILIES = (
+    "frontend_admitted_total",
+    "frontend_shed_total",
+    "frontend_deadline_expired_total",
+    "frontend_queue_depth",
+    "frontend_degradation_level",
+    "frontend_replica_live",
+    "frontend_request_latency_ms",
+)
+
 #: Chrome trace-event phases we emit / accept
 TRACE_PHASES = {"X", "M", "B", "E", "b", "e", "i", "C"}
 

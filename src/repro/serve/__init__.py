@@ -3,4 +3,8 @@ from .store import (MutableFingerprintStore, TieredFingerprintStore,  # noqa: F4
                     next_pow2, validate_rows)
 from .service import SearchService, ServiceConfig  # noqa: F401
 from .wal import WriteAheadLog, WalCorruption, replay as wal_replay  # noqa: F401
+from .replica import Future, Replica, ReplicaDead  # noqa: F401
+from .frontend import (DeadlineExceeded, DegradeLevel,  # noqa: F401
+                       FrontendConfig, Overloaded, SearchFrontend,
+                       Unavailable)
 from . import snapshot  # noqa: F401

@@ -137,6 +137,8 @@ class SearchService:
         self._snap_id = -1
         self._snap_thread = None
         self._snap_error = None
+        self._lifecycle_lock = threading.RLock()
+        self._closed = False
         self.reset_telemetry()
         if cfg.durable_dir is not None:
             self._attach_durable_dir(fresh=True)
@@ -420,24 +422,51 @@ class SearchService:
         WAL-GCs. At most one writer is in flight; a second ``snapshot()``
         (or :meth:`close`) joins the previous one first, and any writer
         exception is re-raised at the next :meth:`snapshot_join` /
-        :meth:`snapshot` / :meth:`close`."""
-        if self._wal is None:
-            raise RuntimeError("snapshot() requires durable_dir")
-        self.snapshot_join()
-        sid = self._snap_id + 1
-        from_seq = self._wal.rotate()
-        arrays, meta = snap.service_state(self)
-        meta["wal_from_seq"] = int(from_seq)
-        meta["words"] = int(self.words)
-        if background:
-            t = threading.Thread(target=self._snapshot_worker,
-                                 args=(sid, arrays, meta),
-                                 name=f"snapshot-{sid}", daemon=True)
-            self._snap_thread = t
-            t.start()
-            return sid
-        self._write_snapshot(sid, arrays, meta)
+        :meth:`snapshot` / :meth:`close`.
+
+        The current **recovery floor** — the oldest *published* snapshot's
+        ``wal_from_seq``, i.e. what a crash-before-publish recovery still
+        replays from — is **pinned** in the WAL before the writer starts
+        (ISSUE 9): any concurrent ``gc_below``, even one erroneously
+        flooring at this snapshot's mid-write rotate point, is clamped
+        above it until the writer publishes."""
+        with self._lifecycle_lock:
+            if self._closed:
+                raise RuntimeError("snapshot() on a closed service")
+            if self._wal is None:
+                raise RuntimeError("snapshot() requires durable_dir")
+            self.snapshot_join()
+            sid = self._snap_id + 1
+            pin = self._wal.pin(self._recovery_floor())
+            from_seq = self._wal.rotate()
+            arrays, meta = snap.service_state(self)
+            meta["wal_from_seq"] = int(from_seq)
+            meta["words"] = int(self.words)
+            if background:
+                t = threading.Thread(target=self._snapshot_worker,
+                                     args=(sid, arrays, meta, pin),
+                                     name=f"snapshot-{sid}", daemon=True)
+                self._snap_thread = t
+                t.start()
+                return sid
+        try:
+            self._write_snapshot(sid, arrays, meta)
+        finally:
+            self._wal.unpin(pin)
         return sid
+
+    def _recovery_floor(self) -> int:
+        """Lowest ``wal_from_seq`` across published snapshot generations —
+        the first WAL segment a walk-back recovery can still need. 0 when
+        no generation has published yet (everything is needed)."""
+        floors = []
+        for s in ckpt.snapshot_steps(self._snap_dir):
+            try:
+                floors.append(int(ckpt.read_snapshot_meta(
+                    self._snap_dir, s)["wal_from_seq"]))
+            except (IOError, KeyError, ValueError):
+                continue
+        return min(floors) if floors else 0
 
     def _write_snapshot(self, sid: int, arrays, meta) -> None:
         """Persist one extracted snapshot + retention prune + WAL GC (the
@@ -451,7 +480,8 @@ class SearchService:
         for s in steps[:-max(self.config.snapshot_keep, 1)]:
             self._fs.rmtree(self._snap_dir / f"snap_{s:08d}")
         # WAL GC floor: the oldest *retained* snapshot's from_seq (walk-back
-        # restores must still find their records)
+        # restores must still find their records). A concurrent in-flight
+        # snapshot's rotate point is protected by its WAL pin.
         floors = []
         for s in ckpt.snapshot_steps(self._snap_dir):
             try:
@@ -462,11 +492,15 @@ class SearchService:
         if floors:
             self._wal.gc_below(min(floors))
 
-    def _snapshot_worker(self, sid: int, arrays, meta) -> None:
+    def _snapshot_worker(self, sid: int, arrays, meta, pin: int) -> None:
         try:
             self._write_snapshot(sid, arrays, meta)
         except BaseException as e:   # surfaced at the next join point
             self._snap_error = e
+        finally:
+            wal = self._wal
+            if wal is not None:
+                wal.unpin(pin)
 
     def snapshot_join(self) -> None:
         """Wait for an in-flight background snapshot (no-op otherwise) and
@@ -478,6 +512,56 @@ class SearchService:
         if self._snap_error is not None:
             e, self._snap_error = self._snap_error, None
             raise e
+
+    @classmethod
+    def from_state(cls, arrays, meta, *, clock=time.perf_counter,
+                   fs: Fs | None = None, **overrides) -> "SearchService":
+        """Hydrate a service from an extracted ``(arrays, meta)`` snapshot
+        state (no durable attachment — ``_wal`` stays None). This is the
+        shared hydration body under :meth:`open` and the concurrent front
+        end's replica construction/rehydration (``serve/replica.py``): a
+        read replica is exactly a service built this way plus a replayed
+        WAL tail it does not own."""
+        cfg = ServiceConfig(**{**meta["config"], **overrides})
+        svc = cls.__new__(cls)
+        svc.config = cfg
+        svc.clock = clock
+        svc.words = int(meta["words"])
+        svc._fs = fs or DEFAULT_FS
+        svc.engines = {}
+        for name in meta["engines"]:
+            svc.engines[name] = snap.engine_from_state(
+                snap.split_engine_arrays(arrays, name),
+                meta["engine_state"][name], **svc._engine_kwargs(name))
+        svc.default_engine = meta["default_engine"]
+        svc._pending = []
+        svc._results = {}
+        svc._next_rid = 0
+        svc._wal = None
+        svc._snap_id = -1
+        svc._snap_thread = None
+        svc._snap_error = None
+        svc._lifecycle_lock = threading.RLock()
+        svc._closed = False
+        svc.reset_telemetry()
+        return svc
+
+    def apply_wal_records(self, records) -> int:
+        """Replay ``(first_gid, rows)`` WAL records into every engine,
+        skipping those already folded in (idempotent); a gid gap means lost
+        segments — refuse to serve rather than drop acked data. Returns the
+        number of rows applied."""
+        applied = 0
+        for first_gid, rows in records:
+            n_now = next(iter(self.engines.values())).n_total
+            if first_gid + rows.shape[0] <= n_now:
+                continue
+            if first_gid != n_now:
+                raise IOError(f"WAL gap: record at gid {first_gid}, "
+                              f"index at {n_now}")
+            self._apply_insert(rows)
+            applied += int(rows.shape[0])
+        return applied
 
     @classmethod
     def open(cls, directory, *, clock=time.perf_counter,
@@ -493,55 +577,44 @@ class SearchService:
         step, arrays, meta = ckpt.load_latest_intact(base / "snapshots")
         if step is None:
             raise FileNotFoundError(f"no intact snapshot under {base}")
-        cfg = ServiceConfig(**{**meta["config"], **overrides})
-        cfg.durable_dir = str(base)
-        svc = cls.__new__(cls)
-        svc.config = cfg
-        svc.clock = clock
-        svc.words = int(meta["words"])
-        svc._fs = fs
-        svc.engines = {}
-        for name in meta["engines"]:
-            svc.engines[name] = snap.engine_from_state(
-                snap.split_engine_arrays(arrays, name),
-                meta["engine_state"][name], **svc._engine_kwargs(name))
-        svc.default_engine = meta["default_engine"]
-        svc._pending = []
-        svc._results = {}
-        svc._next_rid = 0
-        svc._wal = None
+        svc = cls.from_state(arrays, meta, clock=clock, fs=fs, **overrides)
+        svc.config.durable_dir = str(base)
         svc._snap_id = step
-        svc._snap_thread = None
-        svc._snap_error = None
         svc._snap_dir = base / "snapshots"
         svc._wal_dir = base / "wal"
-        svc.reset_telemetry()
-        # replay acknowledged inserts logged after the snapshot (idempotent:
-        # records the snapshot already folded in are skipped; a gid gap means
-        # lost segments — refuse to serve rather than drop acked data)
+        # replay acknowledged inserts logged after the snapshot
         records, _ = wal_mod.replay(svc._wal_dir,
                                     from_seq=int(meta["wal_from_seq"]),
                                     words=svc.words, truncate=True, fs=fs)
-        for first_gid, rows in records:
-            n_now = next(iter(svc.engines.values())).n_total
-            if first_gid + rows.shape[0] <= n_now:
-                continue
-            if first_gid != n_now:
-                raise IOError(f"WAL gap: record at gid {first_gid}, "
-                              f"index at {n_now}")
-            svc._apply_insert(rows)
+        svc.apply_wal_records(records)
         svc._wal = wal_mod.WriteAheadLog(
             svc._wal_dir, svc.words, fs=fs,
-            fsync_every=cfg.wal_fsync_every)
+            fsync_every=svc.config.wal_fsync_every)
         return svc
 
     def close(self) -> None:
         """Flush and close the WAL (no final snapshot — reopen replays).
-        Joins any in-flight background snapshot first."""
+        Joins any in-flight background snapshot first. Idempotent and safe
+        to call from a thread other than the one running a
+        ``snapshot(background=True)`` — the lifecycle lock orders it after
+        the snapshot's synchronous phase, and the join waits out the
+        writer before the WAL handle goes away (pinned by
+        ``tests/test_service.py::test_close_*``)."""
+        with self._lifecycle_lock:
+            already = self._closed
+            self._closed = True
+        if already:
+            # second close still drains a writer the first one raced with,
+            # but swallows nothing new and never double-closes the WAL
+            t = self._snap_thread
+            if t is not None:
+                t.join()
+            return
         self.snapshot_join()
-        if self._wal is not None:
-            self._wal.close()
-            self._wal = None
+        with self._lifecycle_lock:
+            if self._wal is not None:
+                self._wal.close()
+                self._wal = None
 
     def _set_fs(self, fs: Fs) -> None:
         """Swap the filesystem layer (crash-fault harness hook)."""
@@ -563,6 +636,11 @@ class SearchService:
             self._m_tier_chunks.set(st.get("tiered_chunks", 0), engine=ename)
             self._m_tier_stall_frac.set(st.get("tiered_stall_fraction", 0.0),
                                         engine=ename)
+
+    @property
+    def n_total(self) -> int:
+        """Rows in the logical database (engines agree by construction)."""
+        return int(next(iter(self.engines.values())).n_total)
 
     @property
     def compactions(self) -> int:

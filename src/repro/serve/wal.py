@@ -28,11 +28,29 @@ A crash mid-append leaves a **torn tail**: a record whose length/crc check
 fails at the end of a segment. Replay truncates it — those bytes were never
 fsync'd, so the insert was never acked. A record that fails its crc midway
 through a segment (actual corruption, not a crash) raises instead.
+
+**GC pinning (ISSUE 9).** ``gc_below(seq)`` trusts its caller's floor —
+but with ``snapshot(background=True)`` the floor computed from *published*
+snapshot manifests can race an in-flight writer: the new snapshot rotated
+the WAL (claiming ``wal_from_seq = s``) but has not published yet, so a
+concurrent GC that floors at a *later* published snapshot would delete the
+very segments the in-flight snapshot still depends on for its crash
+window (crash before publish -> recovery = previous snapshot + full WAL
+from *its* floor). :meth:`pin` registers a hard floor before the writer
+starts; :meth:`gc_below` clamps every request to the minimum pinned
+sequence until :meth:`unpin`. The replica-rehydration path pins the same
+way so a catching-up replica's segments cannot vanish mid-replay.
+
+The writer handle is also internally locked: the concurrent front end
+(``serve/frontend.py``) appends from its insert path while housekeeping
+threads rotate/sync/GC, and interleaved raw file writes would corrupt
+records.
 """
 from __future__ import annotations
 
 import os
 import struct
+import threading
 import zlib
 from pathlib import Path
 
@@ -87,6 +105,9 @@ class WriteAheadLog:
         self._fs = fs
         self._f = None
         self._unsynced = 0
+        self._lock = threading.RLock()
+        self._pins: dict[int, int] = {}    # token -> pinned floor seq
+        self._next_pin = 0
         fs.mkdir(self.dir)
         existing = segment_seqs(self.dir)
         self.seq = (existing[-1] + 1) if existing else 0
@@ -108,49 +129,83 @@ class WriteAheadLog:
         if rows.shape[1] != self.words:
             raise ValueError(f"row width {rows.shape[1]} != WAL width "
                              f"{self.words}")
-        with _TR.span("wal.append", rows=int(rows.shape[0]),
-                      seq=int(self.seq)):
+        with self._lock, _TR.span("wal.append", rows=int(rows.shape[0]),
+                                  seq=int(self.seq)):
             self._f.write(_encode_record(first_gid, rows))
             self._unsynced += 1
             if self._unsynced >= self.fsync_every:
                 self.sync()
 
     def sync(self) -> None:
-        if self._f is not None and self._unsynced:
-            with _TR.span("wal.fsync", records=int(self._unsynced),
-                          seq=int(self.seq)):
-                self._fs.fsync(self._f)
-            self._unsynced = 0
+        with self._lock:
+            if self._f is not None and self._unsynced:
+                with _TR.span("wal.fsync", records=int(self._unsynced),
+                              seq=int(self.seq)):
+                    self._fs.fsync(self._f)
+                self._unsynced = 0
+
+    def flush(self) -> None:
+        """Flush user-space buffers so the on-disk tail is record-complete
+        (no durability promise — that's :meth:`sync`). Replica catch-up
+        reads the live segment through the filesystem, so it must not see
+        half a record still sitting in the writer's buffer."""
+        with self._lock:
+            if self._f is not None:
+                self._f.flush()
 
     def rotate(self) -> int:
         """Close the current segment and start the next; returns the new
         sequence number (the first one a snapshot taken now depends on)."""
-        self.sync()
-        self._f.close()
-        self.seq += 1
-        self._open_segment()
-        return self.seq
+        with self._lock:
+            self.sync()
+            self._f.close()
+            self.seq += 1
+            self._open_segment()
+            return self.seq
+
+    # -- GC + pinning --------------------------------------------------------
+    def pin(self, seq: int) -> int:
+        """Register a hard GC floor (an in-flight snapshot's ``from_seq`` or
+        a rehydrating replica's replay start); returns a token for
+        :meth:`unpin`. While any pin is held, :meth:`gc_below` clamps to the
+        minimum pinned sequence."""
+        with self._lock:
+            token = self._next_pin
+            self._next_pin += 1
+            self._pins[token] = int(seq)
+            return token
+
+    def unpin(self, token: int) -> None:
+        with self._lock:
+            self._pins.pop(token, None)
 
     def gc_below(self, seq: int) -> None:
-        """Remove segments no snapshot needs anymore."""
-        for s in segment_seqs(self.dir):
-            if s < seq:
-                self._fs.remove(self.dir / _segment_name(s))
+        """Remove segments no snapshot needs anymore, clamped to the lowest
+        pinned floor — a *published*-snapshot floor computed while another
+        snapshot is mid-write must not delete the in-flight writer's tail."""
+        with self._lock:
+            if self._pins:
+                seq = min(seq, min(self._pins.values()))
+            for s in segment_seqs(self.dir):
+                if s < seq:
+                    self._fs.remove(self.dir / _segment_name(s))
 
     def set_fs(self, fs: Fs) -> None:
         """Swap the fs layer (fault-injection harness); rotates so the open
         file handle goes through the new layer too."""
-        self.sync()
-        self._f.close()
-        self._fs = fs
-        self.seq += 1
-        self._open_segment()
-
-    def close(self) -> None:
-        if self._f is not None:
+        with self._lock:
             self.sync()
             self._f.close()
-            self._f = None
+            self._fs = fs
+            self.seq += 1
+            self._open_segment()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self.sync()
+                self._f.close()
+                self._f = None
 
     def __enter__(self):
         return self

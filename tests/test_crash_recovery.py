@@ -303,3 +303,85 @@ def test_sigkill_mid_ingest_recovers_acked(tmp_path, fsync_every):
         np.testing.assert_array_equal(got[0], ref[0], err_msg=e)
         np.testing.assert_array_equal(got[1], ref[1], err_msg=e)
     recovered.close()
+
+
+def test_sigkill_with_concurrent_clients_through_frontend(tmp_path):
+    """ISSUE 9: acked-implies-recovered must survive the concurrent tier.
+    A subprocess serves query clients through a 2-replica SearchFrontend
+    while the main thread ingests (each ACK printed only after the durable
+    insert call returned); the parent SIGKILLs it mid-stream and reopens
+    the front-end-owned directory with plain SearchService.open — every
+    acked batch must be searchable, bit-identical to a never-crashed
+    rebuild."""
+    d = tmp_path / "fe"
+    code = textwrap.dedent(f"""
+        import threading
+        import numpy as np
+        from repro.data.molecules import (SyntheticConfig,
+                                          synthetic_fingerprints)
+        from repro.serve import FrontendConfig, SearchFrontend
+
+        pool = synthetic_fingerprints(SyntheticConfig(n=260, seed=0))
+        fe = SearchFrontend(pool[:150], engines=("bitbound-folding",),
+                            durable_dir={str(d)!r}, compact_threshold=64,
+                            cutoff=0.4, fold_m=2,
+                            frontend=FrontendConfig(
+                                replicas=2, high_water=64,
+                                default_deadline_ms=None,
+                                flush_interval_ms=1.0))
+
+        def client(seed):
+            rng = np.random.default_rng(seed)
+            while True:
+                q = pool[int(rng.integers(0, 150))]
+                try:
+                    fe.search(q, 5, timeout=60)
+                except Exception:
+                    return
+        for s in range(3):
+            threading.Thread(target=client, args=(s,), daemon=True).start()
+
+        rng = np.random.default_rng(7)
+        for i in range(4000):
+            fe.insert(rng.integers(0, 2**32, size=(2, pool.shape[1]),
+                                   dtype=np.uint32))
+            print(f"ACK {{i}}", flush=True)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.Popen([sys.executable, "-c", code], env=env,
+                            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                            text=True)
+    acked = -1
+    try:
+        for line in proc.stdout:
+            if line.startswith("ACK "):
+                acked = int(line.split()[1])
+            if acked >= 8:              # mid-stream, clients in flight
+                proc.send_signal(signal.SIGKILL)
+                break
+    finally:
+        proc.kill()
+        proc.wait(timeout=60)
+    assert acked >= 8, proc.stderr.read()
+
+    recovered = SearchService.open(d)
+    n_rec = recovered.n_total
+    assert n_rec >= 150 + 2 * (acked + 1), \
+        "lost an insert the front end acked before SIGKILL"
+    assert (n_rec - 150) % 2 == 0, "partial batch recovered"
+
+    rng = np.random.default_rng(7)
+    pool = synthetic_fingerprints(SyntheticConfig(n=260, seed=0))
+    inserted = [rng.integers(0, 2**32, size=(2, pool.shape[1]),
+                             dtype=np.uint32)
+                for _ in range((n_rec - 150) // 2)]
+    reb = SearchService(np.concatenate([pool[:150]] + inserted),
+                        engines=("bitbound-folding",), compact_threshold=64,
+                        cutoff=0.4, fold_m=2)
+    q = queries_from_db(pool, 5, seed=4)
+    got = recovered.search(q, 6)
+    ref = reb.search(q, 6)
+    np.testing.assert_array_equal(got[0], ref[0])
+    np.testing.assert_array_equal(got[1], ref[1])
+    recovered.close()

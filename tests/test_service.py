@@ -151,3 +151,61 @@ def test_compact_all_pins_delta_phase(data):
     svc.compact_all()
     assert svc.engines["brute"].store.n_delta == 0
     assert svc.compactions == 1
+
+
+# -- lifecycle under concurrency (ISSUE 9 satellite) --------------------------
+
+def test_close_idempotent(data, tmp_path):
+    db, extra, _ = data
+    svc = SearchService(db, engines=("brute",), durable_dir=str(tmp_path))
+    svc.insert(extra[:5])
+    svc.close()
+    svc.close()                          # second close: no-op, no raise
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.snapshot()
+    reopened = SearchService.open(tmp_path)
+    assert reopened.n_total == len(db) + 5
+    reopened.close()
+
+
+def test_close_during_background_snapshot_from_other_thread(data, tmp_path):
+    """close() racing a background snapshot writer from another thread must
+    wait the writer out (the snapshot publishes; the WAL closes after its
+    final unpin) instead of closing the WAL underneath it."""
+    import threading
+
+    from repro.checkpoint.fs import Fs
+
+    class GatedFs(Fs):
+        def __init__(self):
+            self.armed = False
+            self.entered = threading.Event()
+            self.gate = threading.Event()
+
+        def replace(self, src, dst):
+            if self.armed:
+                self.entered.set()
+                assert self.gate.wait(30), "test gate never released"
+            super().replace(src, dst)
+
+    db, extra, _ = data
+    fs = GatedFs()
+    svc = SearchService(db, engines=("brute",), durable_dir=str(tmp_path),
+                        fs=fs)
+    svc.insert(extra[:10])
+    fs.armed = True
+    sid = svc.snapshot(background=True)
+    assert fs.entered.wait(30), "background writer never started publishing"
+    closer = threading.Thread(target=svc.close)
+    closer.start()
+    closer.join(timeout=0.5)
+    assert closer.is_alive(), "close() returned while the writer was gated"
+    fs.gate.set()
+    closer.join(timeout=30)
+    assert not closer.is_alive(), "close() never finished after the writer"
+    assert svc._wal is None
+    svc.close()                          # still idempotent afterwards
+    reopened = SearchService.open(tmp_path)
+    assert reopened._snap_id == sid      # the raced snapshot did publish
+    assert reopened.n_total == len(db) + 10
+    reopened.close()

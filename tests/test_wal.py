@@ -138,3 +138,81 @@ def test_group_commit_batches_fsyncs(tmp_path):
 def test_empty_directory_replay(tmp_path):
     records, stats = replay(tmp_path / "nothing", words=4)
     assert records == [] and stats["segments"] == 0
+
+
+# -- GC pinning (ISSUE 9 satellite) ------------------------------------------
+
+def test_gc_below_clamped_by_pins(tmp_path):
+    """While pins are held, gc_below floors at the minimum pinned sequence
+    regardless of the caller's (possibly mid-write) floor."""
+    w = WriteAheadLog(tmp_path, words=4)
+    for i in range(4):
+        w.append(i * 2, _rows(2, seed=i))
+        w.rotate()
+    assert wal_mod.segment_seqs(tmp_path) == [0, 1, 2, 3, 4]
+    t1 = w.pin(1)
+    t2 = w.pin(3)
+    w.gc_below(10)                       # caller floor above every pin
+    assert wal_mod.segment_seqs(tmp_path) == [1, 2, 3, 4]
+    w.unpin(t1)
+    w.gc_below(10)
+    assert wal_mod.segment_seqs(tmp_path) == [3, 4]
+    w.unpin(t2)
+    w.gc_below(4)                        # unpinned: caller floor applies
+    assert wal_mod.segment_seqs(tmp_path) == [4]
+    w.unpin(99)                          # unknown token is a no-op
+    w.close()
+
+
+def test_gc_interleaved_with_gated_inflight_snapshot(tmp_path):
+    """ISSUE 9 regression: a background snapshot is mid-write (gated just
+    before its atomic publish) when a concurrent GC pass runs with a floor
+    at the snapshot's *mid-write* rotate point. The WAL pin taken by
+    ``snapshot()`` must clamp that GC to the published recovery floor —
+    crash-before-publish recovery replays from there, and deleting its
+    segments would lose acked inserts."""
+    import threading
+
+    from repro.checkpoint.fs import Fs
+    from repro.serve import SearchService
+
+    class GatedFs(Fs):
+        def __init__(self):
+            self.armed = False
+            self.entered = threading.Event()
+            self.gate = threading.Event()
+
+        def replace(self, src, dst):     # the snapshot's atomic publish
+            if self.armed:
+                self.entered.set()
+                assert self.gate.wait(30), "test gate never released"
+            super().replace(src, dst)
+
+    fs = GatedFs()
+    svc = SearchService(_rows(60, seed=9), engines=("brute",),
+                        durable_dir=str(tmp_path), fs=fs,
+                        compact_threshold=10_000)
+    try:
+        for i in range(3):               # acked inserts the WAL must keep
+            svc.insert(_rows(2, seed=20 + i))
+        recovery_floor = 1               # gen-0 (constructor) snapshot's
+        #   wal_from_seq: acked-but-unsnapshotted inserts live at seq >= 1
+        fs.armed = True
+        svc.snapshot(background=True)
+        assert fs.entered.wait(30), "background writer never reached publish"
+        # concurrent housekeeping GC using the mid-write rotate point as its
+        # floor — without the pin this deletes the acked inserts' segments
+        svc._wal.gc_below(svc._wal.seq)
+        segs = wal_mod.segment_seqs(tmp_path / "wal")
+        assert recovery_floor in segs, (
+            f"GC deleted segment {recovery_floor} out from under the "
+            f"in-flight snapshot (have {segs})")
+        # the crash-before-publish recovery window is intact: replaying from
+        # the published floor still yields every acked insert
+        records, _ = replay(tmp_path / "wal", from_seq=recovery_floor,
+                            words=4, truncate=False)
+        assert sum(r.shape[0] for _, r in records) == 6
+    finally:
+        fs.gate.set()
+    svc.snapshot_join()
+    svc.close()
