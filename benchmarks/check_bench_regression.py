@@ -33,9 +33,15 @@ BENCH_REL = "experiments/bench"
 # "loop" / "target_qps" the serve_slo.json SLO harness (closed-loop
 # capacity and open-loop paced QPS are different measurements), and
 # "replicas" / "degradation" the concurrent front-end rows (a 2-replica
-# window or a different degradation ladder is a different serving shape)
+# window or a different degradation ladder is a different serving shape),
+# and "metric" / "fp_bits" the similarity sweep (a dice row at 512 bits is
+# no baseline for a tanimoto row at 1024)
 SHAPE_KEYS = ("n_db", "n_queries", "beam", "shards", "wal", "fold_m",
-              "residency", "loop", "target_qps", "replicas", "degradation")
+              "residency", "loop", "target_qps", "replicas", "degradation",
+              "metric", "fp_bits")
+# rows committed before the metric axis existed implicitly measured the
+# defaults — they still guard a tanimoto/1024-bit re-run
+SHAPE_DEFAULTS = {"metric": "tanimoto", "fp_bits": 1024}
 
 
 def _git(*args: str) -> subprocess.CompletedProcess:
@@ -67,7 +73,8 @@ def compare(old_rows: list, new_rows: list, threshold: float):
         o = old_by_name.get(r.get("name"))
         if o is None or "host_qps" not in o or "host_qps" not in r:
             continue
-        if any(o.get(k) != r.get(k) for k in SHAPE_KEYS):
+        if any(o.get(k, SHAPE_DEFAULTS.get(k))
+               != r.get(k, SHAPE_DEFAULTS.get(k)) for k in SHAPE_KEYS):
             continue                       # re-measured at a different shape
         compared += 1
         if r["host_qps"] < (1.0 - threshold) * o["host_qps"]:

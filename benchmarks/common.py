@@ -17,9 +17,10 @@ N_QUERIES = 64
 K = 20
 
 
-def get_db(n=N_DB, seed=0):
+def get_db(n=N_DB, seed=0, length=1024):
     from repro.data.molecules import SyntheticConfig, synthetic_fingerprints
-    return synthetic_fingerprints(SyntheticConfig(n=n, seed=seed))
+    return synthetic_fingerprints(SyntheticConfig(n=n, seed=seed,
+                                                  length=length))
 
 
 def get_queries(db, n=N_QUERIES, seed=1):
@@ -27,15 +28,17 @@ def get_queries(db, n=N_QUERIES, seed=1):
     return queries_from_db(db, n, seed=seed)
 
 
-def brute_truth(db, queries, k=K):
+def brute_truth(db, queries, k=K, metric=None):
     """Exact top-k via the fused kernel engine (itself validated vs ref)."""
+    from repro.core.fingerprints import resolve_metric
     from repro.kernels import ref
+    met = resolve_metric(metric)
     q = jnp.asarray(queries)
     d = jnp.asarray(db)
     # chunk queries to bound memory
     ids_all, vals_all = [], []
     for i in range(0, q.shape[0], 16):
-        ids, vals = ref.tanimoto_topk_ref(q[i:i + 16], d, k)
+        ids, vals = ref.tanimoto_topk_ref(q[i:i + 16], d, k, metric=met)
         ids_all.append(np.asarray(ids))
         vals_all.append(np.asarray(vals))
     return np.concatenate(ids_all), np.concatenate(vals_all)

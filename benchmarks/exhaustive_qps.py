@@ -30,44 +30,52 @@ def projected_qps(n_db: int, words: int, scan_fraction: float = 1.0,
     return bw / bytes_per_query
 
 
-def run(n_db=60_000, n_queries=32, backend="numpy"):
-    db = get_db(n_db)
+def run(n_db=60_000, n_queries=32, backend="numpy", metric=None,
+        fp_bits=None):
+    from repro.core.fingerprints import resolve_metric
+    met = resolve_metric(metric)
+    length = int(fp_bits) if fp_bits else 1024
+    db = get_db(n_db, length=length)
     queries = get_queries(db, n_queries)
+    words = db.shape[1]
     rows = []
 
-    eng = BruteForceEngine(db)
+    eng = BruteForceEngine(db, metric=met)
     dt = timeit(lambda: eng.search(queries, K))
     qps = n_queries / dt
     rows.append({
         "name": "bruteforce", "backend": "jnp",
+        "metric": met.spec, "fp_bits": length,
         "n_db": n_db, "n_queries": n_queries,
         "us_per_call": round(dt / n_queries * 1e6, 1),
         "host_qps": round(qps, 1),
         "host_compounds_per_s": round(qps * n_db / 1e6, 1),
-        "tpu_projected_qps_1chip": round(projected_qps(1_941_405, 32), 1),
+        "tpu_projected_qps_1chip": round(projected_qps(1_941_405, words), 1),
         "fpga_paper_qps": 1638 / 7,   # per engine
     })
 
     for m in (1, 2, 4, 8):
         for cutoff in (0.6, 0.8):
             eng = BitBoundFoldingEngine(db, cutoff=cutoff, m=m,
-                                        backend=backend)
+                                        backend=backend, metric=met)
             dt = timeit(lambda: eng.search(queries, K), repeats=2)
             frac = eng.scanned(n_queries) / (n_queries * n_db)
             qps = n_queries / dt
             rows.append({
                 "name": f"bitbound_fold_m{m}_Sc{cutoff}",
                 "backend": backend,
+                "metric": met.spec, "fp_bits": length,
                 "n_db": n_db, "n_queries": n_queries,
                 "us_per_call": round(dt / n_queries * 1e6, 1),
                 "host_qps": round(qps, 1),
                 "scan_fraction": round(frac, 4),
                 # folded scan reads W/m words over the pruned range + rescore
                 "tpu_projected_qps_1chip": round(projected_qps(
-                    1_941_405, 32 / m, frac), 1),
+                    1_941_405, words / m, frac), 1),
             })
     suffix = "" if backend == "numpy" else f"_{backend}"
-    emit(f"fig7_exhaustive_qps{suffix}", rows)
+    msuf = "" if met.name == "tanimoto" else f"_{met.name}"
+    emit(f"fig7_exhaustive_qps{suffix}{msuf}", rows)
     return rows
 
 
@@ -78,10 +86,16 @@ def main():
     ap.add_argument("--n-db", type=int, default=None,
                     help="database size (default 60k numpy / 20k device)")
     ap.add_argument("--n-queries", type=int, default=None)
+    ap.add_argument("--metric", default=None,
+                    help="similarity metric: tanimoto (default), dice, "
+                         "cosine, or tversky(a,b)")
+    ap.add_argument("--fp-bits", type=int, default=None,
+                    help="fingerprint width in bits (default 1024)")
     args = ap.parse_args()
     n_db = args.n_db or (60_000 if args.backend == "numpy" else 20_000)
     n_queries = args.n_queries or (32 if args.backend == "numpy" else 8)
-    run(n_db=n_db, n_queries=n_queries, backend=args.backend)
+    run(n_db=n_db, n_queries=n_queries, backend=args.backend,
+        metric=args.metric, fp_bits=args.fp_bits)
 
 
 if __name__ == "__main__":

@@ -27,31 +27,37 @@ from .common import K, brute_truth, emit, get_db, get_queries, timeit
 
 def run(n_db=8_000, n_queries=32, ms=(5, 10, 20), efs=(20, 60, 120, 200),
         backend="jnp", beam=1, ef_construction=100, layout="rows",
-        shards=None):
-    db = get_db(n_db, seed=7)
+        shards=None, metric=None, fp_bits=None):
+    from repro.core.fingerprints import resolve_metric
+    met = resolve_metric(metric)
+    length = int(fp_bits) if fp_bits else 1024
+    db = get_db(n_db, seed=7, length=length)
     queries = get_queries(db, n_queries, seed=8)
-    true_ids, _ = brute_truth(db, queries, K)
+    true_ids, _ = brute_truth(db, queries, K, metric=met)
     rows = []
     lsuf = "" if layout == "rows" else f"_{layout}"
     ssuf = "" if shards is None else f"_s{shards}"
+    msuf = "" if met.name == "tanimoto" else f"_{met.name}"
     for m in ms:
         if shards is None:
             index = hn.build_hnsw(np.asarray(db), m=m,
-                                  ef_construction=ef_construction, seed=0)
+                                  ef_construction=ef_construction, seed=0,
+                                  metric=met)
             eng = HNSWEngine(db, index=index, backend=backend, beam=beam,
                              layout=layout)
         else:
             eng = HNSWEngine(db, m=m, ef_construction=ef_construction,
                              seed=0, backend=backend, beam=beam,
-                             layout=layout, shards=shards)
+                             layout=layout, shards=shards, metric=met)
         for ef in efs:
             dt = timeit(lambda: eng.search(queries, K, ef=ef), repeats=2)
             ids, _ = eng.search(queries, K, ef=ef)
             rows.append({
-                "name": f"hnsw_m{m}_ef{ef}_{backend}{lsuf}{ssuf}",
+                "name": f"hnsw_m{m}_ef{ef}_{backend}{lsuf}{ssuf}{msuf}",
                 "m": m, "ef": ef,
                 "backend": backend, "beam": beam, "layout": layout,
                 "shards": shards,
+                "metric": met.spec, "fp_bits": length,
                 "n_db": n_db, "n_queries": n_queries,
                 "us_per_call": round(dt / n_queries * 1e6, 1),
                 "host_qps": round(n_queries / dt, 1),
@@ -62,7 +68,7 @@ def run(n_db=8_000, n_queries=32, ms=(5, 10, 20), efs=(20, 60, 120, 200),
             })
     suffix = "" if backend == "jnp" else f"_{backend}"
     shard_suffix = "" if shards is None else "_sharded"
-    emit(f"fig8_hnsw_grid{suffix}{lsuf}{shard_suffix}", rows)
+    emit(f"fig8_hnsw_grid{suffix}{lsuf}{shard_suffix}{msuf}", rows)
     return rows
 
 
@@ -87,6 +93,12 @@ def main():
                     help="fan-out over N per-device database shards "
                          "(emits the _sharded artifact)")
     ap.add_argument("--ef-construction", type=int, default=None)
+    ap.add_argument("--metric", default=None,
+                    help="similarity metric: tanimoto (default), dice, "
+                         "cosine, or tversky(a,b) — the graph is built and "
+                         "searched under it (emits a _<metric> artifact)")
+    ap.add_argument("--fp-bits", type=int, default=None,
+                    help="fingerprint width in bits (default 1024)")
     args = ap.parse_args()
     # interpret-mode Pallas (off-TPU) walks the gather grid in python:
     # default to a tiny-mode sweep there so the smoke leg stays fast
@@ -97,7 +109,7 @@ def main():
         efs=tuple(args.efs) if args.efs else ((20, 60) if tiny
                                               else (20, 60, 120, 200)),
         backend=args.backend, beam=args.beam, layout=args.layout,
-        shards=args.shards,
+        shards=args.shards, metric=args.metric, fp_bits=args.fp_bits,
         ef_construction=args.ef_construction or (40 if tiny else 100))
 
 

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .fingerprints import popcount
+from .fingerprints import Metric, TANIMOTO, popcount
 
 
 @dataclass
@@ -49,34 +49,52 @@ def build_index(db: jax.Array) -> BitBoundIndex:
                          mu=float(counts.mean()), sigma=float(counts.std()))
 
 
-def bound_range(index: BitBoundIndex, query_count: jax.Array, cutoff: float):
-    """Eq. 2 candidate range [lo, hi) in the popcount-sorted database."""
+def bound_range(index: BitBoundIndex, query_count: jax.Array, cutoff: float,
+                metric: Metric = TANIMOTO):
+    """Per-metric candidate range [lo, hi) in the popcount-sorted database
+    (Tanimoto: the paper's Eq. 2)."""
     a = query_count.astype(jnp.float32)
-    lo_cnt = jnp.ceil(a * cutoff)
-    hi_cnt = jnp.floor(a / jnp.maximum(cutoff, 1e-6))
+    if metric.name == "tanimoto":
+        lo_cnt = jnp.ceil(a * cutoff)
+        hi_cnt = jnp.floor(a / jnp.maximum(cutoff, 1e-6))
+    else:
+        lo_r, hi_r = metric.bound_ratios(cutoff)
+        lo_cnt = jnp.ceil(a * lo_r) if metric.bounded_below else jnp.zeros_like(a)
+        hi_cnt = (jnp.minimum(jnp.floor(a * hi_r), 2.0**30)
+                  if metric.bounded_above else jnp.full_like(a, 2.0**30))
     lo = jnp.searchsorted(index.counts, lo_cnt.astype(jnp.int32), side="left")
     hi = jnp.searchsorted(index.counts, hi_cnt.astype(jnp.int32), side="right")
     return lo, hi
 
 
-def bound_counts_np(query_counts: np.ndarray, cutoff: float):
-    """Eq. 2 popcount bounds ``[ceil(a*Sc), floor(a/Sc)]`` in float64.
+def bound_counts_np(query_counts: np.ndarray, cutoff: float,
+                    metric: Metric = TANIMOTO):
+    """Per-metric popcount bounds in float64 (Tanimoto: Eq. 2
+    ``[ceil(a*Sc), floor(a/Sc)]``; others via ``Metric.bound_ratios``).
 
     THE host-side bound formula: :func:`bound_range_np` (main-segment
     windows) and the engines' delta-segment masks all call this one helper —
     the insert-then-rebuild bit-parity contract requires the main window and
     the delta mask to agree on every boundary popcount, so the clamp and
-    float width must never diverge between call sites.
+    float width must never diverge between call sites. Unbounded sides come
+    back as 0 / +inf (searchsorted treats them as full-scan windows, and
+    ``scanned`` reflects the full scan).
     """
     a = np.asarray(query_counts, dtype=np.float64)
-    lo_cnt = np.ceil(a * cutoff)
-    hi_cnt = np.floor(a / max(cutoff, 1e-6))
+    if metric.name == "tanimoto":
+        lo_cnt = np.ceil(a * cutoff)
+        hi_cnt = np.floor(a / max(cutoff, 1e-6))
+        return lo_cnt, hi_cnt
+    lo_r, hi_r = metric.bound_ratios(cutoff)
+    lo_cnt = np.ceil(a * lo_r) if metric.bounded_below else np.zeros_like(a)
+    hi_cnt = (np.floor(a * hi_r) if metric.bounded_above
+              else np.full_like(a, np.inf))
     return lo_cnt, hi_cnt
 
 
 def bound_range_np(counts_sorted: np.ndarray, query_counts: np.ndarray,
-                   cutoff: float):
-    """Host-side batched Eq. 2: windows [lo, hi) for a whole query batch.
+                   cutoff: float, metric: Metric = TANIMOTO):
+    """Host-side batched per-metric windows [lo, hi) for a whole query batch.
 
     Numpy analogue of :func:`bound_range`; the engine uses it to size the
     static kernel grid (a Python int) before dispatching to device. Note the
@@ -85,7 +103,7 @@ def bound_range_np(counts_sorted: np.ndarray, query_counts: np.ndarray,
     value — both are valid Eq.2 windows, but don't cross-validate them
     expecting bit-equality.
     """
-    lo_cnt, hi_cnt = bound_counts_np(query_counts, cutoff)
+    lo_cnt, hi_cnt = bound_counts_np(query_counts, cutoff, metric)
     lo = np.searchsorted(counts_sorted, lo_cnt, side="left")
     hi = np.searchsorted(counts_sorted, hi_cnt, side="right")
     return lo.astype(np.int64), hi.astype(np.int64)

@@ -57,6 +57,7 @@ layouts and the request path are documented in docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass
 
@@ -69,7 +70,10 @@ from . import folding as fl
 from . import hnsw as hn
 from ..obs.trace import TRACER as _TR
 from .distributed import merge_shard_topk, shard_devices
-from .fingerprints import popcount, tanimoto_scores, batched_tanimoto_scores
+from .fingerprints import (Metric, TANIMOTO, batched_metric_scores,
+                           batched_tanimoto_scores, metric_from_counts,
+                           metric_from_counts_np, metric_scores, popcount,
+                           resolve_metric, tanimoto_scores)
 from .topk import merge_sorted, streaming_topk
 
 
@@ -88,15 +92,15 @@ def _store_mod():
     return store
 
 
-@jax.jit
-def _gather_score_frontier(q, dev_db, ids):
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _gather_score_frontier(q, dev_db, ids, metric: Metric = TANIMOTO):
     """Jitted single-query gather-distance launch for the insert-frontier
-    scorer. Module-level so the compile cache is keyed purely on shapes:
-    with the capacity-stable cached device db, repeated frontier widths
-    across insert batches (and engines) replay compiled launches instead of
-    re-tracing the Pallas call per frontier."""
+    scorer. Module-level so the compile cache is keyed purely on shapes
+    (plus the static metric): with the capacity-stable cached device db,
+    repeated frontier widths across insert batches (and engines) replay
+    compiled launches instead of re-tracing the Pallas call per frontier."""
     from ..kernels import ops as kops
-    return kops.gather_tanimoto(q[None], dev_db, ids[None])[0]
+    return kops.gather_tanimoto(q[None], dev_db, ids[None], metric=metric)[0]
 
 
 @jax.jit
@@ -157,6 +161,21 @@ class SearchEngine:
         self._jit_cache: dict = {}
         self.stats: dict = {}
 
+    def _resolve_metric_width(self, words: int) -> None:
+        """Resolve the ``metric`` spec (None / name / Metric) and pin the
+        engine's fingerprint width. ``fp_bits=None`` infers the width from
+        the data; an explicit value must match the packed word count —
+        metric and width are per-engine trace-time constants, so every
+        compiled pipeline downstream is keyed by construction."""
+        self.metric = resolve_metric(self.metric)
+        words = int(words)
+        if self.fp_bits is None:
+            self.fp_bits = words * 32
+        elif int(self.fp_bits) != words * 32:
+            raise ValueError(
+                f"fp_bits={self.fp_bits} does not match the database width "
+                f"({words} words = {words * 32} bits)")
+
     def _resolve_residency(self) -> None:
         """Resolve the ``residency`` field after the store exists: ``None``
         inherits the store's policy (a :class:`TieredFingerprintStore`
@@ -212,13 +231,20 @@ class SearchEngine:
 
 
 def _brute_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array, k: int,
-                use_kernel: bool, tile: int = 2048):
+                use_kernel: bool, tile: int = 2048,
+                metric: Metric = TANIMOTO):
     if use_kernel:
         from ..kernels import ops as kops
-        return kops.tanimoto_topk(queries, db, k=k, db_popcount=db_cnt)
+        return kops.tanimoto_topk(queries, db, k=k, db_popcount=db_cnt,
+                                  metric=metric)
 
     def one(q):
-        s = tanimoto_scores(q, db, db_cnt)
+        # the tanimoto branch keeps the historical scorer verbatim (HLO
+        # bit-identity for the default path)
+        if metric.name == "tanimoto":
+            s = tanimoto_scores(q, db, db_cnt)
+        else:
+            s = metric_scores(q, db, metric, db_cnt)
         return streaming_topk(s, k, tile=tile)
 
     vals, idxs = jax.vmap(one)(queries)
@@ -258,6 +284,12 @@ class BruteForceEngine(SearchEngine):
     #: rows per streamed chunk in tiered mode (rounded to a power of two so
     #: chunks tile the power-of-two capacity exactly)
     tier_chunk_rows: int = 65536
+    #: similarity metric (None / name / spec string / Metric descriptor);
+    #: trace-time constant — each (metric, shape) pair compiles once
+    metric: Metric | str | None = None
+    #: fingerprint width in bits; None infers from the data, an explicit
+    #: value is validated against the packed word count
+    fp_bits: int | None = None
 
     BACKENDS = ("jnp", "tpu")
     DEFAULT_BACKEND = "jnp"
@@ -275,6 +307,7 @@ class BruteForceEngine(SearchEngine):
                 raise ValueError("restored store layout does not match "
                                  "a brute-force engine")
             self.compact_threshold = self.store.compact_threshold
+        self._resolve_metric_width(self.store.words)
         self._resolve_residency()
         self._sync_gen = None
         self._sync_delta = None
@@ -311,18 +344,22 @@ class BruteForceEngine(SearchEngine):
 
     def _main_builder(self, k: int):
         use_kernel = self.use_kernel
+        metric = self.metric
 
         def build():
             return jax.jit(
-                lambda q, db, db_cnt: _brute_topk(q, db, db_cnt, k, use_kernel))
+                lambda q, db, db_cnt: _brute_topk(q, db, db_cnt, k,
+                                                  use_kernel, metric=metric))
         return build
 
     def _delta_builder(self, k: int, bucket: int):
+        metric = self.metric
+
         def build():
             dk = min(k, bucket)
 
             def run(q, ddb, dcnt, n_delta):
-                s = batched_tanimoto_scores(q, ddb, dcnt)
+                s = batched_metric_scores(q, ddb, metric, dcnt)
                 slot = jnp.arange(bucket)[None, :]
                 s = jnp.where(slot < n_delta, s, -jnp.inf)
                 vals, slots = jax.lax.top_k(s, dk)
@@ -340,12 +377,14 @@ class BruteForceEngine(SearchEngine):
         Same primitive as the device-resident path, so per-row scores are
         bit-identical."""
         use_kernel = self.use_kernel
+        metric = self.metric
 
         def build():
             dk = min(k, rows_n)
 
             def run(q, rows):
-                return _brute_topk(q, rows, popcount(rows), dk, use_kernel)
+                return _brute_topk(q, rows, popcount(rows), dk, use_kernel,
+                                   metric=metric)
             return jax.jit(run)
         return build
 
@@ -532,6 +571,12 @@ class BitBoundFoldingEngine(SearchEngine):
     residency: str | None = None
     #: stage-2 candidate columns per streamed chunk in tiered mode
     tier_chunk: int = 256
+    #: similarity metric (None / name / spec string / Metric descriptor).
+    #: Metrics with a popcount bound get a per-metric Eq.2-style window
+    #: (``Metric.bound_ratios``); unbounded ones (tversky alpha/beta = 0)
+    #: fall back to a full scan and ``scanned`` reflects it.
+    metric: Metric | str | None = None
+    fp_bits: int | None = None
 
     BACKENDS = ("numpy", "jnp", "tpu")
     DEFAULT_BACKEND = "numpy"
@@ -550,6 +595,7 @@ class BitBoundFoldingEngine(SearchEngine):
                 raise ValueError("restored store layout does not match "
                                  "engine fold config")
             self.compact_threshold = self.store.compact_threshold
+        self._resolve_metric_width(self.store.words)
         self._resolve_residency()
         self._stage1_cache = self._jit_cache
         self._sync_gen = None
@@ -620,9 +666,17 @@ class BitBoundFoldingEngine(SearchEngine):
 
     # -- host-side (variable-shape) reference path --------------------------
     def _np_scores(self, q: np.ndarray, db: np.ndarray, db_cnt: np.ndarray):
+        # tanimoto keeps the historical f64 scorer verbatim (its orderings
+        # are the pre-metric baseline); other metrics score in f32 via the
+        # shared oracle so host orderings match the device's f32 sort
         inter = np.bitwise_count(q[None, :] & db).sum(-1).astype(np.int64)
-        union = int(np.bitwise_count(q).sum()) + db_cnt.astype(np.int64) - inter
-        return np.where(union > 0, inter / np.maximum(union, 1), 0.0)
+        if self.metric.name == "tanimoto":
+            union = (int(np.bitwise_count(q).sum())
+                     + db_cnt.astype(np.int64) - inter)
+            return np.where(union > 0, inter / np.maximum(union, 1), 0.0)
+        return metric_from_counts_np(self.metric, inter,
+                                     int(np.bitwise_count(q).sum()),
+                                     db_cnt.astype(np.int64))
 
     def search_numpy(self, queries, k: int):
         """Reference engine (numpy): true variable-range pruning, used for
@@ -649,9 +703,11 @@ class BitBoundFoldingEngine(SearchEngine):
         # one shared Eq.2 implementation with the device path — the m=1
         # bit-for-bit parity contract depends on identical windows
         a_all = np.bitwise_count(queries).sum(-1)
-        los, his = bb.bound_range_np(self._counts_np, a_all, self.cutoff)
+        los, his = bb.bound_range_np(self._counts_np, a_all, self.cutoff,
+                                     metric=self.metric)
         # delta mask from the SAME float64 bounds as the main window
-        lo_cnt, hi_cnt = bb.bound_counts_np(a_all, self.cutoff)
+        lo_cnt, hi_cnt = bb.bound_counts_np(a_all, self.cutoff,
+                                            metric=self.metric)
         d_cnt = st.delta_counts
         scanned = 0
         for qi, q in enumerate(queries):
@@ -717,13 +773,15 @@ class BitBoundFoldingEngine(SearchEngine):
         state = self._device_meta()
         kops, tile, capacity = state["kops"], state["tile"], state["capacity"]
 
+        metric = self.metric
+
         def stage1_main(qf, folded, folded_cnt, lo_row, hi_row):
             if kops is not None:
                 cand, s1 = kops.window_topk(qf, folded, folded_cnt, lo_row,
                                             hi_row, k=k1m, max_tiles=bucket,
-                                            tile_n=tile)
+                                            tile_n=tile, metric=metric)
             else:
-                s = batched_tanimoto_scores(qf, folded, folded_cnt)
+                s = batched_metric_scores(qf, folded, metric, folded_cnt)
                 idx = jnp.arange(capacity)[None, :]
                 in_window = jnp.logical_and(idx >= lo_row[:, None],
                                             idx < hi_row[:, None])
@@ -742,19 +800,18 @@ class BitBoundFoldingEngine(SearchEngine):
         device pipeline gathers rescore rows from HBM right after this;
         the tiered pipeline returns it to the host instead."""
         capacity = self._device_meta()["capacity"]
+        metric = self.metric
         BIG = jnp.int32(2**30)
 
         def select(qf, cand, s1, full_cnt, order, d_folded, d_cnt,
                    d_folded_cnt, d_ok, n_main):
             # delta stage-1: masked folded scan (same arithmetic as the
-            # kernel: int popcounts, one f32 divide)
+            # kernel: int popcounts routed through metric_from_counts)
             qf_cnt = popcount(qf)
             d_inter = jnp.sum(jax.lax.population_count(
                 qf[:, None, :] & d_folded).astype(jnp.int32), axis=-1)
-            d_union = qf_cnt[:, None] + d_folded_cnt[None, :] - d_inter
-            s1d = jnp.where(d_union > 0,
-                            d_inter.astype(jnp.float32) /
-                            d_union.astype(jnp.float32), 0.0)
+            s1d = metric_from_counts(metric, d_inter, qf_cnt[:, None],
+                                     d_folded_cnt[None, :])
             s1d = jnp.where(d_ok, s1d, -jnp.inf)
             # virtual position of every candidate in the merged popcount-
             # sorted array (= the rebuilt sorted row): main row r keeps rank
@@ -800,14 +857,13 @@ class BitBoundFoldingEngine(SearchEngine):
         k1m = min(kr1, capacity)
         stage1_main = self._make_stage1(bucket, k1m)
 
+        metric = self.metric
+
         def rescore(queries, rows, cnts, valid):
             q_cnt = popcount(queries)
             inter = jnp.sum(jax.lax.population_count(
                 queries[:, None, :] & rows).astype(jnp.int32), axis=-1)
-            union = q_cnt[:, None] + cnts - inter
-            s2 = jnp.where(union > 0,
-                           inter.astype(jnp.float32) /
-                           union.astype(jnp.float32), 0.0)
+            s2 = metric_from_counts(metric, inter, q_cnt[:, None], cnts)
             return jnp.where(valid, s2, -jnp.inf)
 
         def finish(vals, gids, ok, lo_row, hi_row, extra_scanned):
@@ -927,6 +983,7 @@ class BitBoundFoldingEngine(SearchEngine):
         merged run reproduces the device path's single global top-k bit for
         bit."""
         dk = min(k, chunk)
+        metric = self.metric
 
         def run(queries, rows, valid_c, gids_c, run_vals, run_ids):
             cnts = jnp.sum(jax.lax.population_count(rows).astype(jnp.int32),
@@ -934,10 +991,7 @@ class BitBoundFoldingEngine(SearchEngine):
             q_cnt = popcount(queries)
             inter = jnp.sum(jax.lax.population_count(
                 queries[:, None, :] & rows).astype(jnp.int32), axis=-1)
-            union = q_cnt[:, None] + cnts - inter
-            s2 = jnp.where(union > 0,
-                           inter.astype(jnp.float32) /
-                           union.astype(jnp.float32), 0.0)
+            s2 = metric_from_counts(metric, inter, q_cnt[:, None], cnts)
             s2 = jnp.where(valid_c, s2, -jnp.inf)
             vals, pos = jax.lax.top_k(s2, dk)
             g = jnp.take_along_axis(gids_c, pos, axis=1)
@@ -1061,7 +1115,8 @@ class BitBoundFoldingEngine(SearchEngine):
         queries = jnp.asarray(queries)
         q_np = np.asarray(queries)
         a = np.bitwise_count(q_np).sum(-1)
-        lo, hi = bb.bound_range_np(self._counts_np, a, self.cutoff)
+        lo, hi = bb.bound_range_np(self._counts_np, a, self.cutoff,
+                                   metric=self.metric)
         n_tiles = np.where(hi > lo,
                            (hi + tile - 1) // tile - lo // tile, 0)
         bucket = bb.bucket_tiles(int(n_tiles.max(initial=0)), total_tiles)
@@ -1073,7 +1128,8 @@ class BitBoundFoldingEngine(SearchEngine):
         hi_j = jnp.asarray(hi, jnp.int32)
         ok_np = None
         if dd is not None:
-            lo_cnt, hi_cnt = bb.bound_counts_np(a, self.cutoff)
+            lo_cnt, hi_cnt = bb.bound_counts_np(a, self.cutoff,
+                                                metric=self.metric)
             d_cnt_np = self.store.delta_counts
             ok_np = np.zeros((q_np.shape[0], delta_bucket), dtype=bool)
             ok_np[:, :d_cnt_np.shape[0]] = (
@@ -1215,13 +1271,31 @@ class HNSWEngine(SearchEngine):
     #: prebuilt per-shard indexes (durability warm restart) — skips the
     #: sharded build; requires ``shards`` and ignores ``db``
     shard_indexes: list | None = None
+    #: similarity metric (None / name / spec string / Metric descriptor);
+    #: the graph is built under it and searches must match — a restored
+    #: index built under a different metric raises up front
+    metric: Metric | str | None = None
+    fp_bits: int | None = None
 
     BACKENDS = ("numpy", "jnp", "tpu")
     DEFAULT_BACKEND = "jnp"
     LAYOUTS = hn.LAYOUTS
 
+    def _check_index_metric(self, index) -> None:
+        built = getattr(index, "metric", TANIMOTO) or TANIMOTO
+        if built != self.metric:
+            raise ValueError(
+                f"restored HNSW index was built under metric "
+                f"{built.spec!r}; engine requests {self.metric.spec!r} — "
+                f"graph neighbourhoods are metric-specific, rebuild instead")
+
     def __post_init__(self):
         self._init_engine()
+        if self.metric is None and self.index is not None:
+            self.metric = getattr(self.index, "metric", TANIMOTO)
+        if self.metric is None and self.shard_indexes:
+            self.metric = getattr(self.shard_indexes[0], "metric", TANIMOTO)
+        self.metric = resolve_metric(self.metric)
         if self.beam is None:
             self.beam = hn.auto_beam(self.ef_search)
         if self.shard_indexes is not None and self.shards is None:
@@ -1235,11 +1309,15 @@ class HNSWEngine(SearchEngine):
                     raise ValueError(
                         f"{len(self.shard_indexes)} restored shard indexes "
                         f"for shards={self.shards}")
+                for ix in self.shard_indexes:
+                    self._check_index_metric(ix)
                 self._shard_indexes = list(self.shard_indexes)
             else:
                 self._shard_indexes = hn.build_hnsw_sharded(
                     np.asarray(self.db), self.shards, m=self.m,
-                    ef_construction=self.ef_construction, seed=self.seed)
+                    ef_construction=self.ef_construction, seed=self.seed,
+                    metric=self.metric)
+            self._resolve_metric_width(self._shard_indexes[0].db.shape[1])
             # the numpy backend never touches a device — don't init jax
             self._shard_devices = (None if self.backend == "numpy"
                                    else shard_devices(self.shards))
@@ -1251,7 +1329,10 @@ class HNSWEngine(SearchEngine):
         if self.index is None:
             self.index = hn.build_hnsw(np.asarray(self.db), m=self.m,
                                        ef_construction=self.ef_construction,
-                                       seed=self.seed)
+                                       seed=self.seed, metric=self.metric)
+        else:
+            self._check_index_metric(self.index)
+        self._resolve_metric_width(self.index.db.shape[1])
         self._graph_dirty = False
         self._graph_n = 0          # index.n the device graph was built for
         self._dirty_pos = 0        # consumed prefix of index.dirty_log
@@ -1363,9 +1444,12 @@ class HNSWEngine(SearchEngine):
             dev = jnp.zeros((cap, w), jnp.uint32).at[:n].set(jnp.asarray(db))
         self._insert_db_cache = (dev, n)
 
+        metric = self.metric
+
         def scorer(q: np.ndarray, ids: np.ndarray) -> np.ndarray:
             s = _gather_score_frontier(jnp.asarray(q), dev,
-                                       jnp.asarray(ids, dtype=jnp.int32))
+                                       jnp.asarray(ids, dtype=jnp.int32),
+                                       metric=metric)
             return np.asarray(s)
         return scorer
 
@@ -1393,7 +1477,8 @@ class HNSWEngine(SearchEngine):
         use_kernel = self.backend == "tpu" and _kernels_available()
         layout = self.layout
         max_iters = self.max_iters
-        key = (k, ef, beam, max_level, use_kernel, layout)
+        metric = self.metric
+        key = (k, ef, beam, max_level, use_kernel, layout, metric)
 
         def build():
             def run(q, db, db_cnt, base_adj, upper_adj, ep, nbr_fps, nbr_cnt):
@@ -1407,21 +1492,22 @@ class HNSWEngine(SearchEngine):
                     from ..kernels import ops as kops
 
                     def score_fn(qs, qc, ids):
-                        return kops.gather_tanimoto(qs, db, ids, q_cnt=qc)
+                        return kops.gather_tanimoto(qs, db, ids, q_cnt=qc,
+                                                    metric=metric)
                 if layout == "blocked":
                     if use_kernel:
                         def expand_fn(qs, qc, pop, flat, worst, kk):
                             return kops.expand_tanimoto_sorted(
                                 qs, nbr_fps, nbr_cnt, pop, flat, worst, kk,
-                                q_cnt=qc)
+                                q_cnt=qc, metric=metric)
                     else:
                         def expand_fn(qs, qc, pop, flat, worst, kk):
                             return hn.expand_scores_jnp(
                                 qs, qc, nbr_fps, nbr_cnt, pop, flat, worst,
-                                kk)
+                                kk, metric=metric)
                 return hn.search_hnsw(g, q, k, ef, max_iters=max_iters,
                                       beam=beam, score_fn=score_fn,
-                                      expand_fn=expand_fn)
+                                      expand_fn=expand_fn, metric=metric)
             return jax.jit(run)
         return self._cached(key, build)
 

@@ -42,17 +42,27 @@ def kr1_for(k: int, m: int) -> int:
     return int(k * m * math.log2(2 * m))
 
 
+def folded_words(W: int, m: int) -> int:
+    """Folded word count for scheme 1: ceil(W / m) — widths off the m grid
+    zero-pad the word axis (OR with zero words is the identity), so every
+    ``fp_bits`` that packs to whole words folds at every level."""
+    return -(-int(W) // int(m))
+
+
 def fold_scheme1(words: np.ndarray, m: int, length: int = None) -> np.ndarray:
-    """Strided modulo-OR fold of packed prints: (..., W) -> (..., W/m).
+    """Strided modulo-OR fold of packed prints: (..., W) -> (..., ceil(W/m)).
 
     With L a multiple of 32*m, sections are whole words: word-level OR of
     m word-sections. Pure word ops — no unpacking needed (and this is how the
-    TPU kernel folds on the fly)."""
+    TPU kernel folds on the fly). Word counts not divisible by m are
+    zero-padded up to ``folded_words(W, m) * m`` first — identical scores,
+    one extra partial section."""
     words = np.asarray(words)
     W = words.shape[-1]
-    if W % m != 0:
-        raise ValueError(f"word count {W} not divisible by folding level {m}")
-    sec = W // m
+    sec = folded_words(W, m)
+    if sec * m != W:
+        pad = np.zeros((*words.shape[:-1], sec * m - W), dtype=words.dtype)
+        words = np.concatenate([words, pad], axis=-1)
     out = words.reshape(*words.shape[:-1], m, sec)
     result = out[..., 0, :]
     for i in range(1, m):
@@ -61,9 +71,14 @@ def fold_scheme1(words: np.ndarray, m: int, length: int = None) -> np.ndarray:
 
 
 def fold_scheme1_jax(words: jax.Array, m: int) -> jax.Array:
-    """Jit-traceable word-level scheme-1 fold (used on the query path)."""
+    """Jit-traceable word-level scheme-1 fold (used on the query path).
+    Must stay value-identical to :func:`fold_scheme1`, including the
+    odd-width zero padding."""
     W = words.shape[-1]
-    sec = W // m
+    sec = folded_words(W, m)
+    if sec * m != W:
+        pad = jnp.zeros((*words.shape[:-1], sec * m - W), dtype=words.dtype)
+        words = jnp.concatenate([words, pad], axis=-1)
     sections = words.reshape(*words.shape[:-1], m, sec)
     out = sections[..., 0, :]
     for i in range(1, m):
@@ -75,13 +90,20 @@ def fold_scheme2_jax(words: jax.Array, m: int) -> jax.Array:
     """Jit-traceable adjacent-OR fold (query path of the device engine).
 
     Bit-level: unpack each uint32 word to its 32 bits, OR every m neighbouring
-    bits, repack. Matches :func:`fold_scheme2` exactly."""
+    bits, repack. Matches :func:`fold_scheme2` exactly, including the
+    zero-bit padding for lengths off the m*32 grid."""
     shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
     bits = (words[..., :, None] >> shifts) & jnp.uint32(1)    # (..., W, 32)
     L = words.shape[-1] * WORD_BITS
     bits = bits.reshape(*words.shape[:-1], L)
-    folded = bits.reshape(*words.shape[:-1], L // m, m).max(axis=-1)
-    out_words = folded.reshape(*words.shape[:-1], L // m // WORD_BITS, WORD_BITS)
+    Lp = -(-L // (m * WORD_BITS)) * (m * WORD_BITS)
+    if Lp != L:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((*bits.shape[:-1], Lp - L), dtype=bits.dtype)],
+            axis=-1)
+    folded = bits.reshape(*words.shape[:-1], Lp // m, m).max(axis=-1)
+    out_words = folded.reshape(*words.shape[:-1], Lp // m // WORD_BITS,
+                               WORD_BITS)
     weights = jnp.uint32(1) << shifts
     return jnp.sum(out_words.astype(jnp.uint32) * weights, axis=-1,
                    dtype=jnp.uint32)
@@ -99,12 +121,17 @@ def fold_jax(words: jax.Array, m: int, scheme: int = 1) -> jax.Array:
 
 
 def fold_scheme2(words: np.ndarray, m: int) -> np.ndarray:
-    """Adjacent-OR fold: unpack, OR every m neighbouring bits, repack."""
+    """Adjacent-OR fold: unpack, OR every m neighbouring bits, repack.
+    Lengths off the m*32 grid zero-pad the bit axis first (identical
+    scores; the folded print still packs to whole words)."""
     bits = unpack_bits(words)
     L = bits.shape[-1]
-    if L % (m * WORD_BITS) != 0:
-        raise ValueError(f"length {L} not divisible by {m * WORD_BITS}")
-    grouped = bits.reshape(*bits.shape[:-1], L // m, m)
+    Lp = -(-L // (m * WORD_BITS)) * (m * WORD_BITS)
+    if Lp != L:
+        bits = np.concatenate(
+            [bits, np.zeros((*bits.shape[:-1], Lp - L), dtype=bits.dtype)],
+            axis=-1)
+    grouped = bits.reshape(*bits.shape[:-1], Lp // m, m)
     folded = grouped.max(axis=-1)
     return pack_bits(folded)
 

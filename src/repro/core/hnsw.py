@@ -46,11 +46,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .fingerprints import (Metric, TANIMOTO, metric_from_counts,
+                           metric_from_counts_np)
 from .topk import NEG_INF, PQ, merge_sorted, pq_pop_many, pq_worst
 
 
 # ---------------------------------------------------------------------------
-# host-side helpers (numpy popcount Tanimoto)
+# host-side helpers (numpy popcount similarity)
 # ---------------------------------------------------------------------------
 
 def _np_popcount(words: np.ndarray) -> np.ndarray:
@@ -61,6 +63,18 @@ def _np_tanimoto(q: np.ndarray, db: np.ndarray, db_cnt: np.ndarray) -> np.ndarra
     inter = np.bitwise_count(q[None, :] & db).sum(axis=-1).astype(np.int32)
     union = _np_popcount(q[None, :]) + db_cnt - inter
     return np.where(union > 0, inter / np.maximum(union, 1), 0.0).astype(np.float32)
+
+
+def _np_metric(metric: Metric, q: np.ndarray, db: np.ndarray,
+               db_cnt: np.ndarray) -> np.ndarray:
+    """Metric-generic host scorer; the Tanimoto branch is the historical
+    f64-divide path verbatim (the graph-determinism anchor)."""
+    if metric.name == "tanimoto":
+        return _np_tanimoto(q, db, db_cnt)
+    inter = np.bitwise_count(q[None, :] & db).sum(axis=-1).astype(np.int64)
+    return metric_from_counts_np(metric, inter,
+                                 _np_popcount(q[None, :]).astype(np.int64),
+                                 db_cnt.astype(np.int64))
 
 
 # ---------------------------------------------------------------------------
@@ -82,6 +96,8 @@ class HNSWIndex:
     level_of: np.ndarray | None = None                # (N,) int8 max level per node
     seed: int = 0                  # level-draw stream; insert_hnsw continues it
     max_level_cap: int = 4
+    # similarity the graph was built under; searches must use the same one
+    metric: Metric = TANIMOTO
     # construction-time upper layers (level -> {gid: int32 neighbour array});
     # kept so insert_hnsw can continue building without re-deriving state
     upper_dicts: list | None = field(default=None, repr=False)
@@ -116,7 +132,8 @@ class HNSWIndex:
 
 
 def _select_heuristic(cand_ids: np.ndarray, cand_sims: np.ndarray, m: int,
-                      db: np.ndarray, db_cnt: np.ndarray) -> np.ndarray:
+                      db: np.ndarray, db_cnt: np.ndarray,
+                      metric: Metric = TANIMOTO) -> np.ndarray:
     """Alg. 4 neighbour selection: keep candidate e only if it is closer to the
     query than to every already-selected neighbour (keeps long-range links).
 
@@ -131,8 +148,13 @@ def _select_heuristic(cand_ids: np.ndarray, cand_sims: np.ndarray, m: int,
     fps = db[cand]
     cnts = db_cnt[cand].astype(np.int64)
     inter = np.bitwise_count(fps[:, None, :] & fps[None, :, :]).sum(-1)
-    union = cnts[:, None] + cnts[None, :] - inter
-    pair = np.where(union > 0, inter / np.maximum(union, 1), 0.0).astype(np.float32)
+    if metric.name == "tanimoto":
+        union = cnts[:, None] + cnts[None, :] - inter
+        pair = np.where(union > 0, inter / np.maximum(union, 1),
+                        0.0).astype(np.float32)
+    else:
+        pair = metric_from_counts_np(metric, inter.astype(np.int64),
+                                     cnts[:, None], cnts[None, :])
 
     selected: list[int] = []
     for j in range(len(cand)):
@@ -154,7 +176,8 @@ def _select_heuristic(cand_ids: np.ndarray, cand_sims: np.ndarray, m: int,
 
 
 def _search_layer_np(index_db, db_cnt, adj, q, entry_points, ef,
-                     counters: dict | None = None, scorer=None):
+                     counters: dict | None = None, scorer=None,
+                     metric: Metric = TANIMOTO):
     """Host-side SEARCH-LAYER-BASE used during construction and by the
     ``numpy`` engine backend. adj: dict-like callable gid -> int32 array of
     neighbour gids. ``counters`` (optional) accumulates ``evals`` (scored
@@ -164,7 +187,7 @@ def _search_layer_np(index_db, db_cnt, adj, q, entry_points, ef,
     inserts); it must be value-identical to keep graphs deterministic."""
     if scorer is None:
         def scorer(qq, ids):
-            return _np_tanimoto(qq, index_db[ids], db_cnt[ids])
+            return _np_metric(metric, qq, index_db[ids], db_cnt[ids])
     visited = set(int(e) for e in entry_points)
     ep = np.asarray(list(visited), dtype=np.int32)
     sims = scorer(q, ep)
@@ -228,7 +251,8 @@ def _level_rng(index: HNSWIndex) -> np.random.Generator:
 
 
 def _insert_node(db, db_cnt, base_adj, upper, levels, i, m, ef_construction,
-                 entry_point, ep_level, scorer=None, dirty=None):
+                 entry_point, ep_level, scorer=None, dirty=None,
+                 metric: Metric = TANIMOTO):
     """Insert node ``i`` into the half-built graph (Alg. 1 descent + Alg. 2
     layer searches + Alg. 4 selection, with bidirectional link shrink).
 
@@ -259,14 +283,16 @@ def _insert_node(db, db_cnt, base_adj, upper, levels, i, m, ef_construction,
     # greedy descent through layers above l_new (Alg. 1)
     for level in range(ep_level, l_new, -1):
         ids, _ = _search_layer_np(db, db_cnt, adj_at(level), q, ep, 1,
-                                  scorer=scorer)
+                                  scorer=scorer, metric=metric)
         ep = ids[:1]
     # insert at layers min(ep_level, l_new) .. 0 (Alg. 2 + Alg. 4)
     for level in range(min(ep_level, l_new), -1, -1):
         ids, sims = _search_layer_np(db, db_cnt, adj_at(level), q, ep,
-                                     ef_construction, scorer=scorer)
+                                     ef_construction, scorer=scorer,
+                                     metric=metric)
         mmax = m0 if level == 0 else m
-        sel = _select_heuristic(ids, sims, min(m, len(ids)), db, db_cnt)
+        sel = _select_heuristic(ids, sims, min(m, len(ids)), db, db_cnt,
+                                metric=metric)
         if level == 0:
             base_adj[i, :len(sel)] = sel
             if dirty is not None:
@@ -285,14 +311,16 @@ def _insert_node(db, db_cnt, base_adj, upper, levels, i, m, ef_construction,
                     row[free[0]] = i
                 else:
                     cand = np.concatenate([row, [i]]).astype(np.int32)
-                    cs = _np_tanimoto(db[e], db[cand], db_cnt[cand])
-                    base_adj[e] = _select_heuristic(cand, cs, mmax, db, db_cnt)
+                    cs = _np_metric(metric, db[e], db[cand], db_cnt[cand])
+                    base_adj[e] = _select_heuristic(cand, cs, mmax, db, db_cnt,
+                                                    metric=metric)
             else:
                 row = upper[level].get(e, np.empty((0,), np.int32))
                 row = np.concatenate([row, [i]]).astype(np.int32)
                 if len(row) > m:
-                    cs = _np_tanimoto(db[e], db[row], db_cnt[row])
-                    row = _select_heuristic(row, cs, m, db, db_cnt)
+                    cs = _np_metric(metric, db[e], db[row], db_cnt[row])
+                    row = _select_heuristic(row, cs, m, db, db_cnt,
+                                            metric=metric)
                 upper[level][e] = row
         ep = ids
     if l_new > ep_level:
@@ -327,7 +355,8 @@ def _upper_dicts_from_dense(index: HNSWIndex) -> list:
 
 
 def build_hnsw(db: np.ndarray, m: int = 16, ef_construction: int = 100,
-               seed: int = 0, max_level_cap: int = 4) -> HNSWIndex:
+               seed: int = 0, max_level_cap: int = 4,
+               metric: Metric = TANIMOTO) -> HNSWIndex:
     """Sequential insert construction (paper builds offline; search is the
     accelerated path). The per-node insertion is :func:`_insert_node` — the
     same code online :func:`insert_hnsw` runs, so incremental growth and
@@ -344,7 +373,7 @@ def build_hnsw(db: np.ndarray, m: int = 16, ef_construction: int = 100,
     for i in range(n):
         entry_point, ep_level = _insert_node(
             db, db_cnt, base_adj, upper, levels, i, m, ef_construction,
-            entry_point, ep_level)
+            entry_point, ep_level, metric=metric)
 
     max_level = int(levels.max(initial=0))
     level_nodes, level_adj = _densify(upper, max_level, m)
@@ -353,7 +382,8 @@ def build_hnsw(db: np.ndarray, m: int = 16, ef_construction: int = 100,
                      max_level=max_level, base_adj=base_adj,
                      level_nodes=level_nodes, level_adj=level_adj,
                      level_of=levels.astype(np.int8), seed=seed,
-                     max_level_cap=max_level_cap, upper_dicts=upper, rng=rng)
+                     max_level_cap=max_level_cap, metric=metric,
+                     upper_dicts=upper, rng=rng)
 
 
 def _ensure_capacity(index: HNSWIndex, n_total: int) -> None:
@@ -427,12 +457,13 @@ def insert_hnsw(index: HNSWIndex, new_fps: np.ndarray,
     upper = index.upper_dicts
     scorer = (scorer_factory(index.db, index.db_popcount)
               if scorer_factory is not None else None)
+    metric = getattr(index, "metric", TANIMOTO)
     ep, epl = int(index.entry_point), int(index.max_level)
     for i in range(n_old, n_total):
         ep, epl = _insert_node(index.db, index.db_popcount, index.base_adj,
                                upper, index.level_of, i, index.m,
                                index.ef_construction, ep, epl, scorer=scorer,
-                               dirty=index.dirty_log)
+                               dirty=index.dirty_log, metric=metric)
     index.entry_point, index.max_level = int(ep), int(epl)
     index.level_nodes, index.level_adj = _densify(upper, index.max_level,
                                                   index.m)
@@ -533,33 +564,33 @@ def to_device_graph(index: HNSWIndex, capacity: int | None = None,
         nbr_fps=nbr_fps, nbr_cnt=nbr_cnt)
 
 
-def _sims(q: jax.Array, q_cnt: jax.Array, g: HNSWDeviceGraph, ids: jax.Array) -> jax.Array:
+def _sims(q: jax.Array, q_cnt: jax.Array, g: HNSWDeviceGraph, ids: jax.Array,
+          metric: Metric = TANIMOTO) -> jax.Array:
     """Single-query view of :func:`score_ids_jnp` (greedy-descent stage)."""
-    return score_ids_jnp(q[None], q_cnt[None], g, ids[None])[0]
+    return score_ids_jnp(q[None], q_cnt[None], g, ids[None], metric=metric)[0]
 
 
 def score_ids_jnp(queries: jax.Array, q_cnt: jax.Array, g: HNSWDeviceGraph,
-                  ids: jax.Array) -> jax.Array:
+                  ids: jax.Array, metric: Metric = TANIMOTO) -> jax.Array:
     """Batched gather-distance fallback: (Q, W) x (Q, E) ids -> (Q, E) sims.
 
     Plain-jnp twin of the Pallas ``kernels.ops.gather_tanimoto`` kernel —
-    identical arithmetic (popcount-Tanimoto, -inf for id -1), used when
-    Pallas is unavailable or the engine backend is ``"jnp"``.
+    identical arithmetic (popcount similarity via ``metric_from_counts``,
+    -inf for id -1), used when Pallas is unavailable or the engine backend
+    is ``"jnp"``.
     """
     safe = jnp.maximum(ids, 0)
     fps = g.db[safe]                                    # (Q, E, W)
     inter = jnp.sum(jax.lax.population_count(
         queries[:, None, :] & fps).astype(jnp.int32), axis=-1)
-    union = q_cnt[:, None] + g.db_popcount[safe] - inter
-    s = jnp.where(union > 0,
-                  inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
+    s = metric_from_counts(metric, inter, q_cnt[:, None], g.db_popcount[safe])
     return jnp.where(ids >= 0, s, NEG_INF)
 
 
 def expand_scores_jnp(queries: jax.Array, q_cnt: jax.Array,
                       nbr_fps: jax.Array, nbr_cnt: jax.Array,
                       pop_ids: jax.Array, flat_ids: jax.Array,
-                      worst: jax.Array, kk: int):
+                      worst: jax.Array, kk: int, metric: Metric = TANIMOTO):
     """Plain-jnp twin of the fused expand kernel (``kernels/expand.py``):
     gather ``beam`` contiguous neighbour blocks per query from the blocked
     layout, score, mask ``-1``/sub-threshold slots, return the top-``kk``
@@ -572,9 +603,7 @@ def expand_scores_jnp(queries: jax.Array, q_cnt: jax.Array,
     blk = nbr_fps[safe]                                 # (Q, B, 2M, W)
     inter = jnp.sum(jax.lax.population_count(
         queries[:, None, None, :] & blk).astype(jnp.int32), axis=-1)
-    union = q_cnt[:, None, None] + nbr_cnt[safe] - inter
-    s = jnp.where(union > 0,
-                  inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
+    s = metric_from_counts(metric, inter, q_cnt[:, None, None], nbr_cnt[safe])
     s = s.reshape(q_n, -1)
     s = jnp.where(flat_ids >= 0, s, NEG_INF)
     s = jnp.where(s > worst[:, None], s, NEG_INF)
@@ -584,7 +613,7 @@ def expand_scores_jnp(queries: jax.Array, q_cnt: jax.Array,
 
 
 def _greedy_descent(q, q_cnt, g: HNSWDeviceGraph, level: int,
-                    start: jax.Array) -> jax.Array:
+                    start: jax.Array, metric: Metric = TANIMOTO) -> jax.Array:
     """SEARCH-LAYER-TOP (Alg. 1) at one (static) upper level from ``start``."""
     adj = g.upper_adj[level - 1]
 
@@ -595,13 +624,13 @@ def _greedy_descent(q, q_cnt, g: HNSWDeviceGraph, level: int,
     def body(state):
         cur, cur_sim, _ = state
         neigh = adj[cur]                                   # (M,)
-        s = _sims(q, q_cnt, g, neigh)
+        s = _sims(q, q_cnt, g, neigh, metric=metric)
         j = jnp.argmax(s)
         better = s[j] > cur_sim
         return (jnp.where(better, neigh[j], cur),
                 jnp.where(better, s[j], cur_sim), better)
 
-    s0 = _sims(q, q_cnt, g, start[None])[0]
+    s0 = _sims(q, q_cnt, g, start[None], metric=metric)[0]
     cur, _, _ = jax.lax.while_loop(cond, body, (start, s0, jnp.bool_(True)))
     return cur
 
@@ -638,7 +667,7 @@ def stats_summary(iters, expansions, reason, m2: int) -> dict:
 
 def search_hnsw(g: HNSWDeviceGraph, queries: jax.Array, k: int, ef: int,
                 max_iters: int | None = None, beam: int = 1, score_fn=None,
-                expand_fn=None):
+                expand_fn=None, metric: Metric = TANIMOTO):
     """Batched device-resident KNN search over the base layer.
 
     The whole query batch traverses in lock-step inside one
@@ -678,7 +707,7 @@ def search_hnsw(g: HNSWDeviceGraph, queries: jax.Array, k: int, ef: int,
         max_iters = 4 * ef + 16
     if score_fn is None:
         def score_fn(qs, qc, ids):
-            return score_ids_jnp(qs, qc, g, ids)
+            return score_ids_jnp(qs, qc, g, ids, metric=metric)
 
     q_n = queries.shape[0]
     n = g.db.shape[0]
@@ -704,7 +733,7 @@ def search_hnsw(g: HNSWDeviceGraph, queries: jax.Array, k: int, ef: int,
     def descend(q, qc):
         ep = g.entry_point
         for level in range(g.max_level, 0, -1):          # static unroll
-            ep = _greedy_descent(q, qc, g, level, ep)
+            ep = _greedy_descent(q, qc, g, level, ep, metric=metric)
         return ep
 
     ep = jax.vmap(descend)(queries, q_cnt)               # (Q,)
@@ -833,7 +862,8 @@ def globalize_shard_ids(local_ids: jax.Array) -> jax.Array:
 
 def build_hnsw_sharded(db: np.ndarray, n_shards: int, m: int = 16,
                        ef_construction: int = 100, seed: int = 0,
-                       max_level_cap: int = 4) -> list:
+                       max_level_cap: int = 4,
+                       metric: Metric = TANIMOTO) -> list:
     """Build S independent per-shard indexes over the round-robin partition.
 
     Shard ``s`` is ``build_hnsw(db[s::S], seed=seed + s)`` — with
@@ -849,7 +879,8 @@ def build_hnsw_sharded(db: np.ndarray, n_shards: int, m: int = 16,
         raise ValueError(f"cannot split {db.shape[0]} rows into "
                          f"{n_shards} shards")
     return [build_hnsw(db[s::n_shards], m=m, ef_construction=ef_construction,
-                       seed=seed + s, max_level_cap=max_level_cap)
+                       seed=seed + s, max_level_cap=max_level_cap,
+                       metric=metric)
             for s in range(n_shards)]
 
 
@@ -917,7 +948,8 @@ def to_device_graph_sharded(indexes: list, layout: str = "rows",
 
 def search_hnsw_sharded(graphs: list, queries, k: int, ef: int,
                         max_iters: int | None = None, beam: int = 1,
-                        score_fn_for=None, expand_fn_for=None):
+                        score_fn_for=None, expand_fn_for=None,
+                        metric: Metric = TANIMOTO):
     """Fan-out KNN over per-shard device graphs + rank-merge.
 
     Runs one :func:`search_hnsw` lock-step traversal per shard (queries are
@@ -944,7 +976,8 @@ def search_hnsw_sharded(graphs: list, queries, k: int, ef: int,
         ids, sims, st = search_hnsw(
             g, q, k, ef, max_iters=max_iters, beam=beam,
             score_fn=score_fn_for(g) if score_fn_for else None,
-            expand_fn=expand_fn_for(g) if expand_fn_for else None)
+            expand_fn=expand_fn_for(g) if expand_fn_for else None,
+            metric=metric)
         runs_s.append(jax.device_put(sims, dev0))
         runs_i.append(jax.device_put(ids, dev0))
         stats.append(st)
@@ -963,6 +996,7 @@ def search_hnsw_numpy(index: HNSWIndex, queries: np.ndarray, k: int, ef: int):
     """
     ef = max(ef, k)
     db, db_cnt = index.db, index.db_popcount
+    metric = getattr(index, "metric", TANIMOTO)
 
     def adj_at(level):
         if level == 0:
@@ -984,10 +1018,11 @@ def search_hnsw_numpy(index: HNSWIndex, queries: np.ndarray, k: int, ef: int):
     for qi, q in enumerate(queries):
         ep = np.asarray([index.entry_point], dtype=np.int32)
         for level in range(index.max_level, 0, -1):
-            ids, _ = _search_layer_np(db, db_cnt, adj_at(level), q, ep, 1)
+            ids, _ = _search_layer_np(db, db_cnt, adj_at(level), q, ep, 1,
+                                      metric=metric)
             ep = ids[:1]
         ids, sims = _search_layer_np(db, db_cnt, adj_at(0), q, ep, ef,
-                                     counters=counters)
+                                     counters=counters, metric=metric)
         kk = min(k, len(ids))
         ids_out[qi, :kk] = ids[:kk]
         sims_out[qi, :kk] = sims[:kk]

@@ -45,12 +45,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.fingerprints import Metric, TANIMOTO, metric_from_counts
+
 NEG = float("-inf")  # python scalar: must not be a captured jnp constant
 
 
 def _expand_body(pop_ref, q_ref, qcnt_ref, ids_ref, worst_ref, nbr_ref,
                  cnt_ref, s_out, i_out, s_buf, *, beam: int, m2: int,
-                 kk: int, n_exp: int):
+                 kk: int, n_exp: int, metric: Metric = TANIMOTO):
     b = pl.program_id(1)
 
     @pl.when(b == 0)
@@ -61,10 +63,7 @@ def _expand_body(pop_ref, q_ref, qcnt_ref, ids_ref, worst_ref, nbr_ref,
     blk = nbr_ref[0]                                   # (2M, W) streamed block
     inter = jnp.sum(jax.lax.population_count(
         q[None, :] & blk).astype(jnp.int32), axis=-1)  # (2M,)
-    union = qcnt_ref[0] + cnt_ref[0] - inter
-    s = jnp.where(union > 0,
-                  inter.astype(jnp.float32) / union.astype(jnp.float32),
-                  jnp.float32(0.0))
+    s = metric_from_counts(metric, inter, qcnt_ref[0], cnt_ref[0])
     ids_b = ids_ref[0, pl.ds(b * m2, m2)]              # this slot's flat ids
     s = jnp.where(ids_b >= 0, s, NEG)                  # -1 = pad/visited/dup
     s = jnp.where(s > worst_ref[0], s, NEG)            # evict-worst filter
@@ -83,7 +82,7 @@ def expand_sorted_scores(queries: jax.Array, q_cnt: jax.Array,
                          nbr_fps: jax.Array, nbr_cnt: jax.Array,
                          pop_ids: jax.Array, flat_ids: jax.Array,
                          worst: jax.Array, kk: int,
-                         interpret: bool = True):
+                         interpret: bool = True, metric: Metric = TANIMOTO):
     """queries (Q, W) u32, q_cnt (Q,) i32, nbr_fps (N, 2M, W) u32,
     nbr_cnt (N, 2M) i32, pop_ids (Q, beam) i32 (popped node ids, -1 = empty
     pop), flat_ids (Q, beam*2M) i32 (adjacency of the popped beam, -1 for
@@ -110,7 +109,7 @@ def expand_sorted_scores(queries: jax.Array, q_cnt: jax.Array,
         return (jnp.clip(pop_ref[q, b], 0, n - 1), 0)
 
     body = functools.partial(_expand_body, beam=beam, m2=m2, kk=kk,
-                             n_exp=n_exp)
+                             n_exp=n_exp, metric=metric)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(q_n, beam),

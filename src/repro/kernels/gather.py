@@ -37,11 +37,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.fingerprints import Metric, TANIMOTO, metric_from_counts
+
 NEG = float("-inf")  # python scalar: must not be a captured jnp constant
 
 
 def _gather_body(ids_ref, q_ref, qcnt_ref, row_ref, out_ref, s_buf,
-                 *, n_cand: int):
+                 *, n_cand: int, metric: Metric = TANIMOTO):
     qi = pl.program_id(0)
     e = pl.program_id(1)
 
@@ -53,10 +55,7 @@ def _gather_body(ids_ref, q_ref, qcnt_ref, row_ref, out_ref, s_buf,
     row = row_ref[0, :]                                 # (W,) gathered print
     inter = jnp.sum(jax.lax.population_count(q & row).astype(jnp.int32))
     cnt = jnp.sum(jax.lax.population_count(row).astype(jnp.int32))
-    union = qcnt_ref[0] + cnt - inter
-    s = jnp.where(union > 0,
-                  inter.astype(jnp.float32) / union.astype(jnp.float32),
-                  jnp.float32(0.0))
+    s = metric_from_counts(metric, inter, qcnt_ref[0], cnt)
     s = jnp.where(ids_ref[qi, e] >= 0, s, NEG)          # validity mask
     lane = jax.lax.iota(jnp.int32, n_cand)
     s_buf[0, :] = jnp.where(lane == e, s, s_buf[0, :])
@@ -68,12 +67,13 @@ def _gather_body(ids_ref, q_ref, qcnt_ref, row_ref, out_ref, s_buf,
 
 def gather_tanimoto_scores(queries: jax.Array, q_cnt: jax.Array,
                            db: jax.Array, ids: jax.Array,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool = True,
+                           metric: Metric = TANIMOTO) -> jax.Array:
     """queries (Q, W) u32, q_cnt (Q,) i32, db (N, W) u32, ids (Q, E) i32.
 
-    Returns sims (Q, E) f32: Tanimoto(query_q, db[ids[q, e]]), with ``-inf``
-    wherever ``ids[q, e] < 0``. The DB stays in HBM; only the E gathered rows
-    per query cross into VMEM.
+    Returns sims (Q, E) f32: sim(query_q, db[ids[q, e]]) under ``metric``
+    (Tanimoto by default), with ``-inf`` wherever ``ids[q, e] < 0``. The DB
+    stays in HBM; only the E gathered rows per query cross into VMEM.
     """
     q_n, w = queries.shape
     e_n = ids.shape[1]
@@ -84,7 +84,7 @@ def gather_tanimoto_scores(queries: jax.Array, q_cnt: jax.Array,
         # body masks their score to -inf, so the fetched data is never used
         return (jnp.clip(ids_ref[q, e], 0, n - 1), 0)
 
-    body = functools.partial(_gather_body, n_cand=e_n)
+    body = functools.partial(_gather_body, n_cand=e_n, metric=metric)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(q_n, e_n),

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.fingerprints import popcount
+from ..core.fingerprints import Metric, TANIMOTO, popcount
 from . import tanimoto_topk as ktk
 
 # Interpret mode on CPU (this container); on TPU backends the kernels compile
@@ -30,37 +30,52 @@ def _pick_tile(n: int, tile_n: int | None) -> int:
     return min(ktk.DEFAULT_TILE_N, max(128, 1 << (max(n - 1, 1)).bit_length() - 1))
 
 
-@functools.partial(jax.jit, static_argnames=("k", "tile_n"))
-def _tanimoto_topk_impl(queries, db, db_cnt, k: int, tile_n: int):
+@functools.partial(jax.jit, static_argnames=("k", "tile_n", "metric"))
+def _tanimoto_topk_impl(queries, db, db_cnt, k: int, tile_n: int,
+                        metric: Metric = TANIMOTO):
     n = db.shape[0]
     pad = (-n) % tile_n
     db_p = jnp.pad(db, ((0, pad), (0, 0)))
     cnt_p = jnp.pad(db_cnt, (0, pad))
     return ktk.fused_tanimoto_topk(queries, db_p, cnt_p, k=k, n_valid=n,
-                                   tile_n=tile_n, interpret=_interpret())
+                                   tile_n=tile_n, interpret=_interpret(),
+                                   metric=metric)
 
 
 def tanimoto_topk(queries: jax.Array, db: jax.Array, k: int,
                   db_popcount: jax.Array | None = None,
-                  tile_n: int | None = None):
-    """Fused on-the-fly exhaustive KNN: (Q, W) x (N, W) -> ids, vals (Q, k)."""
+                  tile_n: int | None = None,
+                  metric: Metric | None = None):
+    """Fused on-the-fly exhaustive KNN: (Q, W) x (N, W) -> ids, vals (Q, k).
+
+    ``metric`` is a trace-time constant: each (metric, shape) pair compiles
+    once; the Tanimoto default emits the historical HLO unchanged."""
     queries = jnp.asarray(queries)
     db = jnp.asarray(db)
     if db_popcount is None:
         db_popcount = popcount(db)
     tile = min(_pick_tile(db.shape[0], tile_n), db.shape[0] if db.shape[0] >= 128 else 128)
-    ids, vals = _tanimoto_topk_impl(queries, db, db_popcount, k, tile)
+    ids, vals = _tanimoto_topk_impl(queries, db, db_popcount, k, tile,
+                                    metric if metric is not None else TANIMOTO)
     return ids, vals
 
 
-@functools.partial(jax.jit, static_argnames=("k", "max_tiles", "tile_n", "n_valid", "cutoff"))
+@functools.partial(jax.jit, static_argnames=("k", "max_tiles", "tile_n", "n_valid", "cutoff", "metric"))
 def _bitbound_topk_impl(queries, db_sorted, cnt_sorted, counts_i32,
                         k: int, max_tiles: int, tile_n: int, n_valid: int,
-                        cutoff: float):
-    # Eq.2 window per query, in tile units
+                        cutoff: float, metric: Metric = TANIMOTO):
+    # per-metric popcount window per query (Tanimoto: Eq.2), in tile units
     a = jnp.sum(jax.lax.population_count(queries).astype(jnp.int32), -1).astype(jnp.float32)
-    lo_cnt = jnp.ceil(a * cutoff).astype(jnp.int32)
-    hi_cnt = jnp.floor(a / max(cutoff, 1e-6)).astype(jnp.int32)
+    if metric.name == "tanimoto":
+        lo_cnt = jnp.ceil(a * cutoff).astype(jnp.int32)
+        hi_cnt = jnp.floor(a / max(cutoff, 1e-6)).astype(jnp.int32)
+    else:
+        lo_r, hi_r = metric.bound_ratios(cutoff)
+        lo_cnt = (jnp.ceil(a * lo_r) if metric.bounded_below
+                  else jnp.zeros_like(a)).astype(jnp.int32)
+        hi_cnt = (jnp.minimum(jnp.floor(a * hi_r), 2.0**30)
+                  if metric.bounded_above
+                  else jnp.full_like(a, 2.0**30)).astype(jnp.int32)
     lo = jnp.searchsorted(counts_i32, lo_cnt, side="left").astype(jnp.int32)
     hi = jnp.searchsorted(counts_i32, hi_cnt, side="right").astype(jnp.int32)
     lo_tile = lo // tile_n
@@ -69,13 +84,14 @@ def _bitbound_topk_impl(queries, db_sorted, cnt_sorted, counts_i32,
     ids_sorted, vals = ktk.bitbound_fused_topk(
         queries, db_sorted, cnt_sorted, lo_tile, n_tiles_q, k=k,
         max_tiles=max_tiles, n_valid=n_valid, cutoff=cutoff, tile_n=tile_n,
-        interpret=_interpret())
+        interpret=_interpret(), metric=metric)
     return ids_sorted, vals
 
 
 def bitbound_topk(queries: jax.Array, db_sorted: jax.Array,
                   counts_sorted: jax.Array, k: int, cutoff: float,
-                  max_tiles: int | None = None, tile_n: int | None = None):
+                  max_tiles: int | None = None, tile_n: int | None = None,
+                  metric: Metric | None = None):
     """BitBound-windowed fused KNN over a popcount-sorted DB.
 
     Returns ids into the *sorted* database (caller maps through the
@@ -94,23 +110,26 @@ def bitbound_topk(queries: jax.Array, db_sorted: jax.Array,
         max_tiles = total_tiles
     max_tiles = min(max_tiles, total_tiles)
     ids_sorted, vals = _bitbound_topk_impl(
-        queries, db_p, cnt_p, counts_sorted, k, max_tiles, tile, n, float(cutoff))
+        queries, db_p, cnt_p, counts_sorted, k, max_tiles, tile, n,
+        float(cutoff), metric if metric is not None else TANIMOTO)
     ids_sorted = jnp.where(jnp.isfinite(vals), ids_sorted, -1)
     return ids_sorted, vals
 
 
-@functools.partial(jax.jit, static_argnames=("k", "max_tiles", "tile_n", "n_valid"))
+@functools.partial(jax.jit, static_argnames=("k", "max_tiles", "tile_n", "n_valid", "metric"))
 def _window_topk_impl(queries, db_p, cnt_p, lo_tile, n_tiles, lo_row, hi_row,
-                      k: int, max_tiles: int, tile_n: int, n_valid: int):
+                      k: int, max_tiles: int, tile_n: int, n_valid: int,
+                      metric: Metric = TANIMOTO):
     return ktk.windowed_fused_topk(queries, db_p, cnt_p, lo_tile, n_tiles,
                                    lo_row, hi_row, k=k, max_tiles=max_tiles,
                                    n_valid=n_valid, tile_n=tile_n,
-                                   interpret=_interpret())
+                                   interpret=_interpret(), metric=metric)
 
 
 def window_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
                 lo_row: jax.Array, hi_row: jax.Array, k: int,
-                max_tiles: int | None = None, tile_n: int | None = None):
+                max_tiles: int | None = None, tile_n: int | None = None,
+                metric: Metric | None = None):
     """Fused KNN over a per-query row window [lo_row, hi_row) of ``db``.
 
     Stage 1 of the two-stage engine: ``db`` is typically the *folded*
@@ -145,7 +164,8 @@ def window_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
     n_tiles = jnp.clip(n_tiles, 0, max_tiles)
     ids, vals = _window_topk_impl(queries, db_p, cnt_p, lo_tile, n_tiles,
                                   lo_row, hi_row, k=k, max_tiles=max_tiles,
-                                  tile_n=tile, n_valid=n)
+                                  tile_n=tile, n_valid=n,
+                                  metric=metric if metric is not None else TANIMOTO)
     ids = jnp.where(jnp.isfinite(vals), ids, -1)
     return ids, vals
 
@@ -155,7 +175,8 @@ def bitcount(words: jax.Array) -> jax.Array:
 
 
 def gather_tanimoto(queries: jax.Array, db: jax.Array, ids: jax.Array,
-                    q_cnt: jax.Array | None = None) -> jax.Array:
+                    q_cnt: jax.Array | None = None,
+                    metric: Metric | None = None) -> jax.Array:
     """Fine-grained gather-distance stage: per-query candidate ids -> sims.
 
     queries (Q, W) u32, db (N, W) u32, ids (Q, E) i32 -> (Q, E) f32.
@@ -169,14 +190,16 @@ def gather_tanimoto(queries: jax.Array, db: jax.Array, ids: jax.Array,
     ids = jnp.asarray(ids, dtype=jnp.int32)
     if q_cnt is None:
         q_cnt = popcount(queries)
-    return kg.gather_tanimoto_scores(queries, q_cnt, db, ids,
-                                     interpret=_interpret())
+    return kg.gather_tanimoto_scores(
+        queries, q_cnt, db, ids, interpret=_interpret(),
+        metric=metric if metric is not None else TANIMOTO)
 
 
 def expand_tanimoto_sorted(queries: jax.Array, nbr_fps: jax.Array,
                            nbr_cnt: jax.Array, pop_ids: jax.Array,
                            flat_ids: jax.Array, worst: jax.Array, kk: int,
-                           q_cnt: jax.Array | None = None):
+                           q_cnt: jax.Array | None = None,
+                           metric: Metric | None = None):
     """Fused beam-expansion stage over the neighbour-blocked layout.
 
     queries (Q, W) u32, nbr_fps (N, 2M, W) u32, nbr_cnt (N, 2M) i32,
@@ -195,23 +218,26 @@ def expand_tanimoto_sorted(queries: jax.Array, nbr_fps: jax.Array,
         queries, q_cnt, jnp.asarray(nbr_fps), jnp.asarray(nbr_cnt),
         jnp.asarray(pop_ids, dtype=jnp.int32),
         jnp.asarray(flat_ids, dtype=jnp.int32),
-        jnp.asarray(worst), kk, interpret=_interpret())
+        jnp.asarray(worst), kk, interpret=_interpret(),
+        metric=metric if metric is not None else TANIMOTO)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "qb", "tile_n"))
-def _blocked_topk_impl(queries, db, db_cnt, k: int, qb: int, tile_n: int):
+@functools.partial(jax.jit, static_argnames=("k", "qb", "tile_n", "metric"))
+def _blocked_topk_impl(queries, db, db_cnt, k: int, qb: int, tile_n: int,
+                       metric: Metric = TANIMOTO):
     n = db.shape[0]
     pad = (-n) % tile_n
     db_p = jnp.pad(db, ((0, pad), (0, 0)))
     cnt_p = jnp.pad(db_cnt, (0, pad))
     return ktk.blocked_tanimoto_topk(queries, db_p, cnt_p, k=k, n_valid=n,
                                      qb=qb, tile_n=tile_n,
-                                     interpret=_interpret())
+                                     interpret=_interpret(), metric=metric)
 
 
 def tanimoto_topk_blocked(queries: jax.Array, db: jax.Array, k: int,
                           db_popcount: jax.Array | None = None, qb: int = 8,
-                          tile_n: int | None = None):
+                          tile_n: int | None = None,
+                          metric: Metric | None = None):
     """Query-blocked fused engine: one DB sweep serves qb queries
     (bytes/query divided by qb — see kernel docstring). Pads Q up to a qb
     multiple."""
@@ -226,5 +252,6 @@ def tanimoto_topk_blocked(queries: jax.Array, db: jax.Array, k: int,
             [queries, jnp.zeros((qpad, queries.shape[1]), queries.dtype)])
     tile = min(_pick_tile(db.shape[0], tile_n),
                db.shape[0] if db.shape[0] >= 128 else 128)
-    ids, vals = _blocked_topk_impl(queries, db, db_popcount, k, qb, tile)
+    ids, vals = _blocked_topk_impl(queries, db, db_popcount, k, qb, tile,
+                                   metric if metric is not None else TANIMOTO)
     return ids[:qn], vals[:qn]

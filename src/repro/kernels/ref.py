@@ -4,39 +4,48 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..core.fingerprints import popcount
+from ..core.fingerprints import Metric, TANIMOTO, metric_from_counts, popcount
 
 
 def tanimoto_scores_ref(queries: jax.Array, db: jax.Array,
-                        db_popcount: jax.Array | None = None) -> jax.Array:
-    """(Q, W) x (N, W) -> (Q, N) float32 Tanimoto score matrix."""
+                        db_popcount: jax.Array | None = None,
+                        metric: Metric = TANIMOTO) -> jax.Array:
+    """(Q, W) x (N, W) -> (Q, N) float32 score matrix (Tanimoto default)."""
     if db_popcount is None:
         db_popcount = popcount(db)
     q_cnt = popcount(queries)
     inter = jnp.sum(
         jax.lax.population_count(queries[:, None, :] & db[None, :, :]).astype(jnp.int32),
         axis=-1)
-    union = q_cnt[:, None] + db_popcount[None, :] - inter
-    return jnp.where(union > 0,
-                     inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
+    return metric_from_counts(metric, inter, q_cnt[:, None], db_popcount[None, :])
 
 
 def tanimoto_topk_ref(queries: jax.Array, db: jax.Array, k: int,
-                      db_popcount: jax.Array | None = None):
+                      db_popcount: jax.Array | None = None,
+                      metric: Metric = TANIMOTO):
     """Oracle for the fused on-the-fly engine: exact top-k ids + scores."""
-    scores = tanimoto_scores_ref(queries, db, db_popcount)
+    scores = tanimoto_scores_ref(queries, db, db_popcount, metric=metric)
     vals, ids = jax.lax.top_k(scores, k)
     return ids.astype(jnp.int32), vals
 
 
 def bitbound_topk_ref(queries: jax.Array, db_sorted: jax.Array,
-                      counts_sorted: jax.Array, k: int, cutoff: float):
-    """Oracle for the BitBound-pruned kernel: scores outside the Eq.2 popcount
-    window are treated as -inf (never returned)."""
-    scores = tanimoto_scores_ref(queries, db_sorted, counts_sorted)
+                      counts_sorted: jax.Array, k: int, cutoff: float,
+                      metric: Metric = TANIMOTO):
+    """Oracle for the BitBound-pruned kernel: scores outside the metric's
+    popcount window (Tanimoto: Eq.2) are treated as -inf (never returned)."""
+    scores = tanimoto_scores_ref(queries, db_sorted, counts_sorted,
+                                 metric=metric)
     a = popcount(queries).astype(jnp.float32)
-    lo = jnp.ceil(a * cutoff)[:, None]
-    hi = jnp.floor(a / max(cutoff, 1e-6))[:, None]
+    if metric.name == "tanimoto":
+        lo = jnp.ceil(a * cutoff)[:, None]
+        hi = jnp.floor(a / max(cutoff, 1e-6))[:, None]
+    else:
+        lo_r, hi_r = metric.bound_ratios(cutoff)
+        lo = (jnp.ceil(a * lo_r) if metric.bounded_below
+              else jnp.zeros_like(a))[:, None]
+        hi = (jnp.floor(a * hi_r) if metric.bounded_above
+              else jnp.full_like(a, 2.0**30))[:, None]
     c = counts_sorted[None, :].astype(jnp.float32)
     in_range = jnp.logical_and(c >= lo, c <= hi)
     scores = jnp.where(in_range, scores, -jnp.inf)
@@ -46,10 +55,11 @@ def bitbound_topk_ref(queries: jax.Array, db_sorted: jax.Array,
 
 
 def window_topk_ref(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
-                    lo_row: jax.Array, hi_row: jax.Array, k: int):
+                    lo_row: jax.Array, hi_row: jax.Array, k: int,
+                    metric: Metric = TANIMOTO):
     """Oracle for the row-window kernel: rows outside [lo_row, hi_row) are
     -inf (never returned); invalid slots come back as id -1."""
-    scores = tanimoto_scores_ref(queries, db, db_cnt)
+    scores = tanimoto_scores_ref(queries, db, db_cnt, metric=metric)
     idx = jnp.arange(db.shape[0])[None, :]
     in_window = jnp.logical_and(idx >= lo_row[:, None], idx < hi_row[:, None])
     scores = jnp.where(in_window, scores, -jnp.inf)
@@ -59,7 +69,8 @@ def window_topk_ref(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
 
 
 def gather_tanimoto_ref(queries: jax.Array, db: jax.Array,
-                        ids: jax.Array) -> jax.Array:
+                        ids: jax.Array,
+                        metric: Metric = TANIMOTO) -> jax.Array:
     """Oracle for the gather-distance kernel: (Q, W) x (Q, E) ids -> (Q, E)
     sims, with -inf wherever id < 0."""
     safe = jnp.clip(ids, 0, db.shape[0] - 1)
@@ -67,15 +78,14 @@ def gather_tanimoto_ref(queries: jax.Array, db: jax.Array,
     q_cnt = popcount(queries)
     inter = jnp.sum(jax.lax.population_count(
         queries[:, None, :] & rows).astype(jnp.int32), axis=-1)
-    union = q_cnt[:, None] + popcount(db)[safe] - inter
-    s = jnp.where(union > 0,
-                  inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
+    s = metric_from_counts(metric, inter, q_cnt[:, None], popcount(db)[safe])
     return jnp.where(ids >= 0, s, -jnp.inf)
 
 
 def expand_sorted_ref(queries: jax.Array, nbr_fps: jax.Array,
                       nbr_cnt: jax.Array, pop_ids: jax.Array,
-                      flat_ids: jax.Array, worst: jax.Array, kk: int):
+                      flat_ids: jax.Array, worst: jax.Array, kk: int,
+                      metric: Metric = TANIMOTO):
     """Oracle for the fused beam-expansion kernel (``kernels/expand.py``):
     score every neighbour block of the popped beam, mask ``-1`` flat ids and
     scores ``<= worst``, return the top-``kk`` per query sorted descending
@@ -86,9 +96,7 @@ def expand_sorted_ref(queries: jax.Array, nbr_fps: jax.Array,
     q_cnt = popcount(queries)
     inter = jnp.sum(jax.lax.population_count(
         queries[:, None, None, :] & blk).astype(jnp.int32), axis=-1)
-    union = q_cnt[:, None, None] + nbr_cnt[safe] - inter
-    s = jnp.where(union > 0,
-                  inter.astype(jnp.float32) / union.astype(jnp.float32), 0.0)
+    s = metric_from_counts(metric, inter, q_cnt[:, None, None], nbr_cnt[safe])
     s = s.reshape(q_n, -1)
     s = jnp.where(flat_ids >= 0, s, -jnp.inf)
     s = jnp.where(s > worst[:, None], s, -jnp.inf)

@@ -39,6 +39,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.fingerprints import Metric, TANIMOTO, metric_from_counts
+
 DEFAULT_TILE_N = 2048
 NEG = float("-inf")  # python scalar: must not be a captured jnp constant
 
@@ -48,7 +50,8 @@ NEG = float("-inf")  # python scalar: must not be a captured jnp constant
 # ---------------------------------------------------------------------------
 
 def _fused_body(q_ref, qcnt_ref, db_ref, dbcnt_ref, ids_ref, vals_ref,
-                top_s, top_i, *, k: int, tile_n: int, n_tiles: int, n_valid: int):
+                top_s, top_i, *, k: int, tile_n: int, n_tiles: int, n_valid: int,
+                metric: Metric = TANIMOTO):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -59,12 +62,11 @@ def _fused_body(q_ref, qcnt_ref, db_ref, dbcnt_ref, ids_ref, vals_ref,
     q = q_ref[0, :]                                    # (W,) uint32
     db = db_ref[...]                                   # (tile_n, W) uint32
     # TFC stage: popcount(AND) and precomputed db counts (BitCnt runs on the
-    # query only, as in the paper)
+    # query only, as in the paper); the metric maps the (a, b, c) triple to a
+    # score at trace time — Tanimoto emits the exact historical op sequence.
     inter = jnp.sum(jax.lax.population_count(q[None, :] & db).astype(jnp.int32),
                     axis=-1)                           # (tile_n,)
-    union = qcnt_ref[0] + dbcnt_ref[...] - inter
-    s = jnp.where(union > 0, inter.astype(jnp.float32) / union.astype(jnp.float32),
-                  jnp.float32(0.0))
+    s = metric_from_counts(metric, inter, qcnt_ref[0], dbcnt_ref[...])
     idx = t * tile_n + jax.lax.iota(jnp.int32, tile_n)
     s = jnp.where(idx < n_valid, s, NEG)               # mask padded tail rows
     # top-K merge stage: sort-based combine with the persistent scratch
@@ -82,7 +84,7 @@ def _fused_body(q_ref, qcnt_ref, db_ref, dbcnt_ref, ids_ref, vals_ref,
 
 def fused_tanimoto_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
                         k: int, n_valid: int, tile_n: int = DEFAULT_TILE_N,
-                        interpret: bool = True):
+                        interpret: bool = True, metric: Metric = TANIMOTO):
     """queries (Q, W) u32, db (N_pad, W) u32, db_cnt (N_pad,) i32 (padded to a
     tile multiple; ``db_cnt`` may be any value in the pad — masking is by row
     index vs ``n_valid``). Returns ids (Q, k) i32, vals (Q, k) f32."""
@@ -93,7 +95,7 @@ def fused_tanimoto_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
     q_cnt = jnp.sum(jax.lax.population_count(queries).astype(jnp.int32), axis=-1)
 
     body = functools.partial(_fused_body, k=k, tile_n=tile_n, n_tiles=n_tiles,
-                             n_valid=n_valid)
+                             n_valid=n_valid, metric=metric)
     out = pl.pallas_call(
         body,
         grid=(q_n, n_tiles),
@@ -127,7 +129,7 @@ def fused_tanimoto_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
 def _bitbound_body(lo_ref, nt_ref, q_ref, qcnt_ref, db_ref, dbcnt_ref,
                    ids_ref, vals_ref, top_s, top_i,
                    *, k: int, tile_n: int, max_tiles: int, n_valid: int,
-                   cutoff: float):
+                   cutoff: float, metric: Metric = TANIMOTO):
     qi = pl.program_id(0)
     t = pl.program_id(1)
 
@@ -144,17 +146,22 @@ def _bitbound_body(lo_ref, nt_ref, q_ref, qcnt_ref, db_ref, dbcnt_ref,
         db = db_ref[...]
         inter = jnp.sum(jax.lax.population_count(q[None, :] & db).astype(jnp.int32),
                         axis=-1)
-        union = qcnt_ref[0] + dbcnt_ref[...] - inter
-        s = jnp.where(union > 0,
-                      inter.astype(jnp.float32) / union.astype(jnp.float32),
-                      jnp.float32(0.0))
+        s = metric_from_counts(metric, inter, qcnt_ref[0], dbcnt_ref[...])
         idx = (lo_ref[qi] + t) * tile_n + jax.lax.iota(jnp.int32, tile_n)
         s = jnp.where(idx < n_valid, s, NEG)
-        # strict Eq.2 mask: tile-aligned windows over-fetch boundary rows;
-        # rows whose popcount is outside [a*Sc, a/Sc] are never candidates
+        # strict bound mask: tile-aligned windows over-fetch boundary rows;
+        # rows whose popcount is outside the metric's window (Tanimoto:
+        # Eq.2 [a*Sc, a/Sc]) are never candidates. ``bound_ratios`` is a
+        # trace-time constant, so non-Tanimoto metrics cost the same mask.
         a = qcnt_ref[0].astype(jnp.float32)
-        lo_cnt = jnp.ceil(a * cutoff)
-        hi_cnt = jnp.floor(a / max(cutoff, 1e-6))
+        if metric.name == "tanimoto":
+            lo_cnt = jnp.ceil(a * cutoff)
+            hi_cnt = jnp.floor(a / max(cutoff, 1e-6))
+        else:
+            lo_r, hi_r = metric.bound_ratios(cutoff)
+            lo_cnt = jnp.ceil(a * lo_r) if metric.bounded_below else jnp.float32(0.0)
+            hi_cnt = (jnp.floor(a * hi_r) if metric.bounded_above
+                      else jnp.float32(2.0**30))
         c = dbcnt_ref[...].astype(jnp.float32)
         s = jnp.where(jnp.logical_and(c >= lo_cnt, c <= hi_cnt), s, NEG)
         all_s = jnp.concatenate([top_s[0, :], s])
@@ -174,7 +181,7 @@ def bitbound_fused_topk(queries: jax.Array, db_sorted: jax.Array,
                         n_tiles_q: jax.Array, k: int, max_tiles: int,
                         n_valid: int, cutoff: float,
                         tile_n: int = DEFAULT_TILE_N,
-                        interpret: bool = True):
+                        interpret: bool = True, metric: Metric = TANIMOTO):
     """Scan only each query's Eq.2 tile window of the popcount-sorted DB.
 
     lo_tile, n_tiles_q: (Q,) int32 scalar-prefetched window per query.
@@ -196,7 +203,7 @@ def bitbound_fused_topk(queries: jax.Array, db_sorted: jax.Array,
 
     body = functools.partial(_bitbound_body, k=k, tile_n=tile_n,
                              max_tiles=max_tiles, n_valid=n_valid,
-                             cutoff=cutoff)
+                             cutoff=cutoff, metric=metric)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(q_n, max_tiles),
@@ -242,7 +249,8 @@ def bitbound_fused_topk(queries: jax.Array, db_sorted: jax.Array,
 
 def _window_body(lo_t_ref, nt_ref, lo_ref, hi_ref, q_ref, qcnt_ref, db_ref,
                  dbcnt_ref, ids_ref, vals_ref, top_s, top_i,
-                 *, k: int, tile_n: int, max_tiles: int, n_valid: int):
+                 *, k: int, tile_n: int, max_tiles: int, n_valid: int,
+                 metric: Metric = TANIMOTO):
     qi = pl.program_id(0)
     t = pl.program_id(1)
 
@@ -259,10 +267,7 @@ def _window_body(lo_t_ref, nt_ref, lo_ref, hi_ref, q_ref, qcnt_ref, db_ref,
         db = db_ref[...]
         inter = jnp.sum(jax.lax.population_count(q[None, :] & db).astype(jnp.int32),
                         axis=-1)
-        union = qcnt_ref[0] + dbcnt_ref[...] - inter
-        s = jnp.where(union > 0,
-                      inter.astype(jnp.float32) / union.astype(jnp.float32),
-                      jnp.float32(0.0))
+        s = metric_from_counts(metric, inter, qcnt_ref[0], dbcnt_ref[...])
         idx = (lo_t_ref[qi] + t) * tile_n + jax.lax.iota(jnp.int32, tile_n)
         in_window = jnp.logical_and(idx >= lo_ref[qi], idx < hi_ref[qi])
         s = jnp.where(jnp.logical_and(in_window, idx < n_valid), s, NEG)
@@ -282,7 +287,8 @@ def windowed_fused_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
                         lo_tile: jax.Array, n_tiles_q: jax.Array,
                         lo_row: jax.Array, hi_row: jax.Array, k: int,
                         max_tiles: int, n_valid: int,
-                        tile_n: int = DEFAULT_TILE_N, interpret: bool = True):
+                        tile_n: int = DEFAULT_TILE_N, interpret: bool = True,
+                        metric: Metric = TANIMOTO):
     """Scan only rows [lo_row[q], hi_row[q]) of ``db`` for each query.
 
     lo_tile, n_tiles_q: (Q,) int32 tile window covering the row interval;
@@ -304,7 +310,8 @@ def windowed_fused_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
         return (jnp.minimum(blk, total_tiles - 1),)
 
     body = functools.partial(_window_body, k=k, tile_n=tile_n,
-                             max_tiles=max_tiles, n_valid=n_valid)
+                             max_tiles=max_tiles, n_valid=n_valid,
+                             metric=metric)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(q_n, max_tiles),
@@ -379,7 +386,7 @@ def bitcount(words: jax.Array, tile_n: int = 4096, interpret: bool = True):
 
 def _blocked_body(q_ref, qcnt_ref, db_ref, dbcnt_ref, ids_ref, vals_ref,
                   top_s, top_i, *, k: int, qb: int, tile_n: int,
-                  n_tiles: int, n_valid: int):
+                  n_tiles: int, n_valid: int, metric: Metric = TANIMOTO):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -391,9 +398,8 @@ def _blocked_body(q_ref, qcnt_ref, db_ref, dbcnt_ref, ids_ref, vals_ref,
     db = db_ref[...]                                   # (tile_n, W)
     inter = jnp.sum(jax.lax.population_count(
         q[:, None, :] & db[None, :, :]).astype(jnp.int32), axis=-1)  # (qb, tile_n)
-    union = qcnt_ref[...][:, None] + dbcnt_ref[...][None, :] - inter
-    s = jnp.where(union > 0, inter.astype(jnp.float32) / union.astype(jnp.float32),
-                  jnp.float32(0.0))
+    s = metric_from_counts(metric, inter, qcnt_ref[...][:, None],
+                           dbcnt_ref[...][None, :])
     idx = t * tile_n + jax.lax.iota(jnp.int32, tile_n)
     s = jnp.where((idx < n_valid)[None, :], s, NEG)
     all_s = jnp.concatenate([top_s[...], s], axis=1)   # (qb, k + tile_n)
@@ -411,7 +417,8 @@ def _blocked_body(q_ref, qcnt_ref, db_ref, dbcnt_ref, ids_ref, vals_ref,
 
 def blocked_tanimoto_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
                           k: int, n_valid: int, qb: int = 8,
-                          tile_n: int = DEFAULT_TILE_N, interpret: bool = True):
+                          tile_n: int = DEFAULT_TILE_N, interpret: bool = True,
+                          metric: Metric = TANIMOTO):
     """queries (Q, W) with Q a multiple of qb; one DB sweep per qb queries."""
     q_n, w = queries.shape
     assert q_n % qb == 0, (q_n, qb)
@@ -419,7 +426,7 @@ def blocked_tanimoto_topk(queries: jax.Array, db: jax.Array, db_cnt: jax.Array,
     n_tiles = n_pad // tile_n
     q_cnt = jnp.sum(jax.lax.population_count(queries).astype(jnp.int32), axis=-1)
     body = functools.partial(_blocked_body, k=k, qb=qb, tile_n=tile_n,
-                             n_tiles=n_tiles, n_valid=n_valid)
+                             n_tiles=n_tiles, n_valid=n_valid, metric=metric)
     out = pl.pallas_call(
         body,
         grid=(q_n // qb, n_tiles),

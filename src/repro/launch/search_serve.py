@@ -33,6 +33,7 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
           n_queries: int = 256, batches: int = 4, use_kernel: bool = False,
           backend: str | None = None, hnsw_layout: str = "rows",
           hnsw_shards: int | None = None, residency: str = "device",
+          metric: str | None = None, fp_bits: int | None = None,
           log=print):
     """``backend`` selects the engine execution path (shared contract, see
     ``core/engine.py``): "numpy" (host reference), "tpu" (device-resident
@@ -45,11 +46,20 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
     shards with a rank-merged global top-k (EXPERIMENTS.md §Sharded
     HNSW). ``residency="tiered"`` keeps the full-resolution DB host-side
     and streams rescore candidates through a double-buffered HBM window
-    (bitbound-folding engine; EXPERIMENTS.md §Tiered residency)."""
-    db = synthetic_fingerprints(SyntheticConfig(n=n_db))
+    (bitbound-folding engine; EXPERIMENTS.md §Tiered residency).
+    ``metric`` / ``fp_bits`` pick the similarity and fingerprint width the
+    engines are traced at (EXPERIMENTS.md §Metric sweep)."""
+    from ..core.fingerprints import resolve_metric
+    met = resolve_metric(metric)
+    length = int(fp_bits) if fp_bits else 1024
+    db = synthetic_fingerprints(SyntheticConfig(n=n_db, length=length))
     queries = queries_from_db(db, n_queries * batches)
 
     if engine == "sharded-brute":
+        if met.name != "tanimoto":
+            raise ValueError(
+                "--metric is not supported by the sharded-brute mesh loop; "
+                "use --engine bitbound-folding / hnsw / service")
         # only this branch needs the device mesh — the single-chip engines
         # must stay servable even where mesh construction is unsupported
         with make_local_mesh() as mesh:
@@ -69,7 +79,7 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
     elif engine == "bitbound-folding":
         eng = BitBoundFoldingEngine(db, cutoff=CHEMBL_LIKE.cutoff,
                                     m=CHEMBL_LIKE.folding_m, backend=backend,
-                                    residency=residency)
+                                    residency=residency, metric=met)
         if eng.backend in ("jnp", "tpu"):
             # warm every batch once: different batches can hit different
             # (window-bucket, k) pipelines, and compiling inside the timed
@@ -85,7 +95,7 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
                          ef_construction=CHEMBL_LIKE.hnsw_ef_construction,
                          ef_search=CHEMBL_LIKE.hnsw_ef_search,
                          backend=backend, layout=hnsw_layout,
-                         shards=hnsw_shards)
+                         shards=hnsw_shards, metric=met)
         eng.search(queries[:n_queries], k)  # compile
         t0 = time.time()
         for b in range(batches):
@@ -101,7 +111,7 @@ def serve(engine: str = "sharded-brute", n_db: int = 100_000, k: int = 20,
 
     qps = n_queries * batches / dt
     log(f"[search-serve] engine={engine} backend={backend or 'default'} "
-        f"db={n_db} k={k}: "
+        f"metric={met.spec} fp_bits={length} db={n_db} k={k}: "
         f"{qps:.0f} QPS ({dt:.2f}s for {n_queries * batches} queries)")
     return qps
 
@@ -132,6 +142,7 @@ def serve_frontend(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
                    backend: str | None = None, compact_threshold: int = 2048,
                    replicas: int = 2, durable_dir: str | None = None,
                    snapshot_every: int = 0, resume: bool = False,
+                   metric: str | None = None, fp_bits: int | None = None,
                    metrics_out: str | None = None,
                    trace_out: str | None = None, log=print):
     """Drive the concurrent serving tier (ISSUE 9): the same mixed
@@ -148,8 +159,10 @@ def serve_frontend(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
     if trace_out:
         TRACER.clear()
         TRACER.configure(enabled=True)
-    db = synthetic_fingerprints(SyntheticConfig(n=n_db))
-    pool = synthetic_fingerprints(SyntheticConfig(n=max(n_ops, 64), seed=7))
+    length = int(fp_bits) if fp_bits else 1024
+    db = synthetic_fingerprints(SyntheticConfig(n=n_db, length=length))
+    pool = synthetic_fingerprints(
+        SyntheticConfig(n=max(n_ops, 64), length=length, seed=7))
     queries = queries_from_db(db, min(n_db, 512))
     fcfg = FrontendConfig(replicas=replicas, default_deadline_ms=None,
                           flush_interval_ms=1.0,
@@ -159,15 +172,26 @@ def serve_frontend(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
             raise ValueError("--resume requires --durable-dir")
         fe = SearchFrontend.open(
             durable_dir, frontend=fcfg,
-            **({"backend": backend} if backend else {}))
+            **({"backend": backend} if backend else {}),
+            **({"metric": metric} if metric else {}))
         log(f"[search-serve] frontend resumed from {durable_dir}: "
             f"{fe.n_total} rows x {replicas} replicas")
+        if fe.words * 32 != length:
+            # the snapshot decides the width on resume — regenerate the
+            # driver's insert pool + query set at the restored width
+            length = fe.words * 32
+            db = synthetic_fingerprints(SyntheticConfig(n=n_db,
+                                                        length=length))
+            pool = synthetic_fingerprints(
+                SyntheticConfig(n=max(n_ops, 64), length=length, seed=7))
+            queries = queries_from_db(db, min(n_db, 512))
     else:
         fe = SearchFrontend(db, engines=engines, backend=backend, k=k,
                             cutoff=CHEMBL_LIKE.cutoff,
                             fold_m=CHEMBL_LIKE.folding_m,
                             compact_threshold=compact_threshold,
-                            durable_dir=durable_dir, frontend=fcfg)
+                            durable_dir=durable_dir, frontend=fcfg,
+                            metric=metric or "tanimoto", fp_bits=fp_bits)
     ops = make_workload(n_ops, write_ratio, pool, queries)
     enames = list(fe.engines)
     futs = []
@@ -215,6 +239,7 @@ def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
                   resume: bool = False, residency: str = "device",
                   tier_chunk_rows: int | None = None,
                   tier_chunk: int | None = None,
+                  metric: str | None = None, fp_bits: int | None = None,
                   metrics_out: str | None = None,
                   trace_out: str | None = None,
                   log=print):
@@ -241,8 +266,10 @@ def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
     if trace_out:
         TRACER.clear()
         TRACER.configure(enabled=True)
-    db = synthetic_fingerprints(SyntheticConfig(n=n_db))
-    pool = synthetic_fingerprints(SyntheticConfig(n=max(n_ops, 64), seed=7))
+    length = int(fp_bits) if fp_bits else 1024
+    db = synthetic_fingerprints(SyntheticConfig(n=n_db, length=length))
+    pool = synthetic_fingerprints(
+        SyntheticConfig(n=max(n_ops, 64), length=length, seed=7))
     queries = queries_from_db(db, min(n_db, 512))
     if resume:
         if durable_dir is None:
@@ -251,10 +278,20 @@ def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
         # an absent --backend must keep the backend the snapshot was
         # served with, not reset it to the default
         svc = SearchService.open(
-            durable_dir, **({"backend": backend} if backend else {}))
+            durable_dir, **({"backend": backend} if backend else {}),
+            **({"metric": metric} if metric else {}))
         log(f"[search-serve] resumed from {durable_dir}: "
             f"{next(iter(svc.engines.values())).n_total} rows, "
             f"engines={','.join(svc.engines)}")
+        if svc.words * 32 != length:
+            # the snapshot decides the width on resume — regenerate the
+            # driver's insert pool + query set at the restored width
+            length = svc.words * 32
+            db = synthetic_fingerprints(SyntheticConfig(n=n_db,
+                                                        length=length))
+            pool = synthetic_fingerprints(
+                SyntheticConfig(n=max(n_ops, 64), length=length, seed=7))
+            queries = queries_from_db(db, min(n_db, 512))
     else:
         svc = SearchService(db, engines=engines, backend=backend, k=k,
                             cutoff=CHEMBL_LIKE.cutoff,
@@ -263,7 +300,8 @@ def serve_service(engines=("brute", "bitbound-folding"), n_db: int = 20_000,
                             hnsw_layout=hnsw_layout, hnsw_shards=hnsw_shards,
                             durable_dir=durable_dir, residency=residency,
                             tier_chunk_rows=tier_chunk_rows,
-                            tier_chunk=tier_chunk)
+                            tier_chunk=tier_chunk,
+                            metric=metric or "tanimoto", fp_bits=fp_bits)
     ops = make_workload(n_ops, write_ratio, pool, queries)
     enames = list(svc.engines)
     since_flush = 0
@@ -367,6 +405,14 @@ def main():
                     help="service mode: serve through the concurrent front "
                          "end (SearchFrontend) with N read replicas instead "
                          "of the bare synchronous service")
+    ap.add_argument("--metric", default=None,
+                    help="similarity metric: tanimoto (default), dice, "
+                         "cosine, or tversky(a,b) — engines score, prune "
+                         "and build graphs under it; on --resume it must "
+                         "match the snapshot's metric")
+    ap.add_argument("--fp-bits", type=int, default=None,
+                    help="fingerprint width in bits (multiple of 32; "
+                         "default 1024) for the synthetic DB and engines")
     ap.add_argument("--metrics-out", default=None,
                     help="service mode: export the metrics registry as JSONL "
                          "here (a Prometheus text twin lands at <path>.prom)")
@@ -383,6 +429,7 @@ def main():
                        durable_dir=args.durable_dir,
                        snapshot_every=args.snapshot_every,
                        resume=args.resume,
+                       metric=args.metric, fp_bits=args.fp_bits,
                        metrics_out=args.metrics_out,
                        trace_out=args.trace_out)
     elif args.engine == "service":
@@ -396,13 +443,15 @@ def main():
                       resume=args.resume, residency=args.residency,
                       tier_chunk_rows=args.tier_chunk_rows,
                       tier_chunk=args.tier_chunk,
+                      metric=args.metric, fp_bits=args.fp_bits,
                       metrics_out=args.metrics_out,
                       trace_out=args.trace_out)
     else:
         serve(args.engine, n_db=args.n_db, k=args.k,
               n_queries=args.n_queries, use_kernel=args.use_kernel,
               backend=args.backend, hnsw_layout=args.hnsw_layout,
-              hnsw_shards=args.shards, residency=args.residency)
+              hnsw_shards=args.shards, residency=args.residency,
+              metric=args.metric, fp_bits=args.fp_bits)
 
 
 if __name__ == "__main__":

@@ -53,6 +53,7 @@ from ..checkpoint import manager as ckpt
 from ..checkpoint.fs import DEFAULT_FS, Fs
 from ..core.engine import (BitBoundFoldingEngine, BruteForceEngine,
                            HNSWEngine)
+from ..core.fingerprints import resolve_metric
 from ..obs.metrics import MetricsRegistry, NULL_METRICS
 from ..obs.trace import TRACER as _TR
 from . import snapshot as snap
@@ -75,6 +76,11 @@ class _Request:
 class ServiceConfig:
     """Engine-construction knobs shared by the service entry points."""
     backend: str | None = None
+    metric: str = "tanimoto"     # similarity spec: "tanimoto" | "dice" |
+    #   "cosine" | "tversky(a,b)" — every engine scores, prunes and builds
+    #   graphs under this metric (core/fingerprints.Metric)
+    fp_bits: int | None = None   # fingerprint width in bits; None = infer
+    #   from the database rows (words * 32)
     k: int = 10
     max_batch: int = 256
     compact_threshold: int = 4096
@@ -210,7 +216,8 @@ class SearchService:
             # brute has no host reference path; map "numpy" to the jnp path
             be = cfg.backend if cfg.backend in ("jnp", "tpu") else None
             kw = dict(backend=be, compact_threshold=cfg.compact_threshold,
-                      residency=cfg.residency)
+                      residency=cfg.residency, metric=cfg.metric,
+                      fp_bits=cfg.fp_bits)
             if cfg.tier_chunk_rows is not None:
                 kw["tier_chunk_rows"] = cfg.tier_chunk_rows
             return kw
@@ -218,7 +225,8 @@ class SearchService:
             kw = dict(cutoff=cfg.cutoff, m=cfg.fold_m,
                       scheme=cfg.fold_scheme, backend=cfg.backend,
                       compact_threshold=cfg.compact_threshold,
-                      residency=cfg.residency)
+                      residency=cfg.residency, metric=cfg.metric,
+                      fp_bits=cfg.fp_bits)
             if cfg.tier_chunk is not None:
                 kw["tier_chunk"] = cfg.tier_chunk
             return kw
@@ -227,7 +235,8 @@ class SearchService:
                         ef_construction=cfg.hnsw_ef_construction,
                         ef_search=cfg.hnsw_ef_search, seed=cfg.seed,
                         backend=cfg.backend, layout=cfg.hnsw_layout,
-                        shards=cfg.hnsw_shards)
+                        shards=cfg.hnsw_shards, metric=cfg.metric,
+                        fp_bits=cfg.fp_bits)
         raise ValueError(
             f"unknown engine {name!r}; expected one of {ENGINE_NAMES}")
 
@@ -523,6 +532,14 @@ class SearchService:
         read replica is exactly a service built this way plus a replayed
         WAL tail it does not own."""
         cfg = ServiceConfig(**{**meta["config"], **overrides})
+        snap_metric = resolve_metric(meta["config"].get("metric", "tanimoto"))
+        want_metric = resolve_metric(cfg.metric)
+        if want_metric.spec != snap_metric.spec:
+            raise ValueError(
+                f"snapshot was taken under metric {snap_metric.spec!r}; "
+                f"refusing to serve it as {want_metric.spec!r} — scores, "
+                f"BitBound windows and HNSW graphs are metric-specific; "
+                f"rebuild the index under the new metric instead")
         svc = cls.__new__(cls)
         svc.config = cfg
         svc.clock = clock

@@ -34,6 +34,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..core import hnsw as hn
+from ..core.fingerprints import TANIMOTO, resolve_metric
 from ..obs.trace import TRACER as _TR
 from ..core.engine import (BitBoundFoldingEngine, BruteForceEngine,
                            HNSWEngine)
@@ -67,6 +68,7 @@ def store_state(store: MutableFingerprintStore):
         "delta_version": int(store.delta_version),
         "compactions": int(store.compactions),
         "residency": getattr(store, "residency", "device"),
+        "words": int(store.words),
     }
     return arrays, meta
 
@@ -79,8 +81,13 @@ def store_from_state(arrays, meta) -> MutableFingerprintStore:
     kind = (TieredFingerprintStore
             if meta.get("residency", "device") == "tiered"
             else MutableFingerprintStore)
+    rows = np.asarray(arrays["main_rows"], dtype=np.uint32)
+    if "words" in meta and rows.shape[1] != int(meta["words"]):
+        raise ValueError(
+            f"snapshot rows are {rows.shape[1]} words wide but meta "
+            f"records {meta['words']} — refusing a width-mismatched restore")
     st = kind(
-        arrays["main_rows"], sorted_main=meta["sorted_main"],
+        rows, sorted_main=meta["sorted_main"],
         fold_m=meta["fold_m"], fold_scheme=meta["fold_scheme"],
         compact_threshold=meta["compact_threshold"])
     delta = np.asarray(arrays["delta_db"], dtype=np.uint32)
@@ -121,6 +128,7 @@ def hnsw_index_state(index: hn.HNSWIndex):
         "dirty_epoch": int(index.dirty_epoch),
         "upper_version": int(index.upper_version),
         "rng_state": rng_state,
+        "metric": getattr(index, "metric", TANIMOTO).spec,
     }
     return arrays, meta
 
@@ -139,7 +147,8 @@ def hnsw_index_from_state(arrays, meta) -> hn.HNSWIndex:
         base_adj=np.ascontiguousarray(arrays["base_adj"], dtype=np.int32),
         level_nodes=level_nodes, level_adj=level_adj,
         level_of=np.ascontiguousarray(arrays["level_of"], dtype=np.int8),
-        seed=meta["seed"], max_level_cap=meta["max_level_cap"])
+        seed=meta["seed"], max_level_cap=meta["max_level_cap"],
+        metric=resolve_metric(meta.get("metric", "tanimoto")))
     index.dirty_epoch = meta["dirty_epoch"]
     index.upper_version = meta["upper_version"]
     if meta.get("rng_state") is not None:
@@ -225,6 +234,8 @@ def service_state(svc):
         "default_engine": svc.default_engine,
         "engine_state": engines_meta,
         "n_total": int(next(iter(svc.engines.values())).n_total),
+        "metric": resolve_metric(cfg.get("metric", "tanimoto")).spec,
+        "fp_bits": int(cfg.get("fp_bits") or svc.words * 32),
     }
     return arrays, meta
 

@@ -150,8 +150,9 @@ class MutableFingerprintStore:
         order_p = np.full((capacity,), -1, dtype=np.int64)
         order_p[:n] = order
         if self.fold_m > 1:
-            folded = np.zeros((capacity, self.words // self.fold_m),
-                              dtype=np.uint32)
+            folded = np.zeros(
+                (capacity, fl.folded_words(self.words, self.fold_m)),
+                dtype=np.uint32)
             folded[:n] = fl.fold(db[:n], self.fold_m, self.fold_scheme)
         else:
             folded = db
@@ -161,7 +162,8 @@ class MutableFingerprintStore:
                            folded_counts=folded_counts, n=n, capacity=capacity)
 
     def _reset_delta(self) -> None:
-        wf = self.words // self.fold_m if self.fold_m > 1 else self.words
+        wf = (fl.folded_words(self.words, self.fold_m)
+              if self.fold_m > 1 else self.words)
         self.delta_db = np.zeros((0, self.words), dtype=np.uint32)
         self.delta_counts = np.zeros((0,), dtype=np.int64)
         self.delta_folded = np.zeros((0, wf), dtype=np.uint32)
@@ -285,7 +287,7 @@ class TieredFingerprintStore(MutableFingerprintStore):
                       dtype=np.int64)
         order_p = np.full((capacity,), -1, dtype=np.int64)
         order_p[:n] = order
-        wf = self.words // self.fold_m
+        wf = fl.folded_words(self.words, self.fold_m)
         folded = (np.zeros((capacity, wf), dtype=np.uint32)
                   if self.fold_m > 1 else db)
         folded_counts = np.zeros((capacity,), dtype=np.int64)

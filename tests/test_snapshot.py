@@ -270,6 +270,40 @@ def test_background_snapshot_error_surfaces_at_join(tmp_path):
     svc.close()                               # error already consumed
 
 
+def test_snapshot_carries_metric_and_refuses_mismatch(tmp_path):
+    """Snapshot meta records the similarity metric and fingerprint width;
+    a reopen inherits them, and a reopen *overriding* the metric must be
+    refused — scores, BitBound windows and HNSW graphs are metric-specific.
+    """
+    from repro.core.fingerprints import resolve_metric
+
+    svc = SearchService(BASE, engines=("brute", "bitbound-folding", "hnsw"),
+                        durable_dir=str(tmp_path), metric="dice",
+                        fp_bits=1024, hnsw_m=4, hnsw_ef_construction=12,
+                        hnsw_ef_search=16)
+    svc.insert(EXTRA[:8])
+    svc.snapshot()
+    live = svc.search(QUERIES, 8, engine="bitbound-folding")
+    svc.close()
+
+    meta = load_latest_intact(str(tmp_path / "snapshots"))[2]
+    assert resolve_metric(meta["config"]["metric"]).name == "dice"
+    assert int(meta["config"]["fp_bits"]) == 1024
+
+    svc2 = SearchService.open(tmp_path)        # inherits dice from the meta
+    assert resolve_metric(svc2.config.metric).name == "dice"
+    got = svc2.search(QUERIES, 8, engine="bitbound-folding")
+    np.testing.assert_array_equal(np.asarray(live[0]), np.asarray(got[0]))
+    np.testing.assert_array_equal(np.asarray(live[1]), np.asarray(got[1]))
+    svc2.close()
+
+    with pytest.raises(ValueError, match="metric"):
+        SearchService.open(tmp_path, metric="cosine")
+    # explicitly restating the persisted metric is fine
+    svc3 = SearchService.open(tmp_path, metric="dice")
+    svc3.close()
+
+
 def test_hnsw_extraction_never_aliases_live_arrays():
     """COW contract behind background snapshots: extracted arrays must be
     private copies, never views of the live (still-mutating) state."""
